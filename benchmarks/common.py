@@ -1,0 +1,33 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    """(result, us_per_call) — median of ``repeat`` runs."""
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6
+
+
+def emit(rows: list[dict], name: str):
+    """Print a labelled CSV block (consumed by benchmarks.run + EXPERIMENTS)."""
+    if not rows:
+        print(f"# {name}: no rows")
+        return
+    cols = list(rows[0].keys())
+    print(f"# --- {name} ---")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r[c]) for c in cols))
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

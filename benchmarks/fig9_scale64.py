@@ -1,0 +1,39 @@
+"""Fig. 9: end-to-end latency + energy, 64-chiplet system, BERT-Large and
+BART-Large over sequence lengths.  Validates gain-grows-with-N."""
+from repro.config import get_config
+from repro.core.baselines import simulate_haima_chiplet, simulate_transpim_chiplet
+from repro.core.simulator import simulate_2p5d_hi
+from repro.core.traffic import Workload
+
+from benchmarks.common import emit
+
+
+def run(verbose: bool = True) -> list[dict]:
+    rows = []
+    for arch in ("bert-large", "bart-large"):
+        for n in (64, 256, 1024, 4096):
+            w = Workload.from_config(get_config(arch), seq_len=n)
+            hi = simulate_2p5d_hi(w, 64)
+            ha = simulate_haima_chiplet(w, 64)
+            tp = simulate_transpim_chiplet(w, 64)
+            rows.append({
+                "arch": arch, "seq_len": n,
+                "hi_ms": hi.latency_s * 1e3,
+                "haima_gain_x": ha.latency_s / hi.latency_s,
+                "transpim_gain_x": tp.latency_s / hi.latency_s,
+                "haima_egain_x": ha.energy_j / hi.energy_j,
+                "transpim_egain_x": tp.energy_j / hi.energy_j,
+            })
+    if verbose:
+        emit(rows, "fig9: 64-chiplet scaling (BERT-Large / BART-Large)")
+    for arch in ("bert-large", "bart-large"):
+        sub = [r for r in rows if r["arch"] == arch]
+        assert sub[-1]["transpim_gain_x"] > sub[0]["transpim_gain_x"], \
+            "gain must grow with N (paper: 4.6x -> 5.45x)"
+        assert all(r["haima_gain_x"] > 1 and r["transpim_gain_x"] > 1
+                   for r in sub)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

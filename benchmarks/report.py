@@ -1,0 +1,104 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+"""
+import glob
+import json
+import os
+
+from repro.config import ASSIGNED_ARCHS, SHAPES
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load():
+    recs = {}
+    for f in glob.glob(os.path.join(DRYRUN, "*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(recs) -> str:
+    out = ["| arch | shape | mesh | status | compile_s | live GiB (TPU-true) | fits | HLO GFLOP/dev | wire GiB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                r = recs.get((arch, shape, mesh))
+                if r is None:
+                    out.append(f"| {arch} | {shape} | {mesh} | MISSING | | | | | |")
+                    continue
+                if r["status"] == "skipped":
+                    out.append(f"| {arch} | {shape} | {mesh} | skip: "
+                               f"{r['reason'][:60]}… | | | | | |")
+                    continue
+                m, rl = r["memory"], r["roofline"]
+                live = m.get("live_bytes_tpu", m["live_bytes"])
+                out.append(
+                    f"| {arch} | {shape} | {mesh} | ok | {r['t_compile_s']} | "
+                    f"{fmt_bytes(live)} | {'✓' if m['fits_v5e'] else '✗'} | "
+                    f"{rl['hlo_flops_per_dev']/1e9:.0f} | "
+                    f"{rl['wire_bytes_per_dev']/2**30:.2f} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs) -> str:
+    out = ["| arch | shape | compute_s | memory_s | collective_s | bound | "
+           "step_s | roofline_frac | useful_ratio | what moves the bound |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    hints = {
+        "compute": "more chips / lower-precision matmuls",
+        "memory": "flash-attention kernel keeps score tensors in VMEM; "
+                  "int8 weights (pim_mvm) halve weight streaming",
+        "collective": "replicate GQA KV heads instead of seq-sharding "
+                      "(kills per-layer KV all-gathers); overlap via "
+                      "collective matmul",
+    }
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            r = recs.get((arch, shape, "single"))
+            if r is None or r["status"] != "ok":
+                continue
+            rl = r["roofline"]
+            out.append(
+                f"| {arch} | {shape} | {rl['compute_s']:.3e} | "
+                f"{rl['memory_s']:.3e} | {rl['collective_s']:.3e} | "
+                f"{rl['bottleneck']} | {rl['step_s']:.3e} | "
+                f"{rl['roofline_frac']:.3f} | {rl['useful_ratio']:.2f} | "
+                f"{hints[rl['bottleneck']]} |")
+    return "\n".join(out)
+
+
+def summary(recs) -> str:
+    ok = [r for r in recs.values() if r["status"] == "ok"]
+    skip = [r for r in recs.values() if r["status"] == "skipped"]
+    fit = [r for r in ok if r["memory"]["fits_v5e"]]
+    worst = sorted(ok, key=lambda r: r["roofline"]["roofline_frac"])[:5]
+    lines = [
+        f"- cells: {len(ok)} ok + {len(skip)} documented skips "
+        f"= {len(ok)+len(skip)} / 80",
+        f"- fits 16 GiB v5e HBM (TPU-true liveness): {len(fit)}/{len(ok)}",
+        "- worst roofline fractions (hillclimb candidates): "
+        + ", ".join(f"{r['arch']}/{r['shape']}/{r['mesh']}"
+                    f"({r['roofline']['roofline_frac']:.2f})" for r in worst),
+    ]
+    return "\n".join(lines)
+
+
+def main():
+    recs = load()
+    print("### Dry-run matrix (40 cells × 2 meshes)\n")
+    print(summary(recs) + "\n")
+    print(dryrun_table(recs) + "\n")
+    print("### Roofline (single-pod, per §Roofline)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig8 fig10 # subset
+"""
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig4", "benchmarks.fig4_pareto"),
+    ("fig8", "benchmarks.fig8_kernels"),
+    ("fig9", "benchmarks.fig9_scale64"),
+    ("fig10", "benchmarks.fig10_scale100"),
+    ("table4", "benchmarks.table4_absolute"),
+    ("fig11", "benchmarks.fig11_thermal"),
+    ("sec44", "benchmarks.sec44_endurance"),
+    ("kernels", "benchmarks.kernel_micro"),
+]
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    failed = []
+    for key, modname in MODULES:
+        if want and key not in want:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            mod.run(verbose=True)
+            print(f"# {key}: PASS ({time.time() - t0:.1f}s)\n", flush=True)
+        except Exception:
+            failed.append(key)
+            print(f"# {key}: FAIL\n{traceback.format_exc()}", flush=True)
+    if failed:
+        raise SystemExit(f"failed: {failed}")
+    print("# all benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""§4.4: ReTransformer (ReRAM-only) write-endurance analysis — why the
+dynamic kernels must NOT live on NVM crossbars."""
+from repro.config import get_config
+from repro.core.baselines import retransformer_endurance
+from repro.core.chiplets import RERAM
+from repro.core.traffic import Workload
+
+from benchmarks.common import emit
+
+
+def run(verbose: bool = True) -> list[dict]:
+    rows = []
+    for arch, n in (("bert-base", 64), ("bert-base", 4096),
+                    ("bert-large", 4096), ("llama2-7b", 4096)):
+        w = Workload.from_config(get_config(arch), seq_len=n)
+        rep = retransformer_endurance(w)
+        rows.append({
+            "arch": arch, "seq_len": n,
+            "writes_per_cell_per_token": rep.writes_per_cell_per_token,
+            "writes_per_encoder": rep.writes_per_encoder,
+            "endurance_bound": RERAM.write_endurance,
+            "feasible": rep.feasible,
+            "days_to_failure_at_1khz": rep.days_to_failure_at_1khz,
+        })
+    if verbose:
+        emit(rows, "sec4.4: ReRAM-only endurance")
+    long_rows = [r for r in rows if r["seq_len"] == 4096]
+    assert all(not r["feasible"] for r in long_rows)
+    assert all(r["writes_per_encoder"] > 1e9 for r in long_rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Table 4: absolute execution times (ms) — the calibration anchors plus
+the full cross table.  Reports residuals explicitly."""
+from repro.config import get_config
+from repro.core.baselines import simulate_haima_chiplet, simulate_transpim_chiplet
+from repro.core.simulator import ANCHORS, simulate_2p5d_hi
+from repro.core.traffic import Workload
+
+from benchmarks.common import emit
+
+PAPER = {  # (system, arch) -> paper ms
+    ("2.5D-HI", "bert-base"): 50.0, ("2.5D-HI", "gpt-j"): 143.0,
+    ("HAIMA_chiplet", "bert-base"): 340.0, ("HAIMA_chiplet", "gpt-j"): 975.0,
+    ("TransPIM_chiplet", "bert-base"): 210.0,
+    ("TransPIM_chiplet", "gpt-j"): 1435.0,
+}
+CHIPS = {"bert-base": 36, "gpt-j": 100}
+
+
+def run(verbose: bool = True) -> list[dict]:
+    sims = {"2.5D-HI": simulate_2p5d_hi,
+            "HAIMA_chiplet": simulate_haima_chiplet,
+            "TransPIM_chiplet": simulate_transpim_chiplet}
+    rows = []
+    for arch in ("bert-base", "gpt-j"):
+        w = Workload.from_config(get_config(arch), seq_len=64)
+        for name, fn in sims.items():
+            got = fn(w, CHIPS[arch]).latency_s * 1e3
+            want = PAPER[(name, arch)]
+            rows.append({"system": name, "arch": arch,
+                         "chiplets": CHIPS[arch], "ours_ms": got,
+                         "paper_ms": want, "residual_pct": 100 * (got / want - 1)})
+    if verbose:
+        emit(rows, "table4: absolute execution time (n=64)")
+    for r in rows:
+        assert abs(r["residual_pct"]) < 16, r
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""End-to-end training driver: train a ~100M-param LM for a few hundred
+steps on CPU with the full production stack — sharded data pipeline,
+AdamW, checkpointing (resume works mid-run), preemption handling, and the
+straggler watchdog.  Loss must visibly descend on the structured synthetic
+corpus.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
+      (~100M params; use --tiny for a fast smoke run)
+"""
+import argparse
+
+import jax
+
+from repro.config import ShapeSpec, get_config, reduce_config
+from repro.launch.mesh import small_mesh
+from repro.training.optimizer import OptConfig
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced config (fast CPU smoke)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    if args.tiny:
+        cfg = reduce_config(get_config("qwen2.5-3b"))
+    else:
+        # mamba2-130m: the one assigned architecture that genuinely is
+        # ~100M params — train it for real
+        cfg = get_config("mamba2-130m")
+    shape = ShapeSpec("train_lm", "train", args.seq, args.batch)
+    mesh = small_mesh(1, 1)
+
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"batch={args.batch} seq={args.seq} steps={args.steps}")
+
+    trainer = Trainer(
+        cfg, shape, mesh,
+        opt_cfg=OptConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps),
+        tcfg=TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=50),
+    )
+    if trainer.step:
+        print(f"resumed from checkpoint at step {trainer.step}")
+
+    first = None
+    for m in trainer.run(args.steps - trainer.step):
+        if first is None:
+            first = m["loss"]
+        if m["step"] % 10 == 0:
+            print(f"step {m['step']:4d}  loss {m['loss']:.4f}  "
+                  f"gnorm {m['gnorm']:.2f}  lr {m['lr']:.2e}  "
+                  f"{m['dt']*1e3:6.0f} ms/step", flush=True)
+    trainer.save()
+    last = trainer.metrics_log[-1]["loss"]
+    print(f"done: loss {first:.4f} -> {last:.4f} "
+          f"({trainer.slow_steps} slow steps, checkpoint at {args.ckpt_dir})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Architecture registry — importing this package registers every config.
+
+Each module holds exactly one public ``CONFIG`` (or several for the paper's
+own workload table) built from the published numbers cited in DESIGN.md.
+"""
+from repro.configs import (  # noqa: F401
+    qwen3_moe_30b_a3b,
+    deepseek_v2_236b,
+    recurrentgemma_9b,
+    whisper_large_v3,
+    qwen2_5_3b,
+    gemma3_27b,
+    gemma2_9b,
+    minitron_8b,
+    mamba2_130m,
+    llama3_2_vision_90b,
+    paper_models,
+)

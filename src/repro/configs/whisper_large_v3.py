@@ -1,0 +1,34 @@
+"""Whisper-large-v3 backbone — encoder-decoder, conv frontend stubbed.
+[arXiv:2212.04356; unverified]
+
+Per the assignment the modality frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings of shape (batch, frames, d_model);
+the conv1d downsampler is not part of the runnable graph.
+"""
+from repro.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,            # decoder layers
+    n_encoder_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51_866,
+    cross_attn_decoder=True,
+    frontend="audio_stub",
+    n_frontend_tokens=1500,   # encoder length for decode-time cross caches
+    use_rope=False,
+    max_abs_positions=65_536,   # sinusoidal table sized for assigned shapes
+    norm="layernorm",
+    act="gelu",
+    glu=False,
+    qkv_bias=True,
+    mlp_bias=True,
+    tie_embeddings=True,
+    source="arXiv:2212.04356",
+    notes="enc-dec; long_500k skipped (decoder ctx 448 undefined at 524k)",
+))

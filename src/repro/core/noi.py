@@ -1,0 +1,133 @@
+"""NoI evaluation: routing, link utilisation u_k, μ(λ), σ(λ) (eqs 11-15).
+
+Routing is shortest-path (BFS) over the candidate link graph — the paper's
+NoI routers are a hierarchical wormhole fabric; at the utilisation-
+objective level only the path→link incidence q_ijk matters (eq. 11).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from repro.core.chiplets import LINK
+from repro.core.placement import Placement
+from repro.core.traffic import Phase, phase_traffic_matrix
+
+
+def _paths(p: Placement) -> dict:
+    """All-pairs BFS parents: returns hop-path cache {src: parents array}."""
+    adj: dict[int, list[int]] = {i: [] for i in range(p.n)}
+    for a, b in p.links:
+        adj[a].append(b)
+        adj[b].append(a)
+    out = {}
+    for s in range(p.n):
+        par = np.full(p.n, -1, np.int32)
+        par[s] = s
+        q = deque([s])
+        while q:
+            u = q.popleft()
+            for v in adj[u]:
+                if par[v] < 0:
+                    par[v] = u
+                    q.append(v)
+        out[s] = par
+    return out
+
+
+@dataclasses.dataclass
+class NoIEval:
+    mu: float                 # eq. 14 (time-avg of eq. 12)
+    sigma: float              # eq. 15 (time-avg of eq. 13)
+    max_util: float
+    total_byte_hops: float
+    mean_hops: float
+    per_phase_link_bytes: list
+
+
+def evaluate_noi(p: Placement, phases: list[Phase],
+                 roles_override: dict | None = None) -> NoIEval:
+    if not p.connected():
+        return NoIEval(np.inf, np.inf, np.inf, np.inf, np.inf, [])
+    parents = _paths(p)
+    links = sorted(p.links)
+    link_idx = {l: i for i, l in enumerate(links)}
+    roles = roles_override if roles_override is not None else p.roles()
+
+    mus, sigmas, weights, per_phase = [], [], [], []
+    total_byte_hops = 0.0
+    total_hops = 0
+    n_flows = 0
+    max_util = 0.0
+
+    for ph in phases:
+        F = phase_traffic_matrix(ph, roles, p.n)
+        # u = per-link bytes for ONE execution of the phase (one timestamp
+        # of eq. 12/13).  Repeats weight the time-average (eqs 14-15) — a
+        # phase that runs k times contributes k identical timestamps — and
+        # scale the energy byte-hops, but NOT the per-execution link time.
+        u = np.zeros(len(links))
+        for (i, j), bytes_ in F.items():
+            par = parents[i]
+            if par[j] < 0:
+                return NoIEval(np.inf, np.inf, np.inf, np.inf, np.inf, [])
+            # walk j -> i collecting links (q_ijk in eq. 11)
+            cur = j
+            hops = 0
+            while cur != i:
+                prev = int(par[cur])
+                u[link_idx[(min(cur, prev), max(cur, prev))]] += bytes_
+                cur = prev
+                hops += 1
+            total_byte_hops += bytes_ * hops * ph.repeat
+            total_hops += hops
+            n_flows += 1
+        mus.append(float(u.mean()))
+        sigmas.append(float(u.std()))
+        weights.append(float(ph.repeat))
+        max_util = max(max_util, float(u.max()) if len(u) else 0.0)
+        per_phase.append(u)
+
+    wsum = sum(weights) or 1.0
+    return NoIEval(
+        mu=float(np.dot(mus, weights) / wsum),
+        sigma=float(np.dot(sigmas, weights) / wsum),
+        max_util=max_util, total_byte_hops=total_byte_hops,
+        mean_hops=total_hops / max(n_flows, 1),
+        per_phase_link_bytes=per_phase)
+
+
+def noi_phase_time(link_bytes: np.ndarray, repeat: int = 1) -> float:
+    """Serialisation time of a phase on the NoI: the busiest link bounds
+    throughput (wormhole, all flows concurrent)."""
+    if len(link_bytes) == 0:
+        return 0.0
+    return float(link_bytes.max()) / LINK.bw
+
+
+def noi_energy(eval_: NoIEval) -> float:
+    """Link + router traversal energy for the whole workload (J)."""
+    pj_per_bit = LINK.energy_pj_per_bit + LINK.router_pj_per_bit
+    return eval_.total_byte_hops * 8 * pj_per_bit * 1e-12
+
+
+def mesh_baseline_eval(n_chiplets: int, phases, n_samples: int = 5) -> NoIEval:
+    """Reference 2-D mesh NoI (paper Fig-4 normaliser): full mesh links with
+    *placement-unaware* (shuffled) chiplet assignment, averaged over a few
+    draws — the "standard multi-hop regular topology" the paper argues
+    against (§3.2)."""
+    import random
+
+    from repro.core.placement import random_placement
+
+    evs = [evaluate_noi(random_placement(n_chiplets, random.Random(s)), phases)
+           for s in range(n_samples)]
+    mu = float(np.mean([e.mu for e in evs]))
+    sigma = float(np.mean([e.sigma for e in evs]))
+    return NoIEval(mu=mu, sigma=sigma,
+                   max_util=float(np.mean([e.max_util for e in evs])),
+                   total_byte_hops=float(np.mean([e.total_byte_hops for e in evs])),
+                   mean_hops=float(np.mean([e.mean_hops for e in evs])),
+                   per_phase_link_bytes=[])

@@ -1,0 +1,300 @@
+"""Analytical latency/energy/EDP simulator for the chiplet architectures (§4).
+
+Execution model (2.5D-HI, §4.2): attention phases run on the SM cluster fed
+by MC/DRAM; feed-forward runs on the ReRAM macro; MHA of layer l overlaps
+FF of layer l-1 ("the SMs efficiently accelerate MHA computation, and the
+ReRAM layer computes the FF layer in parallel"); GPT-J's parallel
+formulation (eq. 9) overlaps them within one layer.  Phase times are
+max(compute, DRAM streaming, busiest-NoI-link serialisation); energies are
+unit busy-power × time + byte-hop NoI energy + DRAM access energy.
+
+Calibration: exactly two scalars for 2.5D-HI (sm_efficiency, reram_fill)
+fitted to its two Table-4 anchors (BERT-Base/36 = 50 ms, GPT-J/100 =
+143 ms), and two scalars per baseline (throughput eff + bank-parallelism
+scale exponent) fitted to that baseline's own Table-4 row (340/975 ms
+HAIMA, 210/1435 ms TransPIM); every other figure must *emerge*.  Fitted
+values and residuals are reported in EXPERIMENTS.md §Paper-validation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core import chiplets as C
+from repro.core.noi import NoIEval, evaluate_noi, noi_energy, noi_phase_time
+from repro.core.placement import Placement, initial_placement
+from repro.core.traffic import Phase, Workload, transformer_phases
+
+
+@dataclasses.dataclass
+class SimResult:
+    arch: str
+    workload: str
+    n_chiplets: int
+    seq_len: int
+    latency_s: float
+    energy_j: float
+    per_kernel_s: dict
+    noi: Optional[NoIEval] = None
+
+    @property
+    def edp(self) -> float:
+        return self.latency_s * self.energy_j
+
+
+@dataclasses.dataclass
+class Calib:
+    # Fitted by calibrate() to the Table-4 anchors (python -m repro.core.simulator);
+    # residuals reported in EXPERIMENTS.md §Paper-validation.
+    sm_efficiency: float = 0.011923    # fitted: 2.5D-HI anchors (50ms/143ms)
+    reram_fill: float = 0.00029342     # fitted: 2.5D-HI anchors
+    haima_eff: float = 0.0048701      # fitted to HAIMA_chiplet GPT-J anchor
+    transpim_eff: float = 0.0045998   # fitted to TransPIM_chiplet GPT-J anchor
+    # bank-parallelism scale exponents (dim-util curve shape), fitted to the
+    # Table-4 GPT-J/100-chiplet row (975 ms / 1435 ms)
+    haima_scale_exp: float = 1.2838
+    transpim_scale_exp: float = 0.7141
+    # originals: thermally-capped fraction of banks concurrently active
+    orig_bank_cap: float = 0.25        # 4-of-16 banks (§4.3 thermal argument)
+
+
+CALIB = Calib()
+
+
+def _alloc(n_chiplets: int) -> dict:
+    return dict(C.SYSTEM_ALLOC[n_chiplets])
+
+
+def _phase_noi_times(placement: Placement, phases: list[Phase]) -> tuple[list[float], NoIEval]:
+    ev = evaluate_noi(placement, phases)
+    times = []
+    for u in ev.per_phase_link_bytes:
+        times.append(noi_phase_time(u))
+    if not times:
+        times = [0.0] * len(phases)
+    return times, ev
+
+
+def _energy(phases, times_by_phase, alloc, noi_ev, busy: dict) -> float:
+    """busy: phase-name -> set of busy unit types."""
+    e = 0.0
+    total_t = sum(times_by_phase.values())
+    unit_power = {
+        "SM": alloc.get("SM", 0) * C.SM.power_w,
+        "MC": alloc.get("MC", 0) * C.MC.power_w,
+        "ReRAM": alloc.get("ReRAM", 0) * C.RERAM.power_w,
+        "SRAM": alloc.get("SRAM", 0) * 1.2,
+        "ACU": alloc.get("ACU", 0) * 0.9,
+        "HOST": alloc.get("HOST", 0) * 6.0,
+        # DRAM-PIM chiplet actively computing (Aquabolt-XL-class in-bank
+        # logic [26]) — distinct from the idle/background term below.
+        "DRAM": alloc.get("DRAM", 0) * 1.3,
+    }
+    for ph in phases:
+        t = times_by_phase.get(ph.name, 0.0) * ph.repeat
+        for unit in busy.get(ph.name, ()):  # busy power
+            e += unit_power.get(unit, 0.0) * t
+        e += (ph.dram_bytes * ph.repeat) * 8 * C.DRAM.energy_pj_per_bit * 1e-12
+    e += alloc.get("DRAM", 0) * C.DRAM.idle_power_w * total_t  # DRAM background
+    if noi_ev is not None:
+        e += noi_energy(noi_ev)
+    return e
+
+
+# ---------------------------------------------------------------------------
+# 2.5D-HI
+# ---------------------------------------------------------------------------
+
+def simulate_2p5d_hi(w: Workload, n_chiplets: int, *,
+                     placement: Optional[Placement] = None,
+                     calib: Calib = CALIB) -> SimResult:
+    alloc = _alloc(n_chiplets)
+    placement = placement or initial_placement(n_chiplets)
+    phases = transformer_phases(w)
+    by_name = {p.name: p for p in phases}
+    noi_t, ev = _phase_noi_times(placement, phases)
+    noi_by = {p.name: t for p, t in zip(phases, noi_t)}
+
+    dram_bw = alloc["DRAM"] * C.DRAM.bw
+
+    # Dimensional utilisation (structural, NOT fitted): achieved fraction of
+    # peak grows ~linearly with the stationary operand dimension until the
+    # pipeline saturates — fill/drain overhead of the tensor-core pipeline
+    # (SM) and of crossbar column groups (ReRAM) is amortised over the
+    # contracted dim.  Saturation points: 4096 (SM, Volta pipeline depth ×
+    # MMA tile) and 16384 (ReRAM, 128 crossbar columns × 128-wide tiles).
+    # The paper's own Table-4 anchors imply this (~1% util @ d=768 vs ~4%
+    # @ d=4096); the two calib scalars set the *level*, this sets the shape.
+    def sm_rate(dim):
+        return (alloc["SM"] * C.SM.peak_flops * calib.sm_efficiency
+                * min(1.0, dim / C.SM_SAT_DIM))
+
+    def rer_rate(dim):
+        # Weight duplication (§4.1.1) keeps the macro full regardless of
+        # the stationary matrix's width: copies of the weights are
+        # parallelised across idle crossbars ("prevents any
+        # underutilization of ReRAM chiplets"), so — unlike the SM plane —
+        # ReRAM throughput is dim-independent; ``reram_fill`` captures the
+        # pipeline fill/drain share alone.
+        del dim
+        return alloc["ReRAM"] * C.RERAM.peak_flops * calib.reram_fill
+
+    def t_attn(name, dim=w.d_model):
+        p = by_name[name]
+        return max(p.sm_flops / sm_rate(dim),
+                   p.dram_bytes / dram_bw,
+                   noi_by[name])
+
+    def t_reram(name, dim):
+        p = by_name[name]
+        return max(p.reram_flops / rer_rate(dim), noi_by[name])
+
+    t_embed = t_reram("embed", w.d_model)
+    stage_attn = t_attn("kqv") + t_attn("score")
+    if "cross" in by_name:
+        stage_attn += t_attn("cross") * by_name["cross"].repeat / max(w.n_layers, 1)
+    stage_ff = t_reram("ff", w.d_ff)
+    t_head = t_reram("lm_head", min(w.vocab, C.RERAM_SAT_DIM))
+
+    k = w.n_layers
+    if w.parallel_mha_ff:  # eq. 9: overlap within the layer
+        total = t_embed + k * max(stage_attn, stage_ff) + t_head
+    else:  # software pipeline: FF(l-1) under MHA(l)
+        total = (t_embed + stage_attn + (k - 1) * max(stage_attn, stage_ff)
+                 + stage_ff + t_head)
+
+    per_kernel = {"embed": t_embed, "kqv": t_attn("kqv") * k,
+                  "score": t_attn("score") * k, "ff": stage_ff * k,
+                  "lm_head": t_head}
+    times = {"embed": t_embed, "kqv": t_attn("kqv"), "score": t_attn("score"),
+             "ff": stage_ff, "lm_head": t_head}
+    if "cross" in by_name:
+        times["cross"] = t_attn("cross")
+        per_kernel["cross"] = t_attn("cross") * by_name["cross"].repeat
+    busy = {"embed": {"ReRAM"}, "kqv": {"SM", "MC"}, "score": {"SM", "MC"},
+            "cross": {"SM", "MC"}, "ff": {"ReRAM", "MC"}, "lm_head": {"ReRAM"}}
+    energy = _energy(phases, times, alloc, ev, busy)
+    return SimResult("2.5D-HI", w.name, n_chiplets, w.seq_len, total, energy,
+                     per_kernel, ev)
+
+
+# ---------------------------------------------------------------------------
+# calibration (§4 Table-4 anchors; see DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+# Table 4 anchors (ms): the ONLY numbers any free scalar is fitted to.
+ANCHORS = {
+    "2.5D-HI": (("bert-base", 64, 36, 50.0), ("gpt-j", 64, 100, 143.0)),
+    "HAIMA_chiplet": (("bert-base", 64, 36, 340.0),
+                      ("gpt-j", 64, 100, 975.0)),
+    "TransPIM_chiplet": (("bert-base", 64, 36, 210.0),
+                         ("gpt-j", 64, 100, 1435.0)),
+}
+
+
+def _hi_residual(calib: Calib, workloads: dict) -> float:
+    r = 0.0
+    for arch, n, chips, target_ms in ANCHORS["2.5D-HI"]:
+        res = simulate_2p5d_hi(workloads[(arch, n)], chips, calib=calib)
+        r += math.log(res.latency_s * 1e3 / target_ms) ** 2
+    return r
+
+
+def calibrate(verbose: bool = False) -> Calib:
+    """Fit the free scalars to the Table-4 anchors.
+
+    2.5D-HI: 2 scalars (sm_efficiency, reram_fill) ↔ 2 anchors —
+    coarse→fine log-grid search.  Each baseline: 1 throughput scalar ↔ its
+    own 36-chiplet anchor — log-bisection (latency is monotone in the
+    scalar).  Everything else in Plane B stays at its Table-1 value.
+    """
+    from repro.config import get_config
+
+    workloads = {(a, n): Workload.from_config(get_config(a), seq_len=n)
+                 for a, n, _, _ in (ANCHORS["2.5D-HI"]
+                                    + ANCHORS["HAIMA_chiplet"]
+                                    + ANCHORS["TransPIM_chiplet"])}
+
+    # --- 2.5D-HI: 2-D log-grid, 3 refinement rounds ----------------------
+    lo = (math.log(1e-4), math.log(1e-4))
+    hi = (math.log(1.0), math.log(1.0))
+    best = (float("inf"), None)
+    for _round in range(4):
+        g0 = [lo[0] + (hi[0] - lo[0]) * i / 23 for i in range(24)]
+        g1 = [lo[1] + (hi[1] - lo[1]) * i / 23 for i in range(24)]
+        for a in g0:
+            for b in g1:
+                c = dataclasses.replace(CALIB, sm_efficiency=math.exp(a),
+                                        reram_fill=math.exp(b))
+                r = _hi_residual(c, workloads)
+                if r < best[0]:
+                    best = (r, (a, b))
+        (a, b) = best[1]
+        da = (hi[0] - lo[0]) / 23
+        db = (hi[1] - lo[1]) / 23
+        lo, hi = (a - da, b - db), (a + da, b + db)
+    sm_eff, fill = math.exp(best[1][0]), math.exp(best[1][1])
+
+    # --- baselines: 2 scalars ↔ 2 anchors each ----------------------------
+    # The GPT-J anchor pins the throughput eff (its kqv/ff dims saturate the
+    # util curve, so the exponent is inert there); the BERT anchor then pins
+    # the bank-parallelism scale exponent.
+    def fit_baseline(sim_fn, eff_field: str, exp_field: str, anchors):
+        bert_anchor, gptj_anchor = anchors
+
+        def latency_ms(eff, exp, anchor):
+            arch, n, chips, _ = anchor
+            c = dataclasses.replace(CALIB, **{eff_field: eff, exp_field: exp})
+            return sim_fn(workloads[(arch, n)], chips, calib=c).latency_s * 1e3
+
+        lo_e, hi_e = 1e-6, 1.0            # eff ↔ GPT-J (decreasing)
+        for _ in range(60):
+            mid = math.sqrt(lo_e * hi_e)
+            if latency_ms(mid, 1.0, gptj_anchor) > gptj_anchor[3]:
+                lo_e = mid
+            else:
+                hi_e = mid
+        eff = math.sqrt(lo_e * hi_e)
+
+        lo_x, hi_x = 0.2, 4.0             # exp ↔ BERT (increasing)
+        for _ in range(60):
+            mid = 0.5 * (lo_x + hi_x)
+            if latency_ms(eff, mid, bert_anchor) < bert_anchor[3]:
+                lo_x = mid
+            else:
+                hi_x = mid
+        return eff, 0.5 * (lo_x + hi_x)
+
+    from repro.core import baselines as B  # local import (module cycle)
+    haima_eff, haima_exp = fit_baseline(
+        B.simulate_haima_chiplet, "haima_eff", "haima_scale_exp",
+        ANCHORS["HAIMA_chiplet"])
+    transpim_eff, transpim_exp = fit_baseline(
+        B.simulate_transpim_chiplet, "transpim_eff", "transpim_scale_exp",
+        ANCHORS["TransPIM_chiplet"])
+
+    fitted = Calib(sm_efficiency=sm_eff, reram_fill=fill,
+                   haima_eff=haima_eff, transpim_eff=transpim_eff,
+                   haima_scale_exp=haima_exp, transpim_scale_exp=transpim_exp,
+                   orig_bank_cap=CALIB.orig_bank_cap)
+    if verbose:
+        print(f"fitted: sm_efficiency={sm_eff:.5g} reram_fill={fill:.5g} "
+              f"haima_eff={haima_eff:.5g} haima_scale_exp={haima_exp:.4f} "
+              f"transpim_eff={transpim_eff:.5g} "
+              f"transpim_scale_exp={transpim_exp:.4f}")
+        for arch, n, chips, target in ANCHORS["2.5D-HI"]:
+            res = simulate_2p5d_hi(workloads[(arch, n)], chips, calib=fitted)
+            print(f"  2.5D-HI {arch} n={n} {chips}c: {res.latency_s*1e3:.1f} ms "
+                  f"(anchor {target})")
+        for name, fn in (("HAIMA_chiplet", B.simulate_haima_chiplet),
+                         ("TransPIM_chiplet", B.simulate_transpim_chiplet)):
+            for arch, n, chips, target in ANCHORS[name]:
+                res = fn(workloads[(arch, n)], chips, calib=fitted)
+                print(f"  {name} {arch} n={n} {chips}c: "
+                      f"{res.latency_s*1e3:.1f} ms (anchor {target})")
+    return fitted
+
+
+if __name__ == "__main__":
+    calibrate(verbose=True)

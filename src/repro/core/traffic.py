@@ -1,0 +1,192 @@
+"""Transformer → per-phase inter-chiplet traffic F_ij(t) (paper §3.2).
+
+The paper profiles inference workloads (nvidia-smi + PyTorch traces) to get
+the traffic matrix each NoI candidate is evaluated under.  We derive the
+same phase structure analytically from the model configs — the operation
+counts are exact because our Plane-A JAX models implement the same graphs.
+
+Phases per encoder/decoder block (Fig. 2a):
+  ①  input embedding (one-time)    ReRAM_i → ReRAM_{i+1} pipeline
+  ②③ W_{K,Q,V} load + KQV compute  DRAM→MC→SM (many-to-few, both ways)
+  ④  score (QKᵀ, softmax, ·V)      SM↔SM within cluster, SM→MC spill
+  ⑤  feed-forward                   ReRAM macro pipeline; MC → ReRAM head
+
+A workload descriptor captures exactly what the traffic model needs —
+dims, heads (MQA/GQA collapse the K/V share), enc/dec structure, and the
+parallel MHA-FF flag (GPT-J) which overlaps ④ and ⑤.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.config import ModelConfig
+
+BYTES = 2  # fp16 operands, consistent with the paper's 16-bit assumption
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    seq_len: int
+    enc_dec: bool = False
+    parallel_mha_ff: bool = False        # GPT-J (paper eq. 9)
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig, seq_len: int) -> "Workload":
+        return cls(
+            name=cfg.name, d_model=cfg.d_model,
+            n_layers=cfg.n_layers + cfg.n_encoder_layers,
+            n_heads=max(cfg.n_heads, 1), n_kv_heads=max(cfg.n_kv_heads, 1),
+            d_ff=cfg.d_ff or 4 * cfg.d_model, vocab=cfg.vocab_size,
+            seq_len=seq_len, enc_dec=cfg.n_encoder_layers > 0,
+            parallel_mha_ff=cfg.parallel_block)
+
+
+@dataclasses.dataclass
+class Phase:
+    """One execution phase with compute (by platform) and traffic terms."""
+    name: str
+    sm_flops: float = 0.0
+    reram_flops: float = 0.0
+    dram_bytes: float = 0.0          # DRAM→MC weight/act streaming
+    sm_mc_bytes: float = 0.0         # many-to-few SM↔MC exchange
+    reram_pipe_bytes: float = 0.0    # ReRAM_i→ReRAM_{i+1} (SFC pipeline)
+    mc_reram_bytes: float = 0.0      # macro head/tail ↔ MC
+    host_bytes: float = 0.0          # baseline host round-trips only
+    repeat: int = 1                  # executed per layer?
+
+
+def transformer_phases(w: Workload) -> list[Phase]:
+    N, D, F, h = w.seq_len, w.d_model, w.d_ff, w.n_heads
+    hd = D // h
+    kv_frac = w.n_kv_heads / w.n_heads
+
+    phases = [Phase(
+        "embed",
+        reram_flops=2.0 * N * D,                       # MVM lookup+pos (eq. 1)
+        reram_pipe_bytes=N * D * BYTES,
+        mc_reram_bytes=N * D * BYTES,
+    )]
+
+    # ② load W_K,Q,V through MCs + ③ KQV compute on SMs (eqs 2-3)
+    w_kqv = (1 + 2 * kv_frac) * D * D * BYTES          # MQA shrinks K/V loads
+    kqv = Phase(
+        "kqv",
+        sm_flops=2.0 * N * D * D * (1 + 2 * kv_frac),
+        dram_bytes=w_kqv + N * D * BYTES,
+        sm_mc_bytes=N * D * (1 + 2 * kv_frac) * BYTES,
+        repeat=w.n_layers,
+    )
+    # ④ score: QKᵀ + softmax + ·V + output proj (eqs 4-7), fused on SM
+    score = Phase(
+        "score",
+        sm_flops=2.0 * N * N * D * 2 + 2.0 * N * D * D,
+        sm_mc_bytes=2 * N * D * BYTES,
+        dram_bytes=D * D * BYTES,
+        repeat=w.n_layers,
+    )
+    # ⑤ feed-forward on the ReRAM macro (two FC layers, weight-stationary)
+    ff = Phase(
+        "ff",
+        reram_flops=2.0 * N * D * F * 2,
+        mc_reram_bytes=2 * N * D * BYTES,
+        reram_pipe_bytes=N * F * BYTES,
+        repeat=w.n_layers,
+    )
+    phases += [kqv, score, ff]
+    if w.enc_dec:
+        # decoder cross-attention adds one extra attention block per layer
+        cross = Phase(
+            "cross",
+            sm_flops=2.0 * N * N * D + 2.0 * N * D * D * (1 + 2 * kv_frac) / 2,
+            sm_mc_bytes=2 * N * D * BYTES,
+            dram_bytes=D * D * BYTES,
+            repeat=w.n_layers // 2,
+        )
+        phases.append(cross)
+    phases.append(Phase("lm_head",
+                        reram_flops=2.0 * N * D * w.vocab / max(N, 1),
+                        mc_reram_bytes=D * w.vocab * BYTES / max(N, 1)))
+    return phases
+
+
+def rewrites_per_token(w: Workload) -> float:
+    """ReRAM cell rewrites per token if attention ran on PIM (§4.4).
+
+    K/Q/V intermediates change every token: writing N×(3·D) fp16 operand
+    matrices into 2-bit cells → bit-writes per cell per token."""
+    bits_per_token = 3 * w.d_model * 16          # KQV row writes
+    score_bits = 2 * w.seq_len * w.n_heads * 16  # score + prob rows
+    return (bits_per_token + score_bits) * w.seq_len / 2  # per 2-bit cell
+
+
+# ---------------------------------------------------------------------------
+# chiplet-level traffic matrices
+# ---------------------------------------------------------------------------
+
+def phase_traffic_matrix(phase: Phase, roles: dict[str, list[int]],
+                         n_chiplets: int):
+    """Expand a Phase into F_ij bytes between chiplet ids.
+
+    roles: {"SM": [ids], "MC": [ids], "DRAM": [ids], "ReRAM": [ids SFC-ordered],
+            "HOST": [ids]} — placement-independent logical traffic; the NoI
+    evaluator maps it onto links via routing.
+    """
+    F = {}
+
+    def add(i, j, b):
+        if b <= 0 or i == j:
+            return
+        F[(i, j)] = F.get((i, j), 0.0) + b
+
+    sms, mcs = roles.get("SM", []), roles.get("MC", [])
+    drams, rerams = roles.get("DRAM", []), roles.get("ReRAM", [])
+    hosts = roles.get("HOST", [])
+
+    # DRAM→MC (point-to-point pairs) then MC→SM fan-out (many-to-few)
+    if phase.dram_bytes and mcs:
+        per_mc = phase.dram_bytes / len(mcs)
+        for mi, m in enumerate(mcs):
+            d = drams[mi % len(drams)] if drams else m
+            add(d, m, per_mc)
+        if sms:
+            per_sm = phase.dram_bytes / len(sms)
+            for s in sms:
+                m = mcs[hash(s) % len(mcs)]
+                add(m, s, per_sm)
+
+    if phase.sm_mc_bytes and sms and mcs:
+        per_sm = phase.sm_mc_bytes / len(sms)
+        for si, s in enumerate(sms):
+            m = mcs[si % len(mcs)]
+            add(s, m, per_sm / 2)
+            add(m, s, per_sm / 2)
+
+    if phase.reram_pipe_bytes and len(rerams) > 1:
+        # spatially-partitioned pipeline: the weights are sliced across the
+        # macro, so each SFC hop carries only that stage's activation slice
+        per_hop = phase.reram_pipe_bytes / len(rerams)
+        for a, b in zip(rerams[:-1], rerams[1:]):
+            add(a, b, per_hop)
+
+    if phase.mc_reram_bytes and rerams and mcs:
+        head, tail = rerams[0], rerams[-1]
+        m = mcs[0]
+        add(m, head, phase.mc_reram_bytes / 2)
+        add(tail, m, phase.mc_reram_bytes / 2)
+
+    if phase.host_bytes and hosts:
+        # host round trips (baselines): every SM/ReRAM talks to host
+        src = sms or rerams
+        per = phase.host_bytes / max(len(src), 1)
+        for s in src:
+            add(s, hosts[0], per / 2)
+            add(hosts[0], s, per / 2)
+    return F

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's two compute hot-spots.
+
+- ``flash_attention``: the paper's SM-chiplet dataflow (FlashAttention
+  partitioning with fused score+softmax, §3.1-3.2 steps 2-4) as a VMEM-tiled
+  online-softmax kernel.
+- ``pim_mvm``: the ReRAM-crossbar weight-stationary MVM (§3.1 step 5) as a
+  quantised 128x128-tile matmul with in-kernel dequantisation.
+
+Each kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd wrapper with impl dispatch) and ``ref.py`` (pure-jnp oracle used for
+interpret-mode validation and as the CPU/dry-run execution path).
+"""

@@ -1,0 +1,150 @@
+"""Pallas TPU flash-attention forward kernel.
+
+TPU-native adaptation of the paper's SM-chiplet attention dataflow: the
+paper partitions Q/K/V across SM chiplets with the FlashAttention schedule
+and fuses score+softmax so the O(N²) intermediate never crosses the NoI
+(§3.2 steps 2-4).  On TPU the analogous fast/slow boundary is VMEM↔HBM:
+this kernel tiles Q into MXU-aligned blocks held in VMEM, streams K/V
+blocks through, and keeps the online-softmax running statistics (m, l) and
+the output accumulator in VMEM scratch for the whole K/V sweep.
+
+Grid: ``(B, Hq, Sq/bq, Skv/bk)`` — the trailing (minor) grid axis is
+sequential on TPU, so scratch carries state across the K/V sweep of each
+Q block.  GQA folds the head-group mapping into the K/V index_map.
+
+Forward only: the serving path (the paper's setting — inference) uses it
+directly; training uses the reference path (XLA fuses adequately there and
+the dry-run needs portable HLO).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _flash_fwd_kernel(
+    q_ref, k_ref, v_ref,          # VMEM blocks
+    o_ref,                        # output block
+    m_scr, l_scr, acc_scr,        # VMEM scratch: (bq,1), (bq,1), (bq, hdv)
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    softcap: float,
+    bq: int,
+    bk: int,
+    kv_len: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_idx = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_idx = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # skip blocks that the causal/window structure masks out entirely
+    block_needed = True
+    if causal:
+        block_needed = jnp.logical_and(block_needed, ik * bk <= iq * bq + bq - 1)
+    if window:
+        block_needed = jnp.logical_and(block_needed, (iq * bq) - (ik * bk + bk - 1) < window)
+
+    @pl.when(block_needed)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, hdv)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+
+        mask = k_idx < kv_len
+        if causal:
+            mask &= k_idx <= q_idx
+        if window:
+            mask &= q_idx - k_idx < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                             # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                          # (bq, bk)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)                 # fully-masked rows -> 0
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,   # (B, Hq, Sq, hd)
+    k: jax.Array,   # (B, Hkv, Skv, hd)
+    v: jax.Array,   # (B, Hkv, Skv, hdv)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, Sq, hd = q.shape
+    _, Hkv, Skv, hdv = v.shape
+    rep = Hq // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    if Sq % bq or Skv % bk:
+        raise ValueError(f"seq lens ({Sq},{Skv}) must divide blocks ({bq},{bk})")
+
+    grid = (B, Hq, Sq // bq, Skv // bk)
+    kern = functools.partial(
+        _flash_fwd_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, kv_len=Skv)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik, rep=rep: (b, h // rep, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hdv), lambda b, h, iq, ik, rep=rep: (b, h // rep, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hdv), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hdv), q.dtype),
+        scratch_shapes=[
+            _vmem((bq, 1)),
+            _vmem((bq, 1)),
+            _vmem((bq, hdv)),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape):
+    """f32 VMEM scratch (works in interpret mode on CPU too)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,66 @@
+"""jit'd dispatch wrapper for attention.
+
+``impl``:
+  - ``ref``               pure-jnp chunked oracle (CPU, dry-run HLO)
+  - ``pallas``            TPU Pallas kernel (compiled)
+  - ``pallas_interpret``  Pallas kernel body executed in Python on CPU
+  - ``auto``              pallas on TPU backends, ref elsewhere
+
+The Pallas path covers self-attention (train/prefill) with implicit
+positions; ring-buffer decode and cross-attention with explicit position
+vectors route to the reference path (a 1-token decode step is DMA-bound,
+not MXU-bound — a kernel buys nothing there).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention import kernel as _kernel
+
+
+def _pallas_ok(q, k, causal, q_pos, kv_pos, kv_valid, window):
+    if q_pos is not None or kv_pos is not None or kv_valid is not None:
+        return False
+    B, Sq, Hq, hd = q.shape
+    Skv = k.shape[1]
+    if Sq < 8 or Skv < 8:
+        return False
+    bq = min(128, Sq)
+    bk = min(128, Skv)
+    return Sq % bq == 0 and Skv % bk == 0 and Hq % k.shape[2] == 0
+
+
+def attention(
+    q: jax.Array,            # (B, Sq, Hq, hd)
+    k: jax.Array,            # (B, Skv, Hkv, hd)
+    v: jax.Array,            # (B, Skv, Hkv, hdv)
+    *,
+    q_pos: Optional[jax.Array] = None,
+    kv_pos: Optional[jax.Array] = None,
+    kv_valid: Optional[jax.Array] = None,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    impl: str = "auto",
+) -> jax.Array:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+
+    if impl in ("pallas", "pallas_interpret") and _pallas_ok(
+            q, k, causal, q_pos, kv_pos, kv_valid, window):
+        qt = q.transpose(0, 2, 1, 3)   # (B, H, S, hd)
+        kt = k.transpose(0, 2, 1, 3)
+        vt = v.transpose(0, 2, 1, 3)
+        out = _kernel.flash_attention_fwd(
+            qt, kt, vt, causal=causal, window=window, softcap=softcap,
+            scale=scale, interpret=(impl == "pallas_interpret"))
+        return out.transpose(0, 2, 1, 3)
+
+    return attention_ref(
+        q, k, v, q_pos=q_pos, kv_pos=kv_pos, kv_valid=kv_valid,
+        causal=causal, window=window, softcap=softcap, scale=scale)

@@ -1,0 +1,2 @@
+from repro.kernels.pim_mvm.ops import pim_mvm, quantize_weights  # noqa: F401
+from repro.kernels.pim_mvm.ref import pim_mvm_ref  # noqa: F401

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the quantised weight-stationary MVM."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+XBAR = 128
+
+
+def dequantize_ref(wq, scales):
+    """(K, N) int8 + (K/128, N/128) f32 tile scales -> (K, N) f32."""
+    full = jnp.repeat(jnp.repeat(scales, XBAR, axis=0), XBAR, axis=1)
+    return wq.astype(jnp.float32) * full
+
+
+def pim_mvm_ref(x, wq, scales):
+    w = dequantize_ref(wq, scales)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

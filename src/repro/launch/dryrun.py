@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+``jit(step).lower(input_specs).compile()`` on the 16×16 single-pod mesh and
+the 2×16×16 multi-pod mesh, print ``memory_analysis()`` (proves fit) and
+derive the three roofline terms (§Roofline) from the optimized HLO.
+
+Results stream to ``experiments/dryrun/<arch>__<shape>__<mesh>.json`` so
+reruns are incremental.  The 512 fake host devices are forced by the first
+two lines above — before any other import — and ONLY here.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --force
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.config import ASSIGNED_ARCHS, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.roofline.analysis import V5E, roofline_terms
+from repro.models.transformer import count_params
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# grad-accumulation per arch for the train_4k cell (activation-memory knob;
+# chosen during the §Perf loop — see EXPERIMENTS.md)
+TRAIN_ACCUM = {
+    "deepseek-v2-236b": 16,
+    "llama-3.2-vision-90b": 16,
+    "gemma3-27b": 8,
+    "whisper-large-v3": 4,
+    "gemma2-9b": 2,
+    "recurrentgemma-9b": 2,
+    "minitron-8b": 2,
+    "qwen3-moe-30b-a3b": 2,
+}
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N_active per trained token; 2·N_active per inferred
+    token (fwd only), × tokens processed in the step."""
+    n_active = count_params(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             save_hlo: bool = False, force: bool = False) -> dict:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out_path = os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mesh_kind}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "status": "ok", "ts": time.time()}
+
+    ok, reason = cfg.supports(shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        _save(out_path, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.size
+    accum = TRAIN_ACCUM.get(arch, 1) if shape.kind == "train" else 1
+    # microbatches must still divide the data axes
+    dp_size = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    while accum > 1 and (shape.global_batch // accum) % dp_size:
+        accum //= 2
+
+    try:
+        t0 = time.time()
+        jfn, args, plan = build_cell(cfg, shape, mesh, accum=accum)
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        }
+        live = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                - ma.alias_size_in_bytes + ma.temp_size_in_bytes)
+        mem["live_bytes"] = live
+        # fits_v5e uses the TPU-true liveness: XLA:CPU float-normalization
+        # materialises f32 work copies of loop-carried bf16 buffers (KV
+        # caches, scan-stacked weights) that do not exist on TPU — they are
+        # measured from the HLO and reported separately below.
+
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        from repro.roofline.hlo import (cpu_bf16_promotion_bytes,
+                                        cpu_bf16_promotion_bytes_serving)
+        if shape.kind == "train":
+            promo = cpu_bf16_promotion_bytes(hlo)
+        else:
+            promo = cpu_bf16_promotion_bytes_serving(hlo)
+        promo = min(promo, ma.temp_size_in_bytes)
+        floor = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 - ma.alias_size_in_bytes)
+        mem["cpu_bf16_promotion_bytes"] = promo
+        mem["live_bytes_tpu"] = max(live - promo, floor)
+        mem["fits_v5e"] = bool(mem["live_bytes_tpu"] <= V5E.hbm_bytes)
+        rep = roofline_terms(
+            hlo, arch=arch, shape=shape_name, mesh_name=mesh_kind,
+            n_devices=n_dev, model_flops=model_flops_for(cfg, shape))
+        rec.update(
+            t_lower_s=round(t_lower, 2), t_compile_s=round(t_compile, 2),
+            n_devices=n_dev, accum=accum,
+            memory=mem,
+            xla_cost_analysis={"flops": ca.get("flops", 0.0),
+                               "bytes": ca.get("bytes accessed", 0.0)},
+            roofline=dataclasses.asdict(rep),
+        )
+        if save_hlo:
+            hlo_path = out_path.replace(".json", ".hlo.txt")
+            with open(hlo_path, "w") as f:
+                f.write(hlo)
+            rec["hlo_path"] = hlo_path
+    except Exception as e:  # a failing cell is a bug in our sharding
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    _save(out_path, rec)
+    return rec
+
+
+def _save(path, rec):
+    with open(path + ".tmp", "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    os.replace(path + ".tmp", path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="", help="single arch (default: all)")
+    ap.add_argument("--shape", default="", help="single shape (default: all)")
+    ap.add_argument("--mesh", default="", choices=["", "single", "multi"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+
+    n_bad = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind,
+                               save_hlo=args.save_hlo, force=args.force)
+                status = rec["status"]
+                if status == "ok":
+                    r = rec["roofline"]
+                    mem = rec["memory"]
+                    print(f"{arch:22s} {shape:12s} {mesh_kind:6s} OK "
+                          f"compile={rec['t_compile_s']:7.1f}s "
+                          f"live={mem["live_bytes_tpu"]/2**30:6.2f}GiB "
+                          f"fits={mem['fits_v5e']} "
+                          f"terms(c/m/n)={r['compute_s']:.3e}/"
+                          f"{r['memory_s']:.3e}/{r['collective_s']:.3e}s "
+                          f"bound={r['bottleneck']}", flush=True)
+                elif status == "skipped":
+                    print(f"{arch:22s} {shape:12s} {mesh_kind:6s} SKIP "
+                          f"({rec['reason']})", flush=True)
+                else:
+                    n_bad += 1
+                    print(f"{arch:22s} {shape:12s} {mesh_kind:6s} ERROR "
+                          f"{rec['error']}", flush=True)
+    raise SystemExit(1 if n_bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Brings up the slotted continuous-batching engine on the requested mesh
+and drives a synthetic request workload (Zipf prompt lengths), reporting
+throughput / TTFT / latency — the serving-side analogue of train.py.
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--kv-len", type=int, default=128)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}").strip()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.config import get_config, reduce_config
+    from repro.models import transformer as T
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    if cfg.family == "encoder":
+        raise SystemExit("encoder-only architectures have no decode step")
+
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed),
+                           param_dtype=jnp.bfloat16)
+    engine = ServingEngine(cfg, params, EngineConfig(
+        max_batch=args.max_batch, kv_len=args.kv_len,
+        max_new_tokens=args.max_new_tokens, temperature=args.temperature,
+        seed=args.seed))
+
+    rng = np.random.default_rng(args.seed)
+    for _ in range(args.requests):
+        plen = int(rng.integers(4, min(64, args.kv_len - args.max_new_tokens - 1)))
+        prompt = rng.integers(0, cfg.vocab_size, size=plen)
+        engine.submit(prompt)
+
+    engine.run_until_drained()
+    stats = engine.stats()
+    print(f"arch={cfg.name} requests={stats['finished']} "
+          f"tokens={stats['tokens']} "
+          f"throughput={stats['tokens_per_s']:.1f} tok/s "
+          f"ttft={stats['mean_ttft_s']*1e3:.0f}ms "
+          f"latency={stats['mean_latency_s']*1e3:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

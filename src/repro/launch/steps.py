@@ -1,0 +1,184 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch × shape) cell.
+
+``input_specs`` follows the assignment: weak-type-correct, shardable
+stand-ins for every model input — token batches for training, request
+batches + KV caches for serving — with **no device allocation**.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeSpec
+from repro.models import transformer as T
+from repro.parallel.api import Plan, activate_plan
+from repro.parallel import sharding as SH
+from repro.training.optimizer import OptConfig, adamw_init, adamw_update
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, SDS]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": SDS((B,), jnp.int32), "pos": SDS((B,), jnp.int32)}
+    b = {"tokens": SDS((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        b["frames"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        b["encoder_tokens"] = SDS((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        b["image_embeds"] = SDS((B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    return b
+
+
+def params_specs(cfg: ModelConfig, param_dtype) -> Any:
+    return jax.eval_shape(
+        lambda k: T.init_params(cfg, k, param_dtype=param_dtype),
+        SDS((2,), jnp.uint32))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec) -> Any:
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len,
+                             dtype=jnp.bfloat16))
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, plan: Optional[Plan] = None, *,
+                    opt_cfg: OptConfig = OptConfig(), accum: int = 1,
+                    impl: str = "ref", remat: bool = True,
+                    remat_policy: Optional[str] = None,
+                    grad_shardings=None):
+    def loss_f(params, batch):
+        with activate_plan(plan):
+            return T.loss_fn(params, cfg, batch, impl=impl, remat=remat,
+                             remat_policy=remat_policy)
+
+    def pin(grads):
+        # keep gradients on the parameter sharding — without this the
+        # grad-accumulation carry (and the embedding-gradient dot feeding
+        # it) materialises unsharded inside the scan body
+        if grad_shardings is None:
+            return grads
+        return jax.lax.with_sharding_constraint(grads, grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_f, has_aux=True)(params, batch)
+            grads = pin(grads)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_f, has_aux=True)(params, mb)
+                g_acc = pin(jax.tree_util.tree_map(jnp.add, g_acc, pin(g)))
+                return (g_acc, l_acc + l), None
+
+            g0 = pin(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (grads, loss), _ = jax.lax.scan(acc, (g0, jnp.zeros((), jnp.float32)),
+                                            micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {}
+        new_params, new_opt, om = adamw_update(grads, opt_state, params, opt_cfg)
+        return new_params, new_opt, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, plan: Optional[Plan] = None, *,
+                      impl: str = "ref", kv_cap: int = 0):
+    def prefill_step(params, batch):
+        with activate_plan(plan):
+            return T.prefill(params, cfg, batch, impl=impl, kv_cap=kv_cap)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, plan: Optional[Plan] = None, *,
+                     impl: str = "ref"):
+    def decode(params, cache, tokens, pos):
+        with activate_plan(plan):
+            return T.decode_step(params, cfg, cache, tokens, pos, impl=impl)
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# full AOT cell assembly (used by dryrun + roofline + perf loop)
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+               accum: int = 1, impl: str = "ref",
+               donate: bool = True):
+    """Returns (jitted_fn, example_args_SDS) for one (arch × shape × mesh)."""
+    mode = shape.kind
+    plan, ctx = SH.build_plan(cfg, shape, mesh, mode=mode)
+    bspecs = batch_specs(cfg, shape)
+    bshard = SH.batch_shardings(bspecs, ctx)
+
+    if mode == "train":
+        pspecs = params_specs(cfg, jnp.float32)
+        pshard = SH.params_shardings(pspecs, ctx)
+        ospecs = jax.eval_shape(adamw_init, pspecs)
+        oshard = {  # moments shard exactly like their parameters (ZeRO)
+            "m": SH.params_shardings(ospecs["m"], ctx),
+            "v": SH.params_shardings(ospecs["v"], ctx),
+            "count": NamedSharding(mesh, P()),
+        }
+        fn = make_train_step(cfg, plan, accum=accum, impl=impl,
+                             grad_shardings=pshard)
+        rep = NamedSharding(mesh, P())
+        metrics_shard = {"loss": rep, "gnorm": rep, "lr": rep}
+        jfn = jax.jit(
+            fn,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, metrics_shard),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        return jfn, (pspecs, ospecs, bspecs), plan
+
+    pspecs = params_specs(cfg, jnp.bfloat16)
+    pshard = SH.params_shardings(pspecs, ctx)
+
+    if mode == "prefill":
+        fn = make_prefill_step(cfg, plan, impl=impl, kv_cap=shape.seq_len)
+        out_spec = jax.eval_shape(fn, pspecs, bspecs)
+        vocab_ax = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+        logits_shard = NamedSharding(mesh, P(ctx.dp if ctx.dp else None, vocab_ax))
+        cshard = SH.cache_shardings(out_spec[1], ctx)
+        jfn = jax.jit(fn, in_shardings=(pshard, bshard),
+                      out_shardings=(logits_shard, cshard))
+        return jfn, (pspecs, bspecs), plan
+
+    # decode
+    cspecs = cache_specs(cfg, shape)
+    cshard = SH.cache_shardings(cspecs, ctx)
+    tok_shard = NamedSharding(mesh, P(ctx.dp if ctx.dp else None))
+    fn = make_decode_step(cfg, plan, impl=impl)
+    vocab_ax = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+    logits_shard = NamedSharding(mesh, P(ctx.dp if ctx.dp else None, vocab_ax))
+    jfn = jax.jit(
+        fn,
+        in_shardings=(pshard, cshard, tok_shard, tok_shard),
+        out_shardings=(logits_shard, cshard),
+        donate_argnums=(1,) if donate else (),
+    )
+    args = (pspecs, cspecs, batch_specs(cfg, shape)["tokens"],
+            batch_specs(cfg, shape)["pos"])
+    return jfn, args, plan

@@ -1,0 +1,89 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Production entry point.  On real hardware it binds the full config to the
+pod mesh; in the CPU container use ``--reduced --devices N`` to run a
+shrunk config on N forced host devices (the same code path, smaller
+numbers).  Fault-tolerance knobs (checkpoint dir/interval, retries,
+straggler factor) map 1:1 onto TrainerConfig.
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="shrink the config for CPU smoke runs")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (CPU testing); 0 = real")
+    ap.add_argument("--data-axis", type=int, default=0,
+                    help="data-axis size (0: auto)")
+    ap.add_argument("--model-axis", type=int, default=0)
+    ap.add_argument("--global-batch", type=int, default=0)
+    ap.add_argument("--seq-len", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}").strip()
+
+    import dataclasses
+    import jax
+    from repro.config import SHAPES, ShapeSpec, get_config, reduce_config
+    from repro.launch.mesh import make_production_mesh, small_mesh
+    from repro.training.optimizer import OptConfig
+    from repro.training.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    shape = SHAPES[args.shape]
+    if args.global_batch or args.seq_len:
+        shape = ShapeSpec(
+            shape.name, shape.kind,
+            args.seq_len or shape.seq_len,
+            args.global_batch or shape.global_batch)
+
+    n_dev = len(jax.devices())
+    if args.data_axis and args.model_axis:
+        mesh = small_mesh(args.data_axis, args.model_axis)
+    elif n_dev >= 256:
+        mesh = make_production_mesh(multi_pod=(n_dev >= 512))
+    else:
+        model_ax = 1
+        mesh = small_mesh(n_dev // model_ax, model_ax)
+
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)} batch={shape.global_batch} "
+          f"seq={shape.seq_len}")
+
+    trainer = Trainer(
+        cfg, shape, mesh,
+        opt_cfg=OptConfig(lr=args.lr, total_steps=args.steps),
+        tcfg=TrainerConfig(ckpt_dir=args.ckpt_dir,
+                           ckpt_every=args.ckpt_every,
+                           accum=args.accum, remat=args.remat),
+        seed=args.seed)
+    start = trainer.step
+    for m in trainer.run(args.steps - start):
+        if m["step"] % 10 == 0 or m["step"] == start:
+            print(f"step {m['step']:5d} loss={m['loss']:.4f} "
+                  f"gnorm={m['gnorm']:.3f} lr={m['lr']:.2e} "
+                  f"dt={m['dt']*1e3:.0f}ms", flush=True)
+    if args.ckpt_dir:
+        trainer.save()
+    print(f"done: {trainer.step} steps, {trainer.slow_steps} slow steps")
+
+
+if __name__ == "__main__":
+    main()

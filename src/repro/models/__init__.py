@@ -1,0 +1,8 @@
+from repro.models.transformer import (  # noqa: F401
+    init_params,
+    init_cache,
+    count_params,
+    loss_fn,
+    prefill,
+    decode_step,
+)

@@ -1,0 +1,305 @@
+"""Attention layers: MHA/GQA/MQA, local (sliding-window, ring-buffer cache),
+cross-attention, and DeepSeek MLA (naive train path + absorbed decode path).
+
+These are the paper's *dynamic* kernels — per-token-changing operands that
+the paper routes to the SM/MC/DRAM plane (§3.1).  The sharding plan gives
+their activations head-wise placement ("SM cluster"); the inner product
+runs through :mod:`repro.kernels.flash_attention`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import attention as flash_attention
+from repro.models.modules import apply_rope, dense_init, rmsnorm
+from repro.parallel import constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, *, cross: bool = False, dtype=jnp.float32):
+    D = cfg.d_model
+    Hq, Hkv, hd, hdv = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, Hq * hd), dtype),
+        "wk": dense_init(ks[1], (D, Hkv * hd), dtype),
+        "wv": dense_init(ks[2], (D, Hkv * hdv), dtype),
+        "wo": dense_init(ks[3], (Hq * hdv, D), dtype, fan_in=Hq * hdv),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((Hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((Hkv * hdv,), jnp.float32)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def init_mla(key, cfg, *, dtype=jnp.float32):
+    D, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 5)
+    p = {
+        "wkv_a": dense_init(ks[0], (D, kvr + dr), dtype),
+        "kv_norm": jnp.zeros((kvr,), jnp.float32),
+        "wkv_b": dense_init(ks[1], (kvr, H, dn + dv), dtype, fan_in=kvr),
+        "wo": dense_init(ks[2], (H * dv, D), dtype, fan_in=H * dv),
+    }
+    if qr:
+        p["wq_a"] = dense_init(ks[3], (D, qr), dtype)
+        p["q_norm"] = jnp.zeros((qr,), jnp.float32)
+        p["wq_b"] = dense_init(ks[4], (qr, H, dn + dr), dtype, fan_in=qr)
+    else:
+        p["wq"] = dense_init(ks[3], (D, H, dn + dr), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, kind: str, batch: int, kv_len: int, dtype, n_cross: int = 0):
+    Hkv, hd, hdv = cfg.n_kv_heads, cfg.head_dim, cfg.v_head_dim
+    if cfg.is_mla and kind != "cross":
+        return {
+            "ckv": jnp.zeros((batch, kv_len, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, kv_len, cfg.rope_head_dim), dtype),
+            "pos": jnp.full((batch, kv_len), -1, jnp.int32),
+        }
+    if kind == "cross":
+        return {
+            "k": jnp.zeros((batch, n_cross, Hkv, hd), dtype),
+            "v": jnp.zeros((batch, n_cross, Hkv, hdv), dtype),
+        }
+    cap = kv_len if kind == "global" else min(cfg.window, kv_len)
+    return {
+        "k": jnp.zeros((batch, cap, Hkv, hd), dtype),
+        "v": jnp.zeros((batch, cap, Hkv, hdv), dtype),
+        "pos": jnp.full((batch, cap), -1, jnp.int32),
+    }
+
+
+def _ring_fill(k, v, positions, cap):
+    """Build a ring cache holding the last ``cap`` of S prefilled tokens."""
+    B, S = k.shape[0], k.shape[1]
+    keep = min(S, cap)
+    pos_tail = positions[:, S - keep:]               # (B, keep)
+    slots = pos_tail % cap
+    bidx = jnp.arange(B)[:, None]
+    kc = jnp.zeros((B, cap) + k.shape[2:], k.dtype).at[bidx, slots].set(k[:, S - keep:])
+    vc = jnp.zeros((B, cap) + v.shape[2:], v.dtype).at[bidx, slots].set(v[:, S - keep:])
+    pc = jnp.full((B, cap), -1, jnp.int32).at[bidx, slots].set(pos_tail)
+    return kc, vc, pc
+
+
+def _pad_cache(x, cap):
+    B, S = x.shape[0], x.shape[1]
+    if cap <= S:
+        return x
+    pad = jnp.zeros((B, cap - S) + x.shape[2:], x.dtype)
+    return jnp.concatenate([x, pad], axis=1)
+
+
+def _pad_pos(pos, cap):
+    B, S = pos.shape
+    if cap <= S:
+        return pos
+    return jnp.concatenate([pos, jnp.full((B, cap - S), -1, jnp.int32)], axis=1)
+
+
+def _ring_write(cache, new_k, new_v, pos):
+    """Write one token at per-batch ``pos`` (ring for local, direct for global)."""
+    cap = cache["k"].shape[1]
+    slot = pos % cap
+    bidx = jnp.arange(pos.shape[0])
+    return {
+        "k": cache["k"].at[bidx, slot].set(new_k[:, 0]),
+        "v": cache["v"].at[bidx, slot].set(new_v[:, 0]),
+        "pos": cache["pos"].at[bidx, slot].set(pos),
+    }
+
+
+# ---------------------------------------------------------------------------
+# apply — standard path
+# ---------------------------------------------------------------------------
+
+def apply_attention(
+    p,
+    x,                       # (B, S, D)
+    *,
+    cfg,
+    kind: str,               # global | local | cross
+    mode: str,               # train | prefill | decode
+    pos,                     # (B, S) int32 (decode: (B, 1))
+    cache=None,
+    cross_src=None,          # (B, S_src, D) for cross in train/prefill
+    impl: str = "auto",
+    causal: bool = True,     # encoder stacks pass False
+    kv_cap: int = 0,         # prefill: cache capacity to allocate (>= S)
+):
+    B, S, D = x.shape
+    Hq, Hkv, hd, hdv = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.v_head_dim
+    dt = x.dtype
+    causal = causal and kind != "cross"
+    window = cfg.window if kind == "local" else 0
+    theta = cfg.rope_theta_local if (kind == "local" and cfg.rope_theta_local) else cfg.rope_theta
+
+    q = x @ constrain(p["wq"].astype(dt), "weight_full")
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+    q = q.reshape(B, S, Hq, hd)
+
+    if kind == "cross":
+        if mode == "decode":
+            k, v = cache["k"], cache["v"]
+            new_cache = cache
+        else:
+            src = cross_src.astype(dt)
+            k = src @ p["wk"].astype(dt)
+            v = src @ p["wv"].astype(dt)
+            if "bk" in p:
+                k = k + p["bk"].astype(dt)
+                v = v + p["bv"].astype(dt)
+            k = k.reshape(B, -1, Hkv, hd)
+            v = v.reshape(B, -1, Hkv, hdv)
+            new_cache = {"k": k, "v": v} if mode == "prefill" else None
+        q = constrain(q, "act_heads")
+        out = flash_attention(q, k, v, causal=False, softcap=cfg.attn_softcap,
+                              impl=impl if mode != "decode" else "ref",
+                              q_pos=None if mode != "decode" else pos,
+                              kv_pos=None, kv_valid=None)
+        out = out.reshape(B, S, Hq * hdv) @ p["wo"].astype(dt)
+        return out, new_cache
+
+    k = x @ constrain(p["wk"].astype(dt), "weight_full")
+    v = x @ constrain(p["wv"].astype(dt), "weight_full")
+    if "bk" in p:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hdv)
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if cfg.use_rope:
+        q = apply_rope(q, pos, theta)
+        k = apply_rope(k, pos, theta)
+    q = constrain(q, "act_heads")
+    k = constrain(k, "kv_heads")
+    v = constrain(v, "kv_heads")
+
+    if mode in ("train", "prefill"):
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=cfg.attn_softcap, impl=impl)
+        new_cache = None
+        if mode == "prefill":
+            cap = max(kv_cap, S)
+            if kind == "local":
+                kc, vc, pc = _ring_fill(k, v, pos, min(cfg.window, cap))
+                new_cache = {"k": kc, "v": vc, "pos": pc}
+            else:
+                new_cache = {"k": _pad_cache(k, cap), "v": _pad_cache(v, cap),
+                             "pos": _pad_pos(pos, cap)}
+    else:  # decode: S == 1
+        new_cache = _ring_write(cache, k, v, pos[:, 0])
+        kv_pos = new_cache["pos"]
+        out = flash_attention(
+            q, new_cache["k"], new_cache["v"],
+            q_pos=pos, kv_pos=kv_pos, kv_valid=kv_pos >= 0,
+            causal=causal, window=window, softcap=cfg.attn_softcap, impl="ref")
+
+    out = out.reshape(B, S, Hq * hdv) @ constrain(p["wo"].astype(dt),
+                                                  "weight_full")
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# apply — MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def _mla_q(p, x, pos, cfg):
+    B, S, _ = x.shape
+    dt = x.dtype
+    H, dn, dr = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    if "wq_a" in p:
+        cq = rmsnorm(x @ p["wq_a"].astype(dt), p["q_norm"])
+        q = jnp.einsum("bsr,rhd->bshd", cq, p["wq_b"].astype(dt))
+    else:
+        q = jnp.einsum("bsD,Dhd->bshd", x, p["wq"].astype(dt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(p, x, pos, cfg):
+    dt = x.dtype
+    kvr, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    ckv_full = x @ p["wkv_a"].astype(dt)
+    ckv = rmsnorm(ckv_full[..., :kvr], p["kv_norm"])
+    kr = ckv_full[..., kvr:]
+    kr = apply_rope(kr[:, :, None, :], pos, cfg.rope_theta)[:, :, 0, :]
+    return ckv, kr
+
+
+def apply_mla(p, x, *, cfg, mode, pos, cache=None, impl="auto", kv_cap: int = 0):
+    """MLA self-attention.  train/prefill: naive expanded path; decode:
+    absorbed latent-space path (the serving memory-traffic optimisation the
+    paper's MQA discussion anticipates, §3.2)."""
+    B, S, D = x.shape
+    dt = x.dtype
+    H, dn, dr, dv = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    scale = (dn + dr) ** -0.5
+
+    q_nope, q_rope = _mla_q(p, x, pos, cfg)
+    ckv, kr = _mla_kv_latent(p, x, pos, cfg)
+
+    if mode in ("train", "prefill"):
+        kv = jnp.einsum("bsr,rhd->bshd", ckv, p["wkv_b"].astype(dt))
+        kv = constrain(kv, "kv_heads")
+        k_nope, v = kv[..., :dn], kv[..., dn:]
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(kr[:, :, None, :], (B, S, H, dr))], -1)
+        k = constrain(k, "kv_heads")
+        v = constrain(v, "kv_heads")
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        q = constrain(q, "act_heads")
+        out = flash_attention(q, k, v, causal=True, scale=scale, impl=impl)
+        new_cache = None
+        if mode == "prefill":
+            cap = max(kv_cap, S)
+            new_cache = {"ckv": _pad_cache(ckv, cap), "kr": _pad_cache(kr, cap),
+                         "pos": _pad_pos(pos, cap)}
+    else:  # decode — absorbed
+        bidx = jnp.arange(B)
+        slot = pos[:, 0]
+        new_cache = {
+            "ckv": cache["ckv"].at[bidx, slot].set(ckv[:, 0]),
+            "kr": cache["kr"].at[bidx, slot].set(kr[:, 0]),
+            "pos": cache["pos"].at[bidx, slot].set(pos[:, 0]),
+        }
+        ckv_all, kr_all, kv_pos = new_cache["ckv"], new_cache["kr"], new_cache["pos"]
+        w_uk = p["wkv_b"][..., :dn].astype(dt)        # (kvr, H, dn)
+        w_uv = p["wkv_b"][..., dn:].astype(dt)        # (kvr, H, dv)
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+        logits = (jnp.einsum("bqhr,bkr->bhqk", q_lat.astype(jnp.float32),
+                             ckv_all.astype(jnp.float32))
+                  + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                               kr_all.astype(jnp.float32))) * scale
+        mask = (kv_pos[:, None, None, :] <= pos[:, None, :, None]) & \
+               (kv_pos >= 0)[:, None, None, :]
+        logits = jnp.where(mask, logits, -0.7 * float(jnp.finfo(jnp.float32).max))
+        w = jax.nn.softmax(logits, axis=-1).astype(dt)
+        ctx = jnp.einsum("bhqk,bkr->bqhr", w, ckv_all)
+        out = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv)
+
+    out = out.reshape(B, S, H * dv) @ p["wo"].astype(dt)
+    return out, new_cache

@@ -1,0 +1,90 @@
+"""Griffin / RecurrentGemma recurrent block: conv + RG-LRU linear recurrence.
+
+Dynamic-state kernel per the paper's own classification criterion (§3.1):
+its state changes every token, so it belongs on the SM plane, never on PIM.
+Train/prefill use a log-depth ``associative_scan``; decode is the O(1)
+recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import dense_init
+from repro.models.ssm import causal_conv
+from repro.parallel import constrain
+
+_C = 8.0  # RG-LRU temperature (Griffin paper)
+
+
+def init_rglru(key, cfg, *, dtype=jnp.float32):
+    D, W = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    # Λ init so a = exp(-c·softplus(Λ)·r) lands in ~(0.9, 0.999) at r≈0.5
+    lam0 = jax.random.uniform(ks[4], (W,), jnp.float32, 0.2, 0.9)
+    return {
+        "w_gate": dense_init(ks[0], (D, W), dtype),           # GeLU branch
+        "w_branch": dense_init(ks[1], (D, W), dtype),         # recurrent branch
+        "conv_w": dense_init(ks[5], (cfg.conv_width, W), jnp.float32,
+                             fan_in=cfg.conv_width),
+        "conv_b": jnp.zeros((W,), jnp.float32),
+        "wa": dense_init(ks[2], (W, W), jnp.float32),         # recurrence gate
+        "ba": jnp.zeros((W,), jnp.float32),
+        "wi": dense_init(ks[3], (W, W), jnp.float32),         # input gate
+        "bi": jnp.zeros((W,), jnp.float32),
+        "lam": lam0,
+        "w_out": dense_init(jax.random.fold_in(key, 7), (W, D), dtype, fan_in=W),
+    }
+
+
+def init_rglru_cache(cfg, batch, dtype):
+    W = cfg.lru_width
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, W), dtype),
+        "h": jnp.zeros((batch, W), jnp.float32),
+    }
+
+
+def _rglru_core(u, p):
+    """u (B, S, W) -> (a (B,S,W) f32, b (B,S,W) f32): h_t = a_t h_{t-1} + b_t."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(uf @ p["wi"] + p["bi"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i * uf)
+    return a, b
+
+
+def apply_rglru(p, x, *, cfg, mode, cache=None):
+    """x (B, S, D) -> (y, new_cache)."""
+    B, S, D = x.shape
+    dt = x.dtype
+
+    g = jax.nn.gelu(x @ p["w_gate"].astype(dt), approximate=True)
+    u = x @ p["w_branch"].astype(dt)
+    conv_state = cache["conv"] if cache is not None and mode == "decode" else None
+    u, new_conv = causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    u = constrain(u, "act_ff")
+
+    a, b = _rglru_core(u, p)
+
+    if mode == "decode":
+        h = a[:, 0] * cache["h"] + b[:, 0]                    # (B, W)
+        hs = h[:, None]
+        new_cache = {"conv": new_conv, "h": h}
+    else:
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        a_sc, b_sc = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = b_sc  # zero initial state: h_t = (scanned b)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": new_conv, "h": hs[:, -1]}
+
+    y = (g * hs.astype(dt)) @ p["w_out"].astype(dt)
+    return y, new_cache

@@ -1,0 +1,199 @@
+"""Mamba-2 SSD (state-space duality) block — chunked scan + decode recurrence.
+
+The attention plane of the paper is inapplicable here (no QKᵀ kernel); the
+paper's *criterion* still maps: the SSD state is a dynamic operand (SM
+plane), the in/out projections are static weight-stationary MVMs (ReRAM
+plane).  See DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import dense_init, rmsnorm
+from repro.parallel import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (width w) with optional streaming state
+# ---------------------------------------------------------------------------
+
+def causal_conv(x, w, b, state=None):
+    """x (B, S, C); w (W, C); state (B, W-1, C) or None -> (y, new_state)."""
+    B, S, C = x.shape
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((B, W - 1, C), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+W-1, C)
+    y = sum(xp[:, i:i + S] * w[i].astype(x.dtype) for i in range(W))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    new_state = xp[:, S:]                              # last W-1 inputs
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (Dao & Gu 2024, alg. 1 — pure jnp)
+# ---------------------------------------------------------------------------
+
+def _segsum(x):
+    """x (..., q) -> (..., q, q): ss[i, j] = sum_{j<t<=i} x[t], -inf above diag."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, d, NEG_INF)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int, init_state=None):
+    """Chunked SSD.
+
+    x (b, l, h, p); dt (b, l, h) f32 (post-softplus); A (h,) f32 (negative);
+    Bm, Cm (b, l, g, n).  Returns (y (b, l, h, p), final_state (b, h, p, n)).
+    """
+    b, l, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    if l % chunk:
+        chunk = l  # tiny sequences: single chunk
+    nc = l // chunk
+
+    xf = (x.astype(jnp.float32) * dt[..., None]).reshape(b, nc, chunk, h, p)
+    dA = (dt * A).reshape(b, nc, chunk, h)                     # (b,c,q,h)
+    Bc = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2).reshape(b, nc, chunk, h, n)
+    Cc = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2).reshape(b, nc, chunk, h, n)
+
+    dA_h = dA.transpose(0, 3, 1, 2)                            # (b,h,c,q)
+    dA_cs = jnp.cumsum(dA_h, axis=-1)                          # (b,h,c,q)
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(dA_h))                                 # (b,h,c,q,q)
+    scores = jnp.einsum("bcqhn,bckhn->bhcqk", Cc, Bc)
+    y_diag = jnp.einsum("bhcqk,bhcqk,bckhp->bcqhp", scores, L, xf)
+
+    # 2. per-chunk final states
+    decay = jnp.exp(dA_cs[..., -1:] - dA_cs)                   # (b,h,c,q)
+    states = jnp.einsum("bckhn,bhck,bckhp->bchpn", Bc, decay, xf)
+
+    # 3. inter-chunk recurrence over the nc chunk states
+    chunk_decay = jnp.exp(dA_cs[..., -1])                      # (b,h,c)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, xs):
+        st, cd = xs                                            # (b,h,p,n), (b,h)
+        new = carry * cd[..., None, None] + st
+        return new, carry                                      # emit state *before* chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # (b,c,h,p,n)
+
+    # 4. inter-chunk contribution
+    state_decay = jnp.exp(dA_cs)                               # (b,h,c,q)
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_step(x, dt, A, Bm, Cm, state):
+    """Single-token recurrence.  x (b,h,p); dt (b,h); Bm/Cm (b,g,n);
+    state (b,h,p,n) f32 -> (y (b,h,p), new_state)."""
+    b, h, p = x.shape
+    g = Bm.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)       # (b,h,n)
+    Ch = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+    dA = jnp.exp(dt * A)                                       # (b,h)
+    xs = (x.astype(jnp.float32) * dt[..., None])               # (b,h,p)
+    new_state = state * dA[..., None, None] + xs[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# the mamba2 block
+# ---------------------------------------------------------------------------
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    return d_inner, H, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+
+
+def init_mamba(key, cfg, *, dtype=jnp.float32):
+    d_inner, H, P, N, G = _dims(cfg)
+    conv_ch = d_inner + 2 * G * N
+    d_in = 2 * d_inner + 2 * G * N + H
+    ks = jax.random.split(key, 4)
+    dt0 = jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32)
+                  * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, d_in), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, conv_ch), jnp.float32,
+                             fan_in=cfg.conv_width),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt0)),                     # inv-softplus
+        "norm": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[3], (d_inner, cfg.d_model), dtype, fan_in=d_inner),
+    }
+
+
+def init_ssm_cache(cfg, batch, dtype):
+    d_inner, H, P, N, G = _dims(cfg)
+    conv_ch = d_inner + 2 * G * N
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def apply_mamba(p, x, *, cfg, mode, cache=None):
+    """x (B, S, D) -> (y, new_cache)."""
+    B, S, D = x.shape
+    d_inner, H, P, N, G = _dims(cfg)
+    dt_x = x.dtype
+
+    zxbcdt = x @ p["in_proj"].astype(dt_x)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:2 * d_inner + 2 * G * N]
+    dt_raw = zxbcdt[..., -H:]
+
+    conv_state = cache["conv"] if cache is not None and mode == "decode" else None
+    xBC, new_conv = causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+
+    x_ssm = xBC[..., :d_inner].reshape(B, S, H, P)
+    Bm = xBC[..., d_inner:d_inner + G * N].reshape(B, S, G, N)
+    Cm = xBC[..., d_inner + G * N:].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if mode == "decode":
+        y, new_state = ssd_step(x_ssm[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0],
+                                cache["state"])
+        y = y[:, None]
+        new_cache = {"conv": new_conv, "state": new_state}
+    else:
+        init_state = None
+        y, final_state = ssd_scan(x_ssm, dt, A, Bm, Cm, chunk=cfg.ssm_chunk,
+                                  init_state=init_state)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": new_conv, "state": final_state}
+
+    y = y + x_ssm * p["D"][None, None, :, None].astype(dt_x)
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    y = constrain(y, "act_ff")
+    return y @ p["out_proj"].astype(dt_x), new_cache

@@ -1,0 +1,1 @@
+from repro.parallel.api import activate_plan, constrain, current_plan  # noqa: F401

@@ -1,0 +1,71 @@
+"""Sharding-constraint injection for the model library.
+
+Models are written as pure functions that mark *logical* tensor roles
+(``residual``, ``act_ff``, ``expert_buf`` …) via :func:`constrain`.  A
+:class:`Plan` — built per (arch × shape × mesh) by
+:mod:`repro.parallel.sharding` — maps those roles to concrete
+``PartitionSpec``s.  With no active plan every call is a no-op, so the same
+model code runs unsharded on one CPU device (smoke tests) and fully sharded
+on the 512-device dry-run mesh.
+
+This is the software form of the paper's heterogeneous kernel→chiplet
+mapping: the *role* of a tensor (dynamic attention operand vs. static
+weight-stationary FFN operand) decides its placement, not the module that
+computed it.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class Plan:
+    """A named-role → PartitionSpec table bound to a mesh."""
+
+    mesh: Mesh
+    roles: dict[str, P]
+    # param-path regex → PartitionSpec rules (used by sharding.py, kept here
+    # so a Plan is a self-contained description of one mapping)
+    param_rules: tuple[tuple[str, P], ...] = ()
+    name: str = ""
+
+    def spec(self, role: str) -> Optional[P]:
+        return self.roles.get(role)
+
+    def sharding(self, role: str) -> Optional[NamedSharding]:
+        s = self.roles.get(role)
+        return None if s is None else NamedSharding(self.mesh, s)
+
+
+_tls = threading.local()
+
+
+def current_plan() -> Optional[Plan]:
+    return getattr(_tls, "plan", None)
+
+
+@contextlib.contextmanager
+def activate_plan(plan: Optional[Plan]):
+    prev = current_plan()
+    _tls.plan = plan
+    try:
+        yield plan
+    finally:
+        _tls.plan = prev
+
+
+def constrain(x: jax.Array, role: str) -> jax.Array:
+    """Attach the active plan's sharding for ``role`` (no-op without plan)."""
+    plan = current_plan()
+    if plan is None:
+        return x
+    spec = plan.spec(role)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(plan.mesh, spec))

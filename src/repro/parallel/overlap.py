@@ -1,0 +1,101 @@
+"""Compute/communication overlap: ring collective-matmul via shard_map.
+
+The paper hides NoI traffic under compute by pipelining the ReRAM macro
+and overlapping MHA with FF (§4.2).  The TPU-native analogue is the
+*collective matmul*: a bulk ``all_gather(x)`` followed by the matmul
+serialises wire time; instead each device matmuls the shard it currently
+holds while ``ppermute``-ing shards around the ring, so the DMA of shard
+i+1 is hidden under the dot of shard i (XLA schedules ppermute sends
+asynchronously).  Ring steps are a *static* python loop — G is a mesh
+constant — so the HLO contains exactly G dots and G-1 collective-permutes
+and the scheduler can software-pipeline them.
+
+Two patterns, matching the paper's two FF streaming directions:
+- ``allgather_matmul``   — up-projection: gather sequence-sharded
+  activations into the weight-stationary plane ("MC → ReRAM-macro head");
+- ``reduce_scatter_matmul`` — down-projection: partial sums ring-reduced
+  back out ("ReRAM-macro tail → MC").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def allgather_matmul(x, w, mesh: Mesh, axis: str = "model"):
+    """y = all_gather(x, axis) @ w, ring-overlapped.
+
+    x: (m, k) sharded on dim 0 over ``axis``; w: (k, n) replicated.
+    Returns y = x_full @ w, replicated over ``axis`` (all-gather
+    semantics: every device ends with every row's output).
+    """
+    G = mesh.shape[axis]
+
+    def body(x_blk, w_full):
+        idx = jax.lax.axis_index(axis)
+        m_l, n = x_blk.shape[0], w_full.shape[1]
+        out = jnp.zeros((G, m_l, n), x_blk.dtype)
+        blk = x_blk
+        for i in range(G):
+            src = (idx + i) % G              # global block id currently held
+            y = blk @ w_full                 # compute this shard's rows
+            out = jax.lax.dynamic_update_slice(out, y[None], (src, 0, 0))
+            if i < G - 1:                    # move shards while dot i+1 runs
+                blk = jax.lax.ppermute(
+                    blk, axis, [(j, (j - 1) % G) for j in range(G)])
+        return out.reshape(G * m_l, n)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis, None), P(None, None)),
+        out_specs=P(None, None),
+        check_rep=False,
+    )(x, w)
+
+
+def reduce_scatter_matmul(x, w, mesh: Mesh, axis: str = "model"):
+    """y = reduce_scatter(x @ w) — contraction split over ``axis``.
+
+    x: (m, k) sharded on dim 1 (k) over ``axis``; w: (k, n) sharded on
+    dim 0 (k).  Each device computes partial sums x_loc @ w_loc and the
+    ring reduce-scatter accumulates them so device d ends with output
+    rows [d·m/G, (d+1)·m/G) fully summed — each partial dot overlapping
+    the previous accumulator hop.
+    """
+    G = mesh.shape[axis]
+
+    def body(x_blk, w_blk):
+        # x_blk: (m, k/G), w_blk: (k/G, n)
+        idx = jax.lax.axis_index(axis)
+        m = x_blk.shape[0]
+        m_l = m // G
+        k_l = x_blk.shape[1]
+        n = w_blk.shape[1]
+        acc = jnp.zeros((m_l, n), jnp.float32)
+        for i in range(G):
+            c = (idx + 1 + i) % G            # row-chunk computed this step
+            rows = jax.lax.dynamic_slice(x_blk, (c * m_l, 0), (m_l, k_l))
+            acc = acc + (rows @ w_blk).astype(jnp.float32)
+            if i < G - 1:                    # hand the accumulator upstream
+                acc = jax.lax.ppermute(
+                    acc, axis, [(j, (j - 1) % G) for j in range(G)])
+        return acc.astype(x_blk.dtype)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, axis), P(axis, None)),
+        out_specs=P(axis, None),
+        check_rep=False,
+    )(x, w)
+
+
+# -- oracles for tests ---------------------------------------------------------
+
+def allgather_matmul_ref(x, w):
+    return x @ w
+
+
+def reduce_scatter_matmul_ref(x, w):
+    return x @ w

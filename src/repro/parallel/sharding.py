@@ -1,0 +1,378 @@
+"""Per-kernel-class sharding plans — the paper's heterogeneous mapping on TPU.
+
+The paper assigns each transformer kernel class to the substrate matching
+its operand-update behaviour (§3.1): dynamic attention operands → SM/MC/DRAM
+plane; static weight-stationary FFN/embedding → ReRAM macro.  On a
+homogeneous TPU mesh the same classification decides *placement*:
+
+  kernel class        paper substrate     TPU placement (this module)
+  ------------------  ------------------  -----------------------------------
+  QKV/score/PV        SM cluster + HBM    activations head-sharded over
+                                          ``model`` ("SM cluster" axis group)
+  FFN / experts       ReRAM macro (SFC)   weights stationary, f-dim sharded
+                                          over ``model``; experts → EP
+  embedding/LM head   ReRAM (one-time)    vocab-sharded over ``model``
+  residual stream     NoI traffic         sequence-sharded over ``model``
+                                          (SP) in train/prefill
+  batch/grad sync     —                   ``data`` (+``pod``) axes: FSDP + DP
+
+Plans are pure data (role → PartitionSpec + param-path rules), so the
+dry-run, trainer and server all consume the same object.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeSpec
+from repro.parallel.api import Plan
+
+# serving: params go 2-D (model × data) above this per-device budget for
+# pure-TP bf16 weights
+_TP_ONLY_BYTES = 6 << 30
+
+
+def _div(n: int, mesh: Mesh, axis) -> bool:
+    """True if dim of size n is divisible by the mesh axis (or axis tuple)."""
+    if axis is None:
+        return True
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= mesh.shape[a]
+    return n > 0 and n % size == 0
+
+
+def _maybe(n: int, mesh: Mesh, axis):
+    return axis if _div(n, mesh, axis) else None
+
+
+@dataclasses.dataclass
+class PlanContext:
+    cfg: ModelConfig
+    shape: ShapeSpec
+    mesh: Mesh
+    fsdp: Optional[str]        # axis for weight sharding on the d_model dim
+    dp: tuple[str, ...]        # batch axes
+    seq_axis: Optional[str]    # SP axis for the residual stream (train/prefill)
+
+
+def _plan_context(cfg, shape, mesh, *, mode) -> PlanContext:
+    multi_pod = "pod" in mesh.shape
+    if mode == "train":
+        dp = ("pod", "data") if multi_pod else ("data",)
+        # ZeRO/FSDP spans every batch axis — with pod-replicated params a
+        # 512-chip job carries the same optimizer state per chip as a
+        # 256-chip one (measured +5.5 GiB/chip on deepseek-v2 train multi)
+        fsdp = ("pod", "data") if multi_pod else "data"
+        seq_axis = "model" if shape.seq_len % mesh.shape["model"] == 0 else None
+    elif mode == "prefill":
+        dp = ("pod", "data") if multi_pod else ("data",)
+        fsdp = _serving_fsdp(cfg, mesh)
+        seq_axis = "model" if shape.seq_len % mesh.shape["model"] == 0 else None
+    else:  # decode
+        dp = ()
+        gb = shape.global_batch
+        if multi_pod and gb % (mesh.shape["pod"] * mesh.shape["data"]) == 0:
+            dp = ("pod", "data")
+        elif gb % mesh.shape["data"] == 0:
+            dp = ("data",)
+        fsdp = _serving_fsdp(cfg, mesh)
+        seq_axis = None
+    return PlanContext(cfg, shape, mesh, fsdp, dp, seq_axis)
+
+
+def _serving_fsdp(cfg, mesh) -> Optional[str]:
+    per_dev = 2 * cfg.param_count() / mesh.shape["model"]
+    return "data" if per_dev > _TP_ONLY_BYTES else None
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def param_spec(path: str, shape: tuple[int, ...], ctx: PlanContext) -> P:
+    """PartitionSpec for one parameter, by path + shape.
+
+    Stack params carry a leading scan (repeats) dim — detected via path
+    prefix ``stack/``/``encoder/`` and left unsharded.
+    """
+    cfg, mesh, fsdp = ctx.cfg, ctx.mesh, ctx.fsdp
+    lead: tuple = ()
+    dims = shape
+    if path.startswith(("stack/", "encoder/")):
+        lead = (None,)
+        dims = shape[1:]
+
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    def fs(n):  # fsdp axis if divisible
+        return _maybe(n, mesh, fsdp)
+
+    def mp(n):  # model axis if divisible
+        return _maybe(n, mesh, "model")
+
+    # ---- embeddings -------------------------------------------------------
+    if path == "embed/tok":
+        # d-dim sharded (FSDP); vocab replicated: a vocab-sharded table turns
+        # every token gather into a 2 GiB all-gather inside the scan (XLA
+        # SPMD is conservative with sharded-operand gathers) — measured in
+        # the deepseek train_4k dry-run.  See EXPERIMENTS.md §Perf.
+        return P(None, fs(dims[1]))
+    if path == "embed/pos":
+        return P(None, fs(dims[1]))
+    if path == "lm_head":
+        return P(fs(dims[0]), mp(dims[1]))
+
+    # ---- experts (EP: the ReRAM-macro analogue) ---------------------------
+    if "experts" in path:
+        if name in ("w_gate", "w_up"):        # (E, D, Fe)
+            return P(*lead, mp(dims[0]), fs(dims[1]), None)
+        if name == "w_down":                  # (E, Fe, D)
+            return P(*lead, mp(dims[0]), None, fs(dims[2]))
+    if name == "router":                      # (D, E)
+        return P(*lead, fs(dims[0]), None)
+
+    # ---- attention --------------------------------------------------------
+    if parent in ("attn", "cross") or name in ("wq", "wk", "wv", "wo"):
+        if name == "wq":
+            if len(dims) == 3:                # MLA direct (D, H, dn+dr)
+                return P(*lead, fs(dims[0]), mp(dims[1]), None)
+            return P(*lead, fs(dims[0]), mp(dims[1]))
+        if name in ("wk", "wv"):
+            return P(*lead, fs(dims[0]), mp(dims[1]))
+        if name == "wo":
+            return P(*lead, mp(dims[0]), fs(dims[1]))
+        if name == "wq_a":                    # (D, qr)
+            return P(*lead, fs(dims[0]), None)
+        if name == "wq_b":                    # (qr, H, dn+dr)
+            return P(*lead, None, mp(dims[1]), None)
+        if name == "wkv_a":                   # (D, kvr+dr)
+            return P(*lead, fs(dims[0]), None)
+        if name == "wkv_b":                   # (kvr, H, dn+dv)
+            return P(*lead, None, mp(dims[1]), None)
+        if name in ("bq", "bk", "bv"):
+            return P(*lead, mp(dims[0]))
+
+    # ---- dense MLP (weight-stationary plane) ------------------------------
+    if name in ("w_gate", "w_up"):            # (D, F)
+        return P(*lead, fs(dims[0]), mp(dims[1]))
+    if name == "w_down":                      # (F, D)
+        return P(*lead, mp(dims[0]), fs(dims[1]))
+    if name == "b_up":
+        return P(*lead, mp(dims[0]))
+
+    # ---- mamba2 ------------------------------------------------------------
+    if name == "in_proj":                     # (D, Z)
+        return P(*lead, fs(dims[0]), mp(dims[1]))
+    if name == "out_proj":                    # (di, D)
+        return P(*lead, mp(dims[0]), fs(dims[1]))
+
+    # ---- RG-LRU -------------------------------------------------------------
+    if name in ("w_branch",):                 # (D, W)
+        return P(*lead, fs(dims[0]), mp(dims[1]))
+    if name in ("wa", "wi"):                  # (W, W)
+        return P(*lead, None, mp(dims[1]))
+    if name == "w_out":                       # (W, D)
+        return P(*lead, mp(dims[0]), fs(dims[1]))
+
+    # ---- everything else (norm scales, gates, conv, scalars) --------------
+    return P(*lead, *(None for _ in dims))
+
+
+def params_shardings(param_shapes, ctx: PlanContext):
+    """Pytree of NamedSharding matching a pytree of ShapeDtypeStruct."""
+    flat, tdef = jax.tree_util.tree_flatten_with_path(param_shapes)
+
+    def pathstr(kp):
+        parts = []
+        for p in kp:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    out = [NamedSharding(ctx.mesh, param_spec(pathstr(kp), leaf.shape, ctx))
+           for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(param_shapes), out)
+
+
+# ---------------------------------------------------------------------------
+# activation roles
+# ---------------------------------------------------------------------------
+
+def _roles(ctx: PlanContext, *, mode: str) -> dict[str, P]:
+    cfg, mesh = ctx.cfg, ctx.mesh
+    dp = ctx.dp if ctx.dp else None
+    Hq = cfg.n_heads
+    Hkv = cfg.n_kv_heads
+
+    # Head-parallel attention ("SM cluster" = a model-axis group per head)
+    # only when *both* q and kv head counts divide the axis — otherwise the
+    # GQA head-group reshape forces SPMD full-rematerialisation copies.
+    # Fallback: sequence-parallel q blocks (the FlashAttention partitioning
+    # of the score matrix the paper runs across SM chiplets).
+    heads_ok = _div(Hq, mesh, "model") and _div(Hkv, mesh, "model")
+
+    vocab_ax = _maybe(cfg.vocab_size, mesh, "model")
+    if mode == "decode":
+        if heads_ok:
+            return {
+                "residual": P(dp, None, None),
+                "act_heads": P(dp, None, "model", None),
+                "kv_heads": P(dp, None, "model", None),
+                "act_ff": P(dp, None, "model"),
+                "expert_buf": P(dp, "model", None, None),
+                "expert_hidden": P(dp, "model", None, None),
+                "logits": P(dp, None, vocab_ax),
+            }
+        return {
+            "residual": P(dp, None, None),
+            "act_heads": P(dp, None, None, None),   # q replicated; KV cache
+            "kv_heads": P(dp, None, None, None),    # stays sequence-sharded
+            "act_ff": P(dp, None, "model"),
+            "expert_buf": P(dp, "model", None, None),
+            "expert_hidden": P(dp, "model", None, None),
+            "logits": P(dp, None, vocab_ax),
+        }
+
+    seq = ctx.seq_axis
+    if heads_ok:
+        attn_roles = {
+            "act_heads": P(dp, None, "model", None),
+            "kv_heads": P(dp, None, "model", None),
+        }
+    elif mode == "prefill":
+        # GQA with fewer KV heads than the model axis, forward-only:
+        # REPLICATE K/V over the axis (one ~1e2-MB all-gather per layer)
+        # and keep q sequence-sharded — attention computes shard-locally
+        # with no per-chunk re-gathers (§Perf iteration C1).
+        attn_roles = {
+            "act_heads": P(dp, seq, None, None),
+            "kv_heads": P(dp, None, None, None),
+        }
+    else:
+        # training: K/V replication would be repaid with full dK/dV
+        # all-reduces in backward (measured +252 GiB/dev on gemma2 —
+        # §Perf C1 refuted for train); stay with the Megatron-SP pattern
+        attn_roles = {
+            "act_heads": P(dp, seq, None, None),
+            "kv_heads": P(dp, seq, None, None),
+        }
+    # FFN hidden activations: train uses the Megatron-SP pattern (f-dim
+    # TP-sharded; AG(x)/RS(out) around the block).  Prefill is forward-
+    # only and token-heavy — keep activations sequence-sharded and let
+    # XLA gather the (smaller) layer weights instead: kills the per-layer
+    # full-sequence all-gather + partial-sum all-reduce (§Perf P2:
+    # 3.15 GB → 0.87 GB per layer on gemma3-27b prefill_32k).
+    ff_spec = P(dp, seq, None) if mode == "prefill" else P(dp, None, "model")
+    roles_extra = {}
+    if mode == "prefill":
+        # force the weight-gathered strategy on attention projections too:
+        # without this XLA gathers the (much larger) full-sequence
+        # activations for q/k/v/o instead of the layer weights (§Perf P3)
+        roles_extra["weight_full"] = P(None, None)
+    return {
+        "residual": P(dp, seq, None),
+        **attn_roles,
+        "act_ff": ff_spec,
+        "expert_buf": P(dp, "model", None, None),
+        "expert_hidden": P(dp, "model", None, None),
+        **roles_extra,
+        # unembed boundary: re-gather the (cheap) activations over seq and
+        # shard the (huge) vocab dim instead — keeps the embedding / lm_head
+        # table sharded through fwd AND bwd (no per-microbatch multi-GiB
+        # table all-gathers/all-reduces; measured on gemma2 train_4k).
+        # When the vocab doesn't divide the axis (mamba2 50280, whisper
+        # 51866) stay sequence-sharded: full-seq unsharded logits are worse
+        # than the table gather (measured 3×12.3 GiB on mamba2 train_4k).
+        "pre_logits": P(dp, None, None) if vocab_ax else P(dp, seq, None),
+        "logits": P(dp, None, vocab_ax) if vocab_ax else P(dp, seq, None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# KV-cache shardings
+# ---------------------------------------------------------------------------
+
+def cache_shardings(cache_shapes, ctx: PlanContext):
+    """Shard stacked KV caches: batch → dp, then heads → model if divisible,
+    else sequence → model (long-context single-batch decode shards the
+    sequence across everything available)."""
+    cfg, mesh = ctx.cfg, ctx.mesh
+    dp = ctx.dp if ctx.dp else None
+    B = ctx.shape.global_batch
+
+    def spec(kp, leaf):
+        name = str(getattr(kp[-1], "key", ""))
+        dims = leaf.shape  # (R, B, ...)
+        if name in ("k", "v"):                 # (R, B, S, Hkv, hd)
+            S, H = dims[2], dims[3]
+            if dp is None:
+                # batch unshardable: spread the sequence
+                seq_ax = ("data", "model") if _div(S, mesh, ("data", "model")) \
+                    else _maybe(S, mesh, "data")
+                h_ax = _maybe(H, mesh, "model") if not (
+                    isinstance(seq_ax, tuple)) else None
+                return P(None, None, seq_ax, h_ax, None)
+            h_ax = _maybe(H, mesh, "model")
+            seq_ax = "model" if h_ax is None and _div(S, mesh, "model") else None
+            return P(None, dp, seq_ax, h_ax, None)
+        if name in ("ckv", "kr"):              # (R, B, S, r)
+            S = dims[2]
+            if dp is None:
+                seq_ax = ("data", "model") if _div(S, mesh, ("data", "model")) \
+                    else _maybe(S, mesh, "data")
+                return P(None, None, seq_ax, None)
+            return P(None, dp, _maybe(S, mesh, "model"), None)
+        if name == "pos":                      # (R, B, S)
+            S = dims[2]
+            if dp is None:
+                seq_ax = ("data", "model") if _div(S, mesh, ("data", "model")) \
+                    else _maybe(S, mesh, "data")
+                return P(None, None, seq_ax)
+            return P(None, dp, None)
+        if name == "state":                    # (R, B, H, P, N) ssd state
+            H = dims[2]
+            return P(None, dp, _maybe(H, mesh, "model"), None, None)
+        if name == "conv":                     # (R, B, W-1, C)
+            return P(None, dp, None, _maybe(dims[3], mesh, "model"))
+        if name == "h":                        # (R, B, W) rg-lru state
+            return P(None, dp, _maybe(dims[2], mesh, "model"))
+        return P(*(None for _ in dims))
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = [NamedSharding(ctx.mesh, spec(kp, leaf)) for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(cache_shapes), out)
+
+
+# ---------------------------------------------------------------------------
+# batch shardings + plan assembly
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_shapes, ctx: PlanContext):
+    dp = ctx.dp if ctx.dp else None
+
+    def spec(kp, leaf):
+        nd = len(leaf.shape)
+        return NamedSharding(ctx.mesh, P(dp, *(None,) * (nd - 1)))
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(batch_shapes)
+    out = [spec(kp, leaf) for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(batch_shapes), out)
+
+
+def build_plan(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *, mode: str) -> tuple[Plan, PlanContext]:
+    ctx = _plan_context(cfg, shape, mesh, mode=mode)
+    plan = Plan(mesh=mesh, roles=_roles(ctx, mode=mode),
+                name=f"{cfg.name}:{shape.name}:{mode}")
+    return plan, ctx

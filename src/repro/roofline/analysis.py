@@ -1,0 +1,73 @@
+"""Three-term roofline from the compiled dry-run artifact (§Roofline).
+
+    compute    = HLO_FLOPs   / (chips × peak_FLOP/s)
+    memory     = HLO_bytes   / (chips × HBM_bw)
+    collective = wire_bytes  / (chips × link_bw)
+
+HLO_FLOPs / bytes / wire-bytes come from :mod:`repro.roofline.hlo` (per
+device, loop-corrected); hardware constants are TPU v5e per the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.roofline.hlo import HloCost, analyze_hlo_text
+
+
+@dataclasses.dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops: float        # bf16 FLOP/s per chip
+    hbm_bw: float            # bytes/s per chip
+    ici_bw: float            # bytes/s per link per chip (~busiest-link model)
+    hbm_bytes: float         # capacity per chip
+
+
+V5E = HwSpec(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9,
+             hbm_bytes=16 << 30)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_per_dev: float
+    hbm_bytes_per_dev: float
+    wire_bytes_per_dev: float
+    model_flops: float            # 6·N_active·D tokens (train) / fwd analogue
+    useful_ratio: float           # model_flops / (hlo_flops × devices)
+    bottleneck: str = ""
+    step_s: float = 0.0           # max of the three terms (no-overlap bound)
+    roofline_frac: float = 0.0    # compute_s / step_s (1.0 = compute-bound)
+
+    def finalize(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        self.step_s = max(terms.values())
+        self.roofline_frac = (self.compute_s / self.step_s) if self.step_s else 0.0
+        return self
+
+
+def roofline_terms(hlo_text: str, *, arch: str, shape: str, mesh_name: str,
+                   n_devices: int, model_flops: float,
+                   hw: HwSpec = V5E) -> RooflineReport:
+    cost: HloCost = analyze_hlo_text(hlo_text, num_devices=n_devices)
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        compute_s=cost.flops / hw.peak_flops,
+        memory_s=cost.bytes_hbm / hw.hbm_bw,
+        collective_s=cost.total_collective_bytes / hw.ici_bw,
+        hlo_flops_per_dev=cost.flops,
+        hbm_bytes_per_dev=cost.bytes_hbm,
+        wire_bytes_per_dev=cost.total_collective_bytes,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / (cost.flops * n_devices)
+                      if cost.flops else 0.0),
+    )
+    return rep.finalize()

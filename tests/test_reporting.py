@@ -1,0 +1,49 @@
+"""The reporting/perf tooling is load-bearing for EXPERIMENTS.md — test it."""
+import os
+
+import pytest
+
+from conftest import REPO
+
+DRYRUN = os.path.join(REPO, "experiments", "dryrun")
+HLO = os.path.join(DRYRUN, "gemma3-27b__prefill_32k__single.hlo.txt")
+
+
+@pytest.mark.skipif(not os.path.isdir(DRYRUN), reason="no dry-run results")
+def test_report_tables_generate():
+    from benchmarks.report import dryrun_table, load, roofline_table, summary
+
+    recs = load()
+    assert len(recs) == 80
+    s = summary(recs)
+    assert "80" in s
+    t = dryrun_table(recs)
+    assert t.count("\n") >= 80
+    r = roofline_table(recs)
+    assert "compute_s" in r
+
+
+@pytest.mark.skipif(not os.path.exists(HLO), reason="no saved HLO")
+def test_flash_adjust_reduces_memory_term():
+    from benchmarks.perf_flash_adjust import run
+
+    out = run("gemma3-27b", "prefill_32k", "single", verbose=False)
+    assert out["memory_s_flash"] < out["memory_s_ref"]
+    assert out["score_class_gib"] > 0
+    assert out["speedup"] >= 1.0
+    assert out["step_s_flash"] <= out["step_s_ref"]
+
+
+def test_cpu_promotion_detector_on_synthetic_hlo():
+    from repro.roofline.hlo import cpu_bf16_promotion_bytes_serving
+
+    hlo = """
+HloModule t
+
+ENTRY %main (p: bf16[4096,8192]) -> f32[4096,8192] {
+  %p = bf16[4096,8192]{1,0} parameter(0)
+  ROOT %c = f32[4096,8192]{1,0} convert(%p)
+}
+"""
+    b = cpu_bf16_promotion_bytes_serving(hlo)
+    assert b == 4096 * 8192 * 4

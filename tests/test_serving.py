@@ -1,0 +1,115 @@
+"""Serving engine: continuous batching, slot reuse, decode==teacher-forced
+consistency, stats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduce_config
+from repro.models import transformer as T
+from repro.serving.engine import EngineConfig, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduce_config(get_config("qwen2.5-3b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(0),
+                           param_dtype=jnp.float32)
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    defaults = dict(max_batch=3, kv_len=48, max_new_tokens=6, impl="ref")
+    defaults.update(kw)
+    return ServingEngine(cfg, params, EngineConfig(**defaults))
+
+
+def test_engine_drains_all_requests(small_model):
+    cfg, params = small_model
+    eng = _engine(cfg, params)
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size, size=8))
+            for _ in range(7)]
+    done = eng.run_until_drained()
+    assert len(done) == 7
+    assert all(r.done and len(r.output) == 6 for r in reqs)
+
+
+def test_continuous_batching_reuses_slots(small_model):
+    """More requests than slots: the engine must cycle slots (finished →
+    freed → re-admitted) rather than waiting for a full drain."""
+    cfg, params = small_model
+    eng = _engine(cfg, params, max_batch=2)
+    rng = np.random.default_rng(1)
+    for _ in range(5):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=4))
+    live_trace = []
+    while eng.queue or any(r is not None for r in eng.slot_req):
+        live_trace.append(eng.step())
+    assert len(eng.finished) == 5
+    assert max(live_trace) <= 2                 # never exceeds the pool
+    assert sum(1 for x in live_trace if x == 2) >= 2  # pool actually shared
+
+
+def test_greedy_decode_matches_teacher_forcing(small_model):
+    """Engine greedy outputs == argmax chain from repeated full forwards."""
+    cfg, params = small_model
+    prompt = np.asarray([5, 9, 2, 7], np.int32)
+    eng = _engine(cfg, params, max_batch=1, max_new_tokens=5)
+    eng.submit(prompt)
+    eng.run_until_drained()
+    got = eng.finished[0].output
+
+    toks = list(prompt)
+    want = []
+    for _ in range(5):
+        logits, _ = T.prefill(params, cfg,
+                              {"tokens": jnp.asarray([toks], jnp.int32)},
+                              kv_cap=48, compute_dtype=jnp.bfloat16)
+        nxt = int(jnp.argmax(logits[0]))
+        want.append(nxt)
+        toks.append(nxt)
+    assert got == want, (got, want)
+
+
+def test_prompt_too_long_rejected(small_model):
+    cfg, params = small_model
+    eng = _engine(cfg, params, kv_len=16)
+    eng.submit(np.arange(20) % cfg.vocab_size)
+    with pytest.raises(ValueError, match="kv_len"):
+        eng.step()
+
+
+def test_stats(small_model):
+    cfg, params = small_model
+    eng = _engine(cfg, params)
+    eng.submit(np.asarray([1, 2, 3]))
+    eng.run_until_drained()
+    s = eng.stats()
+    assert s["finished"] == 1
+    assert s["tokens"] == 6
+    assert s["tokens_per_s"] > 0
+    assert s["mean_ttft_s"] <= s["mean_latency_s"]
+
+
+def test_temperature_sampling_varies(small_model):
+    cfg, params = small_model
+    outs = set()
+    for seed in range(3):
+        eng = _engine(cfg, params, temperature=5.0, seed=seed, max_batch=1)
+        eng.submit(np.asarray([1, 2, 3]))
+        eng.run_until_drained()
+        outs.add(tuple(eng.finished[0].output))
+    assert len(outs) > 1
+
+
+def test_moe_arch_serves(small_model):
+    cfg = reduce_config(get_config("qwen3-moe-30b-a3b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(1),
+                           param_dtype=jnp.float32)
+    eng = _engine(cfg, params, max_batch=2, max_new_tokens=4)
+    eng.submit(np.asarray([1, 2, 3, 4]))
+    eng.submit(np.asarray([4, 3, 2, 1]))
+    done = eng.run_until_drained()
+    assert len(done) == 2
+    assert all(len(r.output) == 4 for r in done)

@@ -1,0 +1,212 @@
+"""Plane-B validation against the paper's own claims (§4, Figs 8-11,
+Table 4).  Anything fitted is checked at its anchor; everything else is
+checked as an *emergent* trend."""
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.core.baselines import (retransformer_endurance,
+                                  simulate_haima_chiplet,
+                                  simulate_transpim_chiplet)
+from repro.core.simulator import ANCHORS, CALIB, simulate_2p5d_hi
+from repro.core.traffic import Workload
+
+
+def _w(arch, n):
+    return Workload.from_config(get_config(arch), seq_len=n)
+
+
+# ---------------------------------------------------------------------------
+# Table 4 anchors (fitted — must be tight)
+# ---------------------------------------------------------------------------
+
+def test_table4_anchor_hi_bert():
+    r = simulate_2p5d_hi(_w("bert-base", 64), 36)
+    assert abs(np.log(r.latency_s * 1e3 / 50.0)) < 0.15   # ±15%
+
+
+def test_table4_anchor_hi_gptj():
+    r = simulate_2p5d_hi(_w("gpt-j", 64), 100)
+    assert abs(np.log(r.latency_s * 1e3 / 143.0)) < 0.15
+
+
+@pytest.mark.parametrize("fn,rows", [
+    (simulate_haima_chiplet, ANCHORS["HAIMA_chiplet"]),
+    (simulate_transpim_chiplet, ANCHORS["TransPIM_chiplet"]),
+])
+def test_table4_anchor_baselines(fn, rows):
+    for arch, n, chips, target in rows:
+        r = fn(_w(arch, n), chips)
+        assert abs(np.log(r.latency_s * 1e3 / target)) < 0.02, (arch, chips)
+
+
+# ---------------------------------------------------------------------------
+# Fig 8: per-kernel latency, 36 chiplets — HI wins every kernel; FF largest
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [64, 256])
+def test_fig8_per_kernel_ordering(n):
+    w = _w("bert-base", n)
+    hi = simulate_2p5d_hi(w, 36)
+    ha = simulate_haima_chiplet(w, 36)
+    tp = simulate_transpim_chiplet(w, 36)
+    gains = {}
+    for k in ("embed", "kqv", "score", "ff"):
+        assert hi.per_kernel_s[k] < ha.per_kernel_s[k], (k, "HAIMA")
+        assert hi.per_kernel_s[k] < tp.per_kernel_s[k], (k, "TransPIM")
+        gains[k] = min(ha.per_kernel_s[k], tp.per_kernel_s[k]) / hi.per_kernel_s[k]
+    # "the performance gain is maximum for the FF layer" (§4.2)
+    assert gains["ff"] >= max(gains["kqv"], gains["embed"]), gains
+
+
+def test_fig8_haima_beats_transpim_on_score_only():
+    """'HAIMA outperforms TransPIM in score computation' but loses overall
+    at 36 chiplets (§4.2)."""
+    w = _w("bert-base", 64)
+    ha = simulate_haima_chiplet(w, 36)
+    tp = simulate_transpim_chiplet(w, 36)
+    assert ha.per_kernel_s["score"] < tp.per_kernel_s["score"]
+    assert tp.latency_s < ha.latency_s
+
+
+# ---------------------------------------------------------------------------
+# Fig 9/10: scalability claims
+# ---------------------------------------------------------------------------
+
+def test_fig9_gain_grows_with_seq_len():
+    """TransPIM-relative gain grows with N (the paper's 4.6→5.45 trend)."""
+    gains = []
+    for n in (64, 4096):
+        w = _w("bart-large", n)
+        hi = simulate_2p5d_hi(w, 64)
+        tp = simulate_transpim_chiplet(w, 64)
+        gains.append(tp.latency_s / hi.latency_s)
+    assert gains[1] > gains[0], gains
+
+
+def test_fig10_headline_gains():
+    """'up to 11.8× latency and 2.36× lower energy' vs chiplet baselines —
+    our max must land in the same regime (8–14× latency, ≥2× energy)."""
+    best_lat, best_en = 0.0, 0.0
+    for arch in ("gpt-j", "llama2-7b"):
+        for n in (64, 256, 1024, 4096):
+            w = _w(arch, n)
+            hi = simulate_2p5d_hi(w, 100)
+            for fn in (simulate_haima_chiplet, simulate_transpim_chiplet):
+                b = fn(w, 100)
+                best_lat = max(best_lat, b.latency_s / hi.latency_s)
+                best_en = max(best_en, b.energy_j / hi.energy_j)
+    assert 8.0 <= best_lat <= 14.0, best_lat
+    assert best_en >= 2.0, best_en
+
+
+def test_fig10_crossover_at_scale():
+    """Table 4 @100 chiplets: HAIMA_chiplet (975) beats TransPIM_chiplet
+    (1435) on GPT-J — the ordering flips vs the 36-chiplet BERT row."""
+    w36, w100 = _w("bert-base", 64), _w("gpt-j", 64)
+    assert (simulate_transpim_chiplet(w36, 36).latency_s
+            < simulate_haima_chiplet(w36, 36).latency_s)
+    assert (simulate_haima_chiplet(w100, 100).latency_s
+            < simulate_transpim_chiplet(w100, 100).latency_s)
+
+
+def test_fig10_originals_much_worse():
+    """'up to 38× vs the original TransPIM and HAIMA' (§4.2)."""
+    w = _w("gpt-j", 64)
+    hi = simulate_2p5d_hi(w, 100)
+    ho = simulate_haima_chiplet(w, 100, chiplet=False)
+    to = simulate_transpim_chiplet(w, 100, chiplet=False)
+    best = max(ho.latency_s, to.latency_s) / hi.latency_s
+    assert 25.0 <= best <= 50.0, best
+    # originals are strictly worse than their chiplet redesigns
+    assert ho.latency_s > simulate_haima_chiplet(w, 100).latency_s
+    assert to.latency_s > simulate_transpim_chiplet(w, 100).latency_s
+
+
+def test_model_scalability_bigger_systems_faster():
+    """2.5D-HI: the same workload runs faster on a bigger chiplet system."""
+    w = _w("bert-large", 256)
+    l36 = simulate_2p5d_hi(w, 36).latency_s
+    l64 = simulate_2p5d_hi(w, 64).latency_s
+    l100 = simulate_2p5d_hi(w, 100).latency_s
+    assert l100 < l64 < l36
+
+
+# ---------------------------------------------------------------------------
+# §4.4 ReTransformer endurance
+# ---------------------------------------------------------------------------
+
+def test_endurance_matches_paper_orders():
+    """'~1e7 writes per cell per token … 1e10 per encoder at N=4096' and
+    infeasibility vs the ~1e8 endurance bound."""
+    w = _w("bert-base", 4096)
+    rep = retransformer_endurance(w)
+    assert not rep.feasible
+    assert rep.writes_per_encoder > 1e8
+    w64 = _w("bert-base", 64)
+    rep64 = retransformer_endurance(w64)
+    assert rep64.writes_per_cell_per_token > 1e4  # grows to 1e7 at long N
+
+
+# ---------------------------------------------------------------------------
+# Fig 11: thermal
+# ---------------------------------------------------------------------------
+
+def test_fig11_baseline_stacks_exceed_dram_limit():
+    """HAIMA/TransPIM 3-D stacks exceed the 95 °C DRAM ceiling (120–131 °C);
+    3D-HI stays feasible."""
+    from repro.core.thermal import baseline_stack_report, hi3d_stack_report
+    for kind in ("haima", "transpim"):
+        rep = baseline_stack_report(kind)
+        assert rep.peak_c > 95.0, kind
+        assert 110.0 < rep.peak_c < 140.0, (kind, rep.peak_c)
+        assert not rep.dram_feasible
+    rep = hi3d_stack_report(36)
+    assert rep.dram_feasible, rep.peak_c
+
+
+def test_fig11_edp_gain():
+    """3D-HI EDP beats HAIMA by ~an order of magnitude at BERT-Large long-N
+    (paper: 14.5× at n=2056)."""
+    w = _w("bert-large", 2056)
+    hi = simulate_2p5d_hi(w, 64)
+    ha = simulate_haima_chiplet(w, 64)
+    assert ha.edp / hi.edp > 5.0
+
+
+# ---------------------------------------------------------------------------
+# internal consistency
+# ---------------------------------------------------------------------------
+
+def test_latency_monotone_in_seq_len():
+    lats = [simulate_2p5d_hi(_w("bert-base", n), 36).latency_s
+            for n in (64, 128, 256, 512)]
+    assert all(b > a for a, b in zip(lats, lats[1:]))
+
+
+def test_energy_positive_and_scales():
+    for arch, chips in (("bert-base", 36), ("gpt-j", 100)):
+        r = simulate_2p5d_hi(_w(arch, 64), chips)
+        assert r.energy_j > 0
+        assert r.edp == pytest.approx(r.latency_s * r.energy_j)
+
+
+def test_mqa_reduces_traffic_and_latency():
+    """MQA (Llama2 per the paper) loads fewer K/V weights → lower kqv time
+    than an MHA variant of the same dims."""
+    mha = Workload(name="x", d_model=4096, n_layers=32, n_heads=32,
+                   n_kv_heads=32, d_ff=11008, vocab=32000, seq_len=256)
+    mqa = Workload(name="x", d_model=4096, n_layers=32, n_heads=32,
+                   n_kv_heads=1, d_ff=11008, vocab=32000, seq_len=256)
+    r_mha = simulate_2p5d_hi(mha, 100)
+    r_mqa = simulate_2p5d_hi(mqa, 100)
+    assert r_mqa.per_kernel_s["kqv"] < r_mha.per_kernel_s["kqv"]
+
+
+def test_parallel_mha_ff_overlaps():
+    """GPT-J's parallel formulation (eq. 9) is no slower than the serialized
+    execution of identical phase times."""
+    w_par = _w("gpt-j", 64)
+    w_ser = Workload(**{**w_par.__dict__, "parallel_mha_ff": False})
+    assert (simulate_2p5d_hi(w_par, 100).latency_s
+            <= simulate_2p5d_hi(w_ser, 100).latency_s + 1e-9)

@@ -1,0 +1,229 @@
+"""Training substrate: data determinism, checkpoint bitwise resume, fault
+injection/retry, preemption, gradient compression, straggler watchdog."""
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SHAPES, ShapeSpec, get_config, reduce_config
+from repro.data.pipeline import DataConfig, LMDataPipeline
+from repro.launch.mesh import small_mesh
+from repro.training import checkpoint as CKPT
+from repro.training.compression import (compress_decompress, compressed_bytes,
+                                        init_error)
+from repro.training.optimizer import OptConfig, adamw_init, adamw_update
+from repro.training.trainer import Trainer, TrainerConfig
+
+SMALL_SHAPE = ShapeSpec("smoke", "train", 16, 4)
+
+
+def _mesh11():
+    return small_mesh(1, 1)
+
+
+def _trainer(tmp_path=None, **kw):
+    cfg = reduce_config(get_config("qwen2.5-3b"))
+    tcfg = TrainerConfig(ckpt_dir=str(tmp_path) if tmp_path else "",
+                         ckpt_every=0, **kw)
+    return Trainer(cfg, SMALL_SHAPE, _mesh11(),
+                   opt_cfg=OptConfig(warmup_steps=2, total_steps=50),
+                   tcfg=tcfg)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_across_constructions():
+    c = DataConfig(vocab_size=97, seq_len=12, global_batch=4, seed=3)
+    a = LMDataPipeline(c).global_batch_at(7)
+    b = LMDataPipeline(c).global_batch_at(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_data_host_sharding_matches_global():
+    """Union of per-host shards == the global batch, independent of host
+    count (the elastic-resume invariant)."""
+    base = dict(vocab_size=101, seq_len=8, global_batch=8, seed=1)
+    full = LMDataPipeline(DataConfig(**base)).global_batch_at(5)["tokens"]
+    for n_hosts in (2, 4):
+        parts = [
+            LMDataPipeline(DataConfig(**base, n_hosts=n_hosts, host_id=h)
+                           ).batch_at(5)["tokens"]
+            for h in range(n_hosts)
+        ]
+        np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_data_steps_differ():
+    c = DataConfig(vocab_size=97, seq_len=12, global_batch=2, seed=0)
+    p = LMDataPipeline(c)
+    assert not np.array_equal(p.global_batch_at(0)["tokens"],
+                              p.global_batch_at(1)["tokens"])
+
+
+def test_data_tokens_in_range():
+    c = DataConfig(vocab_size=33, seq_len=64, global_batch=4)
+    t = LMDataPipeline(c).global_batch_at(0)["tokens"]
+    assert t.min() >= 0 and t.max() < 33
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = adamw_init(params)
+    cfg = OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=100)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(grads, opt, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_adamw_clips_gnorm():
+    params = {"w": jnp.zeros(3)}
+    opt = adamw_init(params)
+    cfg = OptConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+    _, _, m = adamw_update({"w": jnp.full(3, 1e6)}, opt, params, cfg)
+    assert float(m["gnorm"]) > 1e5  # reported raw norm
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_resume_bitwise(tmp_path):
+    t1 = _trainer(tmp_path / "ck")
+    t1.run(3)
+    t1.save()
+    ref = [t1.train_step(t1.pipeline.global_batch_at(t1.step))["loss"]
+           for _ in range(2)]
+
+    t2 = _trainer(tmp_path / "ck")          # restores from LATEST (step 3)
+    assert t2.step == 3
+    got = [t2.train_step(t2.pipeline.global_batch_at(t2.step))["loss"]
+           for _ in range(2)]
+    assert ref == got, (ref, got)           # bitwise identical continuation
+
+
+def test_checkpoint_atomic_latest_pointer(tmp_path):
+    d = str(tmp_path / "ck")
+    params = {"w": np.arange(4, dtype=np.float32)}
+    CKPT.save_checkpoint(d, 1, params=params)
+    CKPT.save_checkpoint(d, 2, params={"w": np.ones(4, np.float32)})
+    assert CKPT.latest_step(d) == 2
+    p, _, meta = CKPT.restore_checkpoint(
+        d, params_template=jax.eval_shape(lambda: {"w": jnp.zeros(4)}))
+    np.testing.assert_array_equal(p["w"], np.ones(4))
+
+
+def test_checkpoint_retention(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in range(6):
+        CKPT.save_checkpoint(d, s, params={"w": np.zeros(1)}, keep=2)
+    dirs = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert dirs == ["step_00000004", "step_00000005"]
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    CKPT.save_checkpoint(d, 0, params={"w": np.zeros((2, 2), np.float32)})
+    with pytest.raises(ValueError):
+        CKPT.restore_checkpoint(
+            d, params_template=jax.eval_shape(lambda: {"w": jnp.zeros((3, 3))}))
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_step_retry_on_transient_failure():
+    t = _trainer(max_retries=2, retry_backoff_s=0.01)
+    calls = {"n": 0}
+
+    def flaky(attempt):
+        calls["n"] += 1
+        if attempt == 0:
+            raise RuntimeError("injected executor fault")
+
+    m = t.train_step(t.pipeline.global_batch_at(0), fault_hook=flaky)
+    assert m["retries"] == 1
+    assert calls["n"] == 2
+    assert t.step == 1
+
+
+def test_step_fails_after_max_retries():
+    t = _trainer(max_retries=1, retry_backoff_s=0.01)
+
+    def always(attempt):
+        raise RuntimeError("hard fault")
+
+    with pytest.raises(RuntimeError, match="failed after"):
+        t.train_step(t.pipeline.global_batch_at(0), fault_hook=always)
+    assert t.step == 0  # nothing committed
+
+
+def test_preemption_triggers_save_and_stop(tmp_path):
+    t = _trainer(tmp_path / "ck")
+    t.tcfg.ckpt_every = 0
+    t.preemption._on_signal(signal.SIGTERM, None)  # simulate delivery
+    out = t.run(10)
+    assert len(out) == 1                      # stopped at the boundary
+    assert CKPT.latest_step(str(tmp_path / "ck")) == 1
+
+
+def test_straggler_watchdog_counts_slow_steps():
+    t = _trainer(slow_step_factor=0.0)        # every step counts as slow
+    t.run(3)
+    assert t.slow_steps >= 1
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_roundtrip_small_error():
+    g = {"a": jnp.linspace(-1, 1, 1000).reshape(10, 100)}
+    out, err = compress_decompress(g)
+    rel = float(jnp.abs(out["a"] - g["a"]).max())
+    assert rel < 1.0 / 127 + 1e-6
+
+
+def test_compression_error_feedback_unbiased():
+    """With error feedback, the running sum of compressed grads converges
+    to the running sum of true grads (bias cancels)."""
+    key = jax.random.PRNGKey(0)
+    true_sum = jnp.zeros(256)
+    comp_sum = jnp.zeros(256)
+    err = None
+    for i in range(50):
+        g = jax.random.normal(jax.random.fold_in(key, i), (256,)) * 0.1
+        cg, err = compress_decompress({"g": g}, {"g": err["g"]} if isinstance(err, dict) else None)
+        err = {"g": err["g"]}
+        true_sum += g
+        comp_sum += cg["g"]
+    # residual bounded by one quantisation step, not growing with steps
+    assert float(jnp.abs(true_sum - comp_sum).max()) < 0.05
+
+
+def test_compression_wire_bytes_4x_smaller():
+    g = {"a": jnp.zeros((1024, 1024), jnp.float32)}
+    assert compressed_bytes(g) < 0.3 * 4 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# trainer end-to-end: loss goes down
+# ---------------------------------------------------------------------------
+
+def test_loss_decreases_over_training():
+    t = _trainer()
+    t.opt_cfg = OptConfig(lr=5e-3, warmup_steps=2, total_steps=40)
+    ms = t.run(25)
+    first = np.mean([m["loss"] for m in ms[:5]])
+    last = np.mean([m["loss"] for m in ms[-5:]])
+    assert last < first - 0.05, (first, last)
