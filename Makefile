@@ -1,0 +1,17 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test verify bench-serving report
+
+test:               ## tier-1 test suite
+	$(PY) -m pytest -x -q
+
+bench-serving:      ## full serving decode benchmark -> experiments/BENCH_serving.json
+	$(PY) -m benchmarks.perf_serving
+
+verify:             ## CI gate: tier-1 tests + serving bench in smoke mode
+	$(PY) -m pytest -x -q
+	$(PY) -m benchmarks.perf_serving --smoke
+
+report:             ## render benchmark/dry-run tables
+	$(PY) -m benchmarks.report

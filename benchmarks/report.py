@@ -91,13 +91,40 @@ def summary(recs) -> str:
     return "\n".join(lines)
 
 
+def serving_table() -> str:
+    """Render experiments/BENCH_serving.json (benchmarks.perf_serving)."""
+    path = os.path.normpath(os.path.join(DRYRUN, "..", "BENCH_serving.json"))
+    if not os.path.exists(path):
+        return "(no BENCH_serving.json — run `python -m benchmarks.perf_serving`)"
+    r = json.load(open(path))
+    out = [f"config: {r['arch']} (reduced) · backend={r['backend']} · "
+           f"slots={r['max_batch']} · kv_len={r['kv_len']} · "
+           f"prompt={r['prompt_len']} · max_new={r['max_new_tokens']} · "
+           f"requests={r['requests']}"
+           + (" · SMOKE" if r.get("smoke") else ""),
+           "",
+           "| path | impl | chunk | engine tok/s | step ms | d2h B/token |",
+           "|---|---|---|---|---|---|"]
+    for name, row in r["results"].items():
+        out.append(
+            f"| {name} | {row['impl']} | {row['decode_chunk']} | "
+            f"{row['tokens_per_s']:.0f} | {row['step_ms']:.3f} | "
+            f"{row['host_bytes_per_token']:.1f} |")
+    out.append("")
+    out.append(f"fused / seed engine throughput: "
+               f"**{r['speedup_fused_vs_seed']:.2f}×**")
+    return "\n".join(out)
+
+
 def main():
     recs = load()
     print("### Dry-run matrix (40 cells × 2 meshes)\n")
     print(summary(recs) + "\n")
     print(dryrun_table(recs) + "\n")
     print("### Roofline (single-pod, per §Roofline)\n")
-    print(roofline_table(recs))
+    print(roofline_table(recs) + "\n")
+    print("### Serving decode fast path (benchmarks.perf_serving)\n")
+    print(serving_table())
 
 
 if __name__ == "__main__":

@@ -1,1 +1,2 @@
 from repro.kernels.flash_attention.ops import attention  # noqa: F401
+from repro.kernels.flash_attention.decode import flash_decode_fwd  # noqa: F401

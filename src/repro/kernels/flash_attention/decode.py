@@ -1,0 +1,162 @@
+"""Pallas TPU decode-attention kernel: one query token per KV slot.
+
+The serving hot loop is the paper's end-to-end inference term: every decoded
+token re-reads the whole KV pool (X-Former §IV, HeTraX §3 both identify this
+attention-to-memory traffic as the dominant cost).  The prefill flash kernel
+(:mod:`.kernel`) tiles a *long* query block; decode has ``Sq == 1`` per slot,
+so the operative constraint is streaming K/V through VMEM exactly once while
+the (tiny) query block and the online-softmax state never leave VMEM.
+
+Layout/grid:
+
+- grid ``(B, Hkv, Skv/bk)`` — one program per (slot, KV head, K/V block);
+  the trailing axis is sequential on TPU so VMEM scratch carries the
+  online-softmax state ``(m, l, acc)`` across the K/V sweep of each slot.
+- GQA head-folding: the ``rep = Hq // Hkv`` query heads that share one KV
+  head are folded into the *rows* of a single ``(rep, hd)`` query block, so
+  the score matmul is one MXU op per block instead of ``rep`` vector ops.
+- positions are explicit: ``kv_pos`` is the per-entry token position in the
+  slotted pool (``-1`` = empty / invalid entry) and ``q_pos`` the query
+  position per slot.  Causality, sliding window, per-slot lengths and
+  empty-slot masking all reduce to one mask on ``(q_pos, kv_pos)`` — the
+  kernel never assumes entries are ordered, so ring-buffer (local-window)
+  caches work unmodified.
+- fully-masked slots (empty pool slots in a continuous-batching engine)
+  produce exact zeros, not NaN.
+
+``interpret=True`` runs the same kernel body through the Pallas interpreter
+so CPU tests exercise the real kernel, not a shadow implementation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _decode_kernel(
+    q_ref,                        # (1, 1, rep, hd)
+    k_ref,                        # (1, 1, bk, hd)
+    v_ref,                        # (1, 1, bk, hdv)
+    qpos_ref,                     # (1, 1)
+    kvpos_ref,                    # (1, bk)
+    o_ref,                        # (1, 1, rep, hdv)
+    m_scr, l_scr, acc_scr,        # VMEM scratch: (rep,1), (rep,1), (rep,hdv)
+    *,
+    scale: float,
+    window: int,
+    softcap: float,
+):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qp = qpos_ref[0, 0]                               # scalar int32
+    kp = kvpos_ref[...]                               # (1, bk)
+    mask = (kp >= 0) & (kp <= qp)                     # valid + causal
+    if window:
+        mask &= qp - kp < window
+
+    # whole block masked (empty slot / outside the window) -> skip the MXU
+    @pl.when(jnp.any(mask))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)           # (rep, hd)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)           # (bk, hdv)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (rep, bk)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(mask, s, NEG_INF)               # (1,bk) -> (rep,bk)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)               # empty slot -> zeros
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode_fwd(
+    q: jax.Array,        # (B, 1, Hq, hd)   one query token per slot
+    k: jax.Array,        # (B, Skv, Hkv, hd)  slotted KV pool
+    v: jax.Array,        # (B, Skv, Hkv, hdv)
+    *,
+    q_pos: jax.Array,    # (B, 1) int32  query position per slot
+    kv_pos: jax.Array,   # (B, Skv) int32  entry position, -1 = empty
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, hdv = v.shape
+    if Sq != 1:
+        raise ValueError(f"decode kernel needs Sq == 1, got {Sq}")
+    rep = Hq // Hkv
+    if rep * Hkv != Hq:
+        raise ValueError(f"Hq ({Hq}) must be a multiple of Hkv ({Hkv})")
+    scale = scale if scale is not None else hd ** -0.5
+    bk = min(block_k, Skv)
+    if Skv % bk:
+        raise ValueError(f"block size ({bk}) must divide Skv ({Skv})")
+
+    # fold GQA groups into query-block rows: (B, Hkv, rep, hd)
+    qf = q[:, 0].reshape(B, Hkv, rep, hd)
+    kt = k.transpose(0, 2, 1, 3)                  # (B, Hkv, Skv, hd)
+    vt = v.transpose(0, 2, 1, 3)                  # (B, Hkv, Skv, hdv)
+    qp = q_pos.astype(jnp.int32).reshape(B, 1)
+    kp = kv_pos.astype(jnp.int32)
+
+    grid = (B, Hkv, Skv // bk)
+    kern = functools.partial(
+        _decode_kernel, scale=scale, window=window, softcap=softcap)
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hdv), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, ik: (b, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, ik: (b, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hdv), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hdv), q.dtype),
+        scratch_shapes=[
+            _vmem((rep, 1)),
+            _vmem((rep, 1)),
+            _vmem((rep, hdv)),
+        ],
+        interpret=interpret,
+    )(qf, kt, vt, qp, kp)
+
+    return out.reshape(B, 1, Hq, hdv)
+
+
+def _vmem(shape):
+    """f32 VMEM scratch (works in interpret mode on CPU too)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

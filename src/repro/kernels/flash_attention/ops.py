@@ -2,14 +2,25 @@
 
 ``impl``:
   - ``ref``               pure-jnp chunked oracle (CPU, dry-run HLO)
-  - ``pallas``            TPU Pallas kernel (compiled)
-  - ``pallas_interpret``  Pallas kernel body executed in Python on CPU
+  - ``pallas``            TPU Pallas kernels (compiled)
+  - ``pallas_interpret``  Pallas kernel bodies executed in Python on CPU
+  - ``flash``             serving fast path: Pallas kernels, compiled on TPU
+                          and interpreted elsewhere (CPU tests exercise the
+                          real kernel bodies)
   - ``auto``              pallas on TPU backends, ref elsewhere
 
-The Pallas path covers self-attention (train/prefill) with implicit
-positions; ring-buffer decode and cross-attention with explicit position
-vectors route to the reference path (a 1-token decode step is DMA-bound,
-not MXU-bound — a kernel buys nothing there).
+Two Pallas kernels sit behind this wrapper:
+
+- :func:`..kernel.flash_attention_fwd` — train/prefill self-attention with
+  implicit positions (long query blocks);
+- :func:`..decode.flash_decode_fwd`    — the decode fast path: ``Sq == 1``
+  with explicit ``q_pos``/``kv_pos`` vectors (slotted / ring-buffer caches,
+  per-slot lengths, empty-slot masking).
+
+The decode kernel treats ``kv_pos < 0`` as invalid; an explicit ``kv_valid``
+mask is folded into ``kv_pos`` before the call (masked entries become -1),
+so any caller-supplied mask is honoured exactly.  Cross-attention decode
+(explicit positions but ``causal=False``) routes to the reference path.
 """
 from __future__ import annotations
 
@@ -20,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.flash_attention import kernel as _kernel
+from repro.kernels.flash_attention import decode as _decode
 
 
 def _pallas_ok(q, k, causal, q_pos, kv_pos, kv_valid, window):
@@ -32,6 +44,17 @@ def _pallas_ok(q, k, causal, q_pos, kv_pos, kv_valid, window):
     bq = min(128, Sq)
     bk = min(128, Skv)
     return Sq % bq == 0 and Skv % bk == 0 and Hq % k.shape[2] == 0
+
+
+def _decode_ok(q, k, causal, q_pos, kv_pos):
+    if not causal or q_pos is None or kv_pos is None:
+        return False
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    if Sq != 1 or Hq % Hkv:
+        return False
+    bk = min(128, Skv)
+    return Skv % bk == 0
 
 
 def attention(
@@ -48,18 +71,29 @@ def attention(
     scale: Optional[float] = None,
     impl: str = "auto",
 ) -> jax.Array:
+    if impl not in ("ref", "auto", "flash", "pallas", "pallas_interpret"):
+        raise ValueError(f"unknown attention impl {impl!r}")
+    on_tpu = jax.default_backend() == "tpu"
     if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+        impl = "pallas" if on_tpu else "ref"
+    if impl == "flash":
+        impl = "pallas" if on_tpu else "pallas_interpret"
 
-    if impl in ("pallas", "pallas_interpret") and _pallas_ok(
-            q, k, causal, q_pos, kv_pos, kv_valid, window):
-        qt = q.transpose(0, 2, 1, 3)   # (B, H, S, hd)
-        kt = k.transpose(0, 2, 1, 3)
-        vt = v.transpose(0, 2, 1, 3)
-        out = _kernel.flash_attention_fwd(
-            qt, kt, vt, causal=causal, window=window, softcap=softcap,
-            scale=scale, interpret=(impl == "pallas_interpret"))
-        return out.transpose(0, 2, 1, 3)
+    if impl in ("pallas", "pallas_interpret"):
+        interpret = impl == "pallas_interpret"
+        if _decode_ok(q, k, causal, q_pos, kv_pos):
+            kp = kv_pos if kv_valid is None else jnp.where(kv_valid, kv_pos, -1)
+            return _decode.flash_decode_fwd(
+                q, k, v, q_pos=q_pos, kv_pos=kp, window=window,
+                softcap=softcap, scale=scale, interpret=interpret)
+        if _pallas_ok(q, k, causal, q_pos, kv_pos, kv_valid, window):
+            qt = q.transpose(0, 2, 1, 3)   # (B, H, S, hd)
+            kt = k.transpose(0, 2, 1, 3)
+            vt = v.transpose(0, 2, 1, 3)
+            out = _kernel.flash_attention_fwd(
+                qt, kt, vt, causal=causal, window=window, softcap=softcap,
+                scale=scale, interpret=interpret)
+            return out.transpose(0, 2, 1, 3)
 
     return attention_ref(
         q, k, v, q_pos=q_pos, kv_pos=kv_pos, kv_valid=kv_valid,

@@ -31,8 +31,10 @@ from repro.launch.steps import build_cell
 from repro.roofline.analysis import V5E, roofline_terms
 from repro.models.transformer import count_params
 
-OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                       "experiments", "dryrun")
+OUT_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                 "experiments", "dryrun"))
 
 # grad-accumulation per arch for the train_4k cell (activation-memory knob;
 # chosen during the §Perf loop — see EXPERIMENTS.md)
@@ -114,6 +116,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         # measured from the HLO and reported separately below.
 
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+            ca = ca[0] if ca else {}
         hlo = compiled.as_text()
         from repro.roofline.hlo import (cpu_bf16_promotion_bytes,
                                         cpu_bf16_promotion_bytes_serving)
@@ -181,7 +185,7 @@ def main():
                     mem = rec["memory"]
                     print(f"{arch:22s} {shape:12s} {mesh_kind:6s} OK "
                           f"compile={rec['t_compile_s']:7.1f}s "
-                          f"live={mem["live_bytes_tpu"]/2**30:6.2f}GiB "
+                          f"live={mem['live_bytes_tpu']/2**30:6.2f}GiB "
                           f"fits={mem['fits_v5e']} "
                           f"terms(c/m/n)={r['compute_s']:.3e}/"
                           f"{r['memory_s']:.3e}/{r['collective_s']:.3e}s "

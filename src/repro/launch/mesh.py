@@ -21,8 +21,12 @@ from jax.sharding import Mesh
 from repro.core.sfc import curve_positions
 
 
-def _auto_axis_types(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _mesh_kwargs(n):
+    """`axis_types` appeared after jax 0.4.x — pass it only when present
+    (Auto is the default behaviour on older versions anyway)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * n}
+    return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False, sfc_order: str = "") -> Mesh:
@@ -38,7 +42,7 @@ def make_production_mesh(*, multi_pod: bool = False, sfc_order: str = "") -> Mes
     if sfc_order:
         devices = devices[sfc_device_order(shape, sfc_order)]
     return jax.make_mesh(shape, axes, devices=list(devices),
-                         axis_types=_auto_axis_types(len(shape)))
+                         **_mesh_kwargs(len(shape)))
 
 
 def sfc_device_order(shape, curve: str = "boustrophedon") -> np.ndarray:
@@ -57,4 +61,4 @@ def small_mesh(data: int = 2, model: int = 2) -> Mesh:
     n = data * model
     return jax.make_mesh((data, model), ("data", "model"),
                          devices=jax.devices()[:n],
-                         axis_types=_auto_axis_types(2))
+                         **_mesh_kwargs(2))

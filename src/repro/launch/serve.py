@@ -19,6 +19,14 @@ def main():
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--impl", default="ref",
+                    choices=["ref", "auto", "flash", "pallas",
+                             "pallas_interpret"],
+                    help="attention impl (flash = Pallas decode kernel)")
+    ap.add_argument("--decode-chunk", type=int, default=1,
+                    help="device decode iterations per host sync")
+    ap.add_argument("--host-loop", action="store_true",
+                    help="use the legacy host-looped step (fused=False)")
     args = ap.parse_args()
 
     if args.devices:
@@ -44,7 +52,8 @@ def main():
     engine = ServingEngine(cfg, params, EngineConfig(
         max_batch=args.max_batch, kv_len=args.kv_len,
         max_new_tokens=args.max_new_tokens, temperature=args.temperature,
-        seed=args.seed))
+        seed=args.seed, impl=args.impl, fused=not args.host_loop,
+        decode_chunk=args.decode_chunk))
 
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):

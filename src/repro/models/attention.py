@@ -209,13 +209,13 @@ def apply_attention(
             else:
                 new_cache = {"k": _pad_cache(k, cap), "v": _pad_cache(v, cap),
                              "pos": _pad_pos(pos, cap)}
-    else:  # decode: S == 1
+    else:  # decode: S == 1 — flash routes to the Pallas decode kernel
         new_cache = _ring_write(cache, k, v, pos[:, 0])
         kv_pos = new_cache["pos"]
         out = flash_attention(
             q, new_cache["k"], new_cache["v"],
             q_pos=pos, kv_pos=kv_pos, kv_valid=kv_pos >= 0,
-            causal=causal, window=window, softcap=cfg.attn_softcap, impl="ref")
+            causal=causal, window=window, softcap=cfg.attn_softcap, impl=impl)
 
     out = out.reshape(B, S, Hq * hdv) @ constrain(p["wo"].astype(dt),
                                                   "weight_full")

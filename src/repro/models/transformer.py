@@ -252,12 +252,37 @@ def _apply_block(p_blk, x, cache_blk, *, cfg, spec, mode, pos, cross_src,
 
 def run_stack(stack_params, x, *, cfg, groups, mode, pos, caches=None,
               cross_src=None, impl="auto", causal=True, remat=False,
-              remat_policy: Optional[str] = None, kv_cap=0):
+              remat_policy: Optional[str] = None, kv_cap=0,
+              decode_unroll: int = 8):
+    """``decode_unroll``: decode-mode groups with at most this many repeats
+    run as an unrolled Python loop instead of ``lax.scan``.  Scan passes the
+    stacked KV pool through xs-slicing and ys-stacking — a full pool
+    read+write per token that buffer donation cannot alias away.  Unrolled,
+    the per-repeat update is a ``dynamic_update_slice`` on the stacked leaf,
+    so a donated cache is updated in place (decode graphs are S=1 and tiny,
+    so HLO growth is negligible; large-repeat configs keep scan to preserve
+    O(1)-in-depth HLO for the dry-run)."""
     new_caches = []
     aux_total = jnp.zeros((), jnp.float32)
     for gi, spec in enumerate(groups):
         gp = stack_params[gi]
         gc = None if caches is None else caches[gi]
+
+        if mode == "decode" and gc is not None and not remat \
+                and spec.repeats <= decode_unroll:
+            new_gc = gc
+            for r in range(spec.repeats):
+                p_blk = jax.tree_util.tree_map(lambda p, r=r: p[r], gp)
+                c_blk = jax.tree_util.tree_map(lambda c, r=r: c[r], gc)
+                x, c_out, _ = _apply_block(
+                    p_blk, x, c_blk, cfg=cfg, spec=spec, mode=mode, pos=pos,
+                    cross_src=cross_src, impl=impl, causal=causal,
+                    kv_cap=kv_cap)
+                new_gc = jax.tree_util.tree_map(
+                    lambda pool, one, r=r: pool.at[r].set(one.astype(pool.dtype)),
+                    new_gc, c_out)
+            new_caches.append(new_gc)
+            continue
 
         def step(carry, xs, spec=spec):
             x = carry
@@ -384,8 +409,15 @@ def loss_fn(params, cfg: ModelConfig, batch, *, impl="auto",
 
 
 def prefill(params, cfg: ModelConfig, batch, *, impl="auto",
-            compute_dtype=jnp.bfloat16, kv_cap: int = 0):
-    """Returns (last-token logits (B, V), cache)."""
+            compute_dtype=jnp.bfloat16, kv_cap: int = 0, length=None):
+    """Returns (last-token logits (B, V), cache).
+
+    ``length`` (optional traced scalar): true prompt length when ``tokens``
+    is right-padded to a bucketed shape — logits are taken at position
+    ``length - 1`` instead of the last position.  Causal masking makes the
+    prefix computation independent of the padded tail, so the returned
+    logits and the cache entries below ``length`` are exact.
+    """
     tokens = batch["tokens"]
     B, S = tokens.shape
     pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
@@ -396,7 +428,11 @@ def prefill(params, cfg: ModelConfig, batch, *, impl="auto",
                              mode="prefill", pos=pos, cross_src=cross_src,
                              impl=impl, causal=True, kv_cap=kv_cap)
     h = M.apply_norm(params["final_norm"], h)
-    logits = unembed(params, cfg, h[:, -1:])[:, 0]
+    if length is None:
+        last = h[:, -1:]
+    else:
+        last = jax.lax.dynamic_slice_in_dim(h, length - 1, 1, axis=1)
+    logits = unembed(params, cfg, last)[:, 0]
     return logits, {"stack": caches}
 
 

@@ -376,3 +376,13 @@ def build_plan(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *, mode: str) -> 
     plan = Plan(mesh=mesh, roles=_roles(ctx, mode=mode),
                 name=f"{cfg.name}:{shape.name}:{mode}")
     return plan, ctx
+
+
+def serving_decode_plan(cfg: ModelConfig, mesh: Mesh, *, max_batch: int,
+                        kv_len: int) -> tuple[Plan, PlanContext]:
+    """Decode-mode plan for the serving engine's slotted KV pool: the slot
+    (batch) axis maps to the data axes when divisible, KV heads to the model
+    axis — the same placement the paper gives dynamic attention operands
+    (§3.1).  Feed the returned ctx to :func:`cache_shardings` for the pool."""
+    shape = ShapeSpec("serving", "decode", kv_len, max_batch)
+    return build_plan(cfg, shape, mesh, mode="decode")

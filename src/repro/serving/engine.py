@@ -11,13 +11,28 @@ in JAX with static shapes):
   and a queued request is prefilled into it while other slots keep
   decoding — the decode step always runs over the full slot pool with a
   validity mask;
-- prefill writes its cache into the slot via ``dynamic_update_slice`` on
-  the stacked cache pytree;
+- **fused decode fast path** (default): one jitted, cache-donated function
+  does decode → sample (greedy and temperature, PRNG threaded on device) →
+  position/budget/EOS bookkeeping, and the only device→host traffic per
+  iteration is one packed ``(2, max_batch)`` int32 array of
+  ``(next_token, done)`` — the serving analogue of the paper keeping the
+  attention dataflow on the fast side of the interconnect (§3.2).
+  Donation lets XLA update the KV pool in place instead of copying it
+  every token;
+- prefill is fused with slot insertion: one jitted, cache-donated call runs
+  the prompt forward pass, samples the first token on device, and inserts
+  the prefill cache into the pool via ``dynamic_update_slice``.  Prompts
+  are right-padded to bucketed lengths (causal masking keeps the logits
+  exact) so admission does not retrace per prompt length;
+- ``fused=False`` preserves the original host-looped step (host argmax,
+  per-slot Python bookkeeping, non-donated cache) as the measurement
+  baseline for ``benchmarks/perf_serving.py``;
 - greedy or temperature sampling, per-request max-token budget.
 
-The engine is mesh-aware: pass shardings built by
-``repro.parallel.sharding`` to serve a model sharded over a pod; on CPU
-tests everything runs on one device with the same code path.
+The engine is mesh-aware: pass ``mesh=`` to shard the slot pool (and run
+the decode step) over a pod with the decode-mode plan from
+``repro.parallel.sharding``; on CPU tests everything runs on one device
+with the same code path.
 """
 from __future__ import annotations
 
@@ -31,6 +46,7 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.models import transformer as T
+from repro.parallel.api import activate_plan
 
 
 @dataclasses.dataclass
@@ -40,8 +56,13 @@ class EngineConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0      # 0 → greedy
     eos_token: int = -1           # -1 → never stops early
-    impl: str = "ref"
+    impl: str = "ref"             # attention impl ("flash" → Pallas decode)
     seed: int = 0
+    fused: bool = True            # zero-host-sync decode step (False = seed path)
+    decode_chunk: int = 1         # device decode iterations per step() —
+    #   >1 runs a lax.scan of decode→sample on device (multi-step
+    #   scheduling): host sync cost is amortised over the chunk, at the
+    #   price of admitting new requests only at chunk boundaries
 
 
 @dataclasses.dataclass
@@ -57,33 +78,178 @@ class Request:
     t_done: float = 0.0
 
 
+# prompt-length buckets: one prefill compile per bucket, not per length
+_MIN_BUCKET = 8
+
+
+def _bucket_len(plen: int, kv_len: int) -> int:
+    b = _MIN_BUCKET
+    while b < plen:
+        b *= 2
+    return min(b, kv_len)
+
+
 class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig = EngineConfig()):
-        self.cfg, self.params, self.ecfg = cfg, params, ecfg
+    def __init__(self, cfg: ModelConfig, params, ecfg: Optional[EngineConfig] = None,
+                 *, mesh=None):
+        # NOTE: default built per-instance — a dataclass default argument
+        # would be one shared mutable EngineConfig across all engines.
+        self.cfg, self.params = cfg, params
+        self.ecfg = ecfg = ecfg if ecfg is not None else EngineConfig()
         B, S = ecfg.max_batch, ecfg.kv_len
         self.cache = T.init_cache(cfg, B, S, dtype=jnp.bfloat16)
         self.slot_req: list[Optional[Request]] = [None] * B
-        self.slot_pos = np.zeros(B, np.int32)        # next position to write
-        self.slot_budget = np.zeros(B, np.int32)
-        self.last_token = np.zeros(B, np.int32)
         self.queue: list[Request] = []
         self.finished: list[Request] = []
-        self._key = jax.random.PRNGKey(ecfg.seed)
         self._uid = 0
 
+        # host-transfer accounting (benchmarks/perf_serving.py)
+        self.host_transfers = 0
+        self.host_bytes = 0
+        self.decode_steps = 0
+
+        # prompt-length bucketing is exact only when cache index == token
+        # position for every self-attention cache (causal masking hides the
+        # padded tail, and the decode write at ``pos`` overwrites the pad
+        # entry).  Ring-buffer (local-window) caches would evict real
+        # entries and SSM/recurrent state integrates the pads — those
+        # configs prefill at exact length (one compile per distinct length).
+        self._bucketed = all(k in ("global", "cross") for k in cfg.layer_kinds)
+
+        # optional decode-mode sharding plan for the slot pool
+        self._plan = None
+        if mesh is not None:
+            from repro.parallel.sharding import cache_shardings, serving_decode_plan
+            self._plan, ctx = serving_decode_plan(cfg, mesh, max_batch=B,
+                                                  kv_len=S)
+            shardings = cache_shardings(
+                jax.eval_shape(lambda: self.cache), ctx)
+            self.cache = jax.device_put(self.cache, shardings)
+
+        # -- fused path: device-resident per-slot state ----------------------
+        self._state = {
+            "tokens": jnp.zeros((B,), jnp.int32),
+            "pos": jnp.zeros((B,), jnp.int32),
+            "budget": jnp.zeros((B,), jnp.int32),
+            "live": jnp.zeros((B,), bool),
+            "key": jax.random.PRNGKey(ecfg.seed),
+        }
+        self._jit_step = jax.jit(self._fused_step_fn, donate_argnums=(1, 2))
+        self._jit_prefill_insert = jax.jit(self._prefill_insert_fn,
+                                           donate_argnums=(1, 2))
+
+        # -- seed-compat path (fused=False) ----------------------------------
+        self._key = jax.random.PRNGKey(ecfg.seed)
         self._jit_decode = jax.jit(self._decode_fn)
         self._jit_prefill = jax.jit(self._prefill_fn)
+        self._jit_insert = jax.jit(self._insert_fn, donate_argnums=(0,))
 
-    # -- jitted cores ---------------------------------------------------------
+    # -- device→host choke point ---------------------------------------------
+    def _fetch(self, x) -> np.ndarray:
+        """The engine's single device→host transfer point (explicit, so
+        tests can fence everything else with a d2h transfer guard)."""
+        arr = jax.device_get(x)
+        arr = np.asarray(arr)
+        self.host_transfers += 1
+        self.host_bytes += arr.nbytes
+        return arr
+
+    # -- jitted cores: fused path ---------------------------------------------
+    def _sample_dev(self, logits, key):
+        if self.ecfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), key
+        key, sub = jax.random.split(key)
+        nxt = jax.random.categorical(sub, logits / self.ecfg.temperature,
+                                     axis=-1)
+        return nxt.astype(jnp.int32), key
+
+    def _fused_step_fn(self, params, cache, state):
+        """decode → sample → bookkeeping, all on device.  Runs
+        ``decode_chunk`` iterations (lax.scan for >1) and returns the new
+        (cache, state) plus a packed (K, 2, B) int32 of (next_token | -1,
+        done) — the only array the host reads back per step."""
+        def one(carry, _):
+            cache, state = carry
+            logits, cache = T.decode_step(params, self.cfg, cache,
+                                          state["tokens"], state["pos"],
+                                          impl=self.ecfg.impl)
+            nxt, key = self._sample_dev(logits, state["key"])
+            live = state["live"]
+            pos_new = jnp.where(live, state["pos"] + 1, state["pos"])
+            budget_new = jnp.where(live, state["budget"] - 1, state["budget"])
+            done = (budget_new <= 0) | (pos_new >= self.ecfg.kv_len)
+            if self.ecfg.eos_token >= 0:
+                done = done | (nxt == self.ecfg.eos_token)
+            done = live & done
+            packed = jnp.stack([jnp.where(live, nxt, -1),
+                                done.astype(jnp.int32)])
+            state = {
+                "tokens": jnp.where(live, nxt, state["tokens"]),
+                "pos": pos_new,
+                "budget": budget_new,
+                "live": live & ~done,
+                "key": key,
+            }
+            return (cache, state), packed
+
+        with activate_plan(self._plan):
+            chunk = max(1, self.ecfg.decode_chunk)
+            if chunk == 1:
+                (cache, state), packed = one((cache, state), None)
+                packed = packed[None]
+            else:
+                (cache, state), packed = jax.lax.scan(
+                    one, (cache, state), None, length=chunk)
+        return cache, state, packed
+
+    def _prefill_insert_fn(self, params, cache, state, tokens, slot, length,
+                           budget):
+        """prompt forward pass → first-token sample → slot insert → state
+        update, one jitted cache-donated call per admission."""
+        with activate_plan(self._plan):
+            logits, pcache = T.prefill(params, self.cfg, {"tokens": tokens},
+                                       impl=self.ecfg.impl,
+                                       kv_cap=self.ecfg.kv_len, length=length)
+            nxt, key = self._sample_dev(logits, state["key"])
+            tok = nxt[0]
+            cache = self._insert_fn(cache, pcache, slot, length)
+            state = {
+                "tokens": state["tokens"].at[slot].set(tok),
+                "pos": state["pos"].at[slot].set(length),
+                "budget": state["budget"].at[slot].set(budget - 1),
+                "live": state["live"].at[slot].set(budget > 1),
+                "key": key,
+            }
+        return cache, state, tok
+
+    def _insert_fn(self, cache, pcache, slot, length):
+        """Insert a batch-1 prefill cache into slot ``slot`` of the pool
+        with one ``dynamic_update_slice`` per leaf (batch axis is axis 1 of
+        every stacked leaf).  When prompts are bucket-padded, ``pos`` leaves
+        beyond ``length`` are invalidated so pad entries never attend."""
+        bucketed = self._bucketed
+
+        def ins(path, pool, one):
+            one = one.astype(pool.dtype)
+            if bucketed and str(getattr(path[-1], "key", "")) == "pos":
+                idx = jnp.arange(one.shape[-1], dtype=jnp.int32)
+                one = jnp.where(idx[None, None, :] < length, one, -1)
+            start = (0, slot) + (0,) * (one.ndim - 2)
+            return jax.lax.dynamic_update_slice(pool, one, start)
+
+        return jax.tree_util.tree_map_with_path(ins, cache, pcache)
+
+    # -- jitted cores: seed-compat path ---------------------------------------
     def _decode_fn(self, params, cache, tokens, pos):
         logits, cache = T.decode_step(params, self.cfg, cache, tokens, pos,
                                       impl=self.ecfg.impl)
         return logits, cache
 
-    def _prefill_fn(self, params, tokens):
-        # single-request prefill padded to kv_len (static shape)
+    def _prefill_fn(self, params, tokens, length):
+        # single-request prefill padded to a bucketed length (static shape)
         logits, cache = T.prefill(params, self.cfg, {"tokens": tokens},
-                                  impl=self.ecfg.impl, kv_cap=self.ecfg.kv_len)
+                                  impl=self.ecfg.impl, kv_cap=self.ecfg.kv_len,
+                                  length=length)
         return logits, cache
 
     # -- public API -------------------------------------------------------------
@@ -98,14 +264,45 @@ class ServingEngine:
         """One engine iteration: admit queued requests into free slots
         (prefill), then one decode step over the slot pool.  Returns the
         number of live slots."""
-        self._admit()
+        if self.ecfg.fused:
+            return self._step_fused()
+        return self._step_host()
+
+    def _step_fused(self) -> int:
+        self._admit_fused()
+        if not any(r is not None for r in self.slot_req):
+            return 0
+        self.cache, self._state, packed = self._jit_step(
+            self.params, self.cache, self._state)
+        arr = self._fetch(packed)                 # ONE d2h transfer
+        self.decode_steps += arr.shape[0]
+        now = time.time()
+        for it in range(arr.shape[0]):            # decode_chunk iterations
+            for i, req in enumerate(self.slot_req):
+                if req is None or arr[it, 0, i] < 0:
+                    continue
+                tok = int(arr[it, 0, i])
+                if not req.output:
+                    req.t_first_token = now
+                req.output.append(tok)
+                if arr[it, 1, i]:
+                    req.done = True
+                    req.t_done = now
+                    self.finished.append(req)
+                    self.slot_req[i] = None  # slot freed → continuous batching
+        return sum(r is not None for r in self.slot_req)
+
+    def _step_host(self) -> int:
+        """Original per-token host round-trip step (measurement baseline)."""
+        self._admit_host()
         live = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not live:
             return 0
-        tokens = jnp.asarray(self.last_token)
-        pos = jnp.asarray(self.slot_pos)
+        tokens = jnp.asarray(self._last_token)
+        pos = jnp.asarray(self._slot_pos)
         logits, self.cache = self._jit_decode(self.params, self.cache,
                                               tokens, pos)
+        self.decode_steps += 1
         nxt = self._sample(logits)
         now = time.time()
         for i in live:
@@ -114,12 +311,12 @@ class ServingEngine:
             if not req.output:
                 req.t_first_token = now
             req.output.append(tok)
-            self.last_token[i] = tok
-            self.slot_pos[i] += 1
-            self.slot_budget[i] -= 1
+            self._last_token[i] = tok
+            self._slot_pos[i] += 1
+            self._slot_budget[i] -= 1
             hit_eos = (self.ecfg.eos_token >= 0 and tok == self.ecfg.eos_token)
-            if self.slot_budget[i] <= 0 or hit_eos or \
-                    self.slot_pos[i] >= self.ecfg.kv_len:
+            if self._slot_budget[i] <= 0 or hit_eos or \
+                    self._slot_pos[i] >= self.ecfg.kv_len:
                 req.done = True
                 req.t_done = now
                 self.finished.append(req)
@@ -136,49 +333,83 @@ class ServingEngine:
         return self.finished
 
     # -- internals ---------------------------------------------------------------
-    def _admit(self):
-        for slot in range(self.ecfg.max_batch):
-            if self.slot_req[slot] is not None or not self.queue:
-                continue
+    def _next_request(self, slot: int) -> Optional[tuple]:
+        """Pop the next admissible queued request and its padded prompt, or
+        None.  Requests asking for 0 tokens finish immediately."""
+        if self.slot_req[slot] is not None:
+            return None
+        while self.queue:
             req = self.queue.pop(0)
+            # a request may ask for fewer tokens than the engine default —
+            # including 0 (`or` would silently swap in the default)
+            budget = req.max_new_tokens if req.max_new_tokens is not None \
+                else self.ecfg.max_new_tokens
+            if budget <= 0:
+                req.done = True
+                req.t_first_token = req.t_done = time.time()
+                self.finished.append(req)
+                continue
             plen = len(req.prompt)
             if plen + 1 >= self.ecfg.kv_len:
                 raise ValueError(f"prompt ({plen}) ≥ kv_len ({self.ecfg.kv_len})")
-            logits, pcache = self._jit_prefill(
-                self.params, jnp.asarray(req.prompt)[None, :])
-            self._write_slot(slot, pcache)
-            nxt = self._sample(logits)
-            req.output = [int(nxt[0])]
+            pad = _bucket_len(plen, self.ecfg.kv_len) if self._bucketed else plen
+            toks = np.zeros((1, pad), np.int32)
+            toks[0, :plen] = req.prompt
+            return req, toks, plen, budget
+        return None
+
+    def _admit_fused(self):
+        for slot in range(self.ecfg.max_batch):
+            nxt = self._next_request(slot)
+            if nxt is None:
+                continue
+            req, toks, plen, budget = nxt
+            self.cache, self._state, first = self._jit_prefill_insert(
+                self.params, self.cache, self._state, jnp.asarray(toks),
+                jnp.int32(slot), jnp.int32(plen), jnp.int32(budget))
+            tok = int(self._fetch(first))
+            req.output = [tok]
             req.t_first_token = time.time()
+            if budget == 1:         # the prefill sample was the whole budget
+                req.done = True
+                req.t_done = req.t_first_token
+                self.finished.append(req)
+            else:
+                self.slot_req[slot] = req
+
+    def _admit_host(self):
+        if not hasattr(self, "_slot_pos"):
+            B = self.ecfg.max_batch
+            self._slot_pos = np.zeros(B, np.int32)
+            self._slot_budget = np.zeros(B, np.int32)
+            self._last_token = np.zeros(B, np.int32)
+        for slot in range(self.ecfg.max_batch):
+            nxt = self._next_request(slot)
+            if nxt is None:
+                continue
+            req, toks, plen, budget = nxt
+            logits, pcache = self._jit_prefill(
+                self.params, jnp.asarray(toks), jnp.int32(plen))
+            self.cache = self._jit_insert(self.cache, pcache, jnp.int32(slot),
+                                          jnp.int32(plen))
+            first = self._sample(logits)
+            req.output = [int(first[0])]
+            req.t_first_token = time.time()
+            if budget == 1:         # the prefill sample was the whole budget
+                req.done = True
+                req.t_done = req.t_first_token
+                self.finished.append(req)
+                continue
             self.slot_req[slot] = req
-            self.slot_pos[slot] = plen
-            budget = req.max_new_tokens or self.ecfg.max_new_tokens
-            self.slot_budget[slot] = budget - 1
-            self.last_token[slot] = int(nxt[0])
-
-    def _write_slot(self, slot: int, pcache):
-        """Insert a batch-1 prefill cache into slot ``slot`` of the pool.
-
-        Cache leaves are stacked (R, B, ...); SSM/recurrent state leaves
-        are (R, B, ...) as well — the batch axis is always axis 1.
-        """
-        def ins(pool, one):
-            one = one.astype(pool.dtype)
-            # pad/crop the kv-depth axis if prefill produced shorter S
-            if one.shape[2:] != pool.shape[2:] and one.ndim >= 3:
-                pad = [(0, 0)] * one.ndim
-                pad[2] = (0, pool.shape[2] - one.shape[2])
-                one = jnp.pad(one, pad)
-            idx = (slice(None), slice(slot, slot + 1))
-            return pool.at[idx].set(one)
-
-        self.cache = jax.tree_util.tree_map(ins, self.cache, pcache)
+            self._slot_pos[slot] = plen
+            self._slot_budget[slot] = budget - 1
+            self._last_token[slot] = int(first[0])
 
     def _sample(self, logits: jax.Array) -> np.ndarray:
         if self.ecfg.temperature <= 0.0:
-            return np.asarray(jnp.argmax(logits, axis=-1))
+            return self._fetch(jnp.argmax(logits, axis=-1))
         self._key, sub = jax.random.split(self._key)
-        return np.asarray(jax.random.categorical(
+        return self._fetch(jax.random.categorical(
             sub, logits / self.ecfg.temperature, axis=-1))
 
     # -- stats ---------------------------------------------------------------
@@ -196,4 +427,8 @@ class ServingEngine:
             "tokens_per_s": toks / max(span, 1e-9),
             "mean_latency_s": float(np.mean(lat)),
             "mean_ttft_s": float(np.mean(ttft)),
+            "decode_steps": self.decode_steps,
+            "host_transfers": self.host_transfers,
+            "host_bytes": self.host_bytes,
+            "host_bytes_per_token": self.host_bytes / max(toks, 1),
         }

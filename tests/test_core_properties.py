@@ -4,6 +4,8 @@ import random
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't fail collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core.sfc import CURVES, curve_positions

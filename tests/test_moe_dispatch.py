@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't fail collection
 from hypothesis import given, settings, strategies as st
 
 from repro.config import get_config, reduce_config

@@ -169,9 +169,45 @@ def test_dryrun_one_cell_end_to_end(tmp_path):
     import subprocess
     env = subprocess_env(1)  # dryrun sets its own XLA_FLAGS internally
     env.pop("XLA_FLAGS", None)
+    # write the cell into the test tmp dir — a stray single-cell
+    # experiments/dryrun/ would trip test_hetero's matrix-completeness check
+    env["REPRO_DRYRUN_DIR"] = str(tmp_path)
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mamba2-130m",
          "--shape", "train_4k", "--mesh", "single", "--force"],
         capture_output=True, text=True, env=env,
         cwd=str(REPO) + "/src", timeout=1800)
     assert "OK" in r.stdout, (r.stdout, r.stderr)
+
+
+def test_sharded_slot_pool_serving_matches_single_device():
+    """ServingEngine with a (data, model) mesh shards the KV slot pool and
+    runs the fused decode step under the decode plan — outputs must match
+    the unsharded engine exactly (greedy)."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.config import get_config, reduce_config
+from repro.models import transformer as T
+from repro.serving.engine import EngineConfig, ServingEngine
+
+cfg = reduce_config(get_config("qwen2.5-3b"))
+params = T.init_params(cfg, jax.random.PRNGKey(0), param_dtype=jnp.float32)
+mesh = Mesh(np.asarray(jax.devices()).reshape(1, 2), ("data", "model"))
+
+def run(mesh=None):
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_batch=2, kv_len=48, max_new_tokens=5),
+                        mesh=mesh)
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=4 + i))
+    eng.run_until_drained()
+    return [r.output for r in sorted(eng.finished, key=lambda r: r.uid)]
+
+a = run(None)
+b = run(mesh)
+assert a == b, (a, b)
+print("OK", a[0])
+""", 2)
+    assert "OK" in out

@@ -103,6 +103,92 @@ def test_temperature_sampling_varies(small_model):
     assert len(outs) > 1
 
 
+def _outputs_by_uid(eng):
+    return [r.output for r in sorted(eng.finished, key=lambda r: r.uid)]
+
+
+def _drain_workload(cfg, params, **kw):
+    eng = _engine(cfg, params, **kw)
+    rng = np.random.default_rng(7)
+    for i in range(6):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=3 + 2 * i))
+    eng.run_until_drained()
+    return eng
+
+
+def test_fused_step_matches_host_path(small_model):
+    """The fused on-device step must reproduce the seed engine's outputs
+    exactly (greedy, fixed seed, slot churn across 6 requests / 2 slots)."""
+    cfg, params = small_model
+    host = _drain_workload(cfg, params, max_batch=2, fused=False)
+    fused = _drain_workload(cfg, params, max_batch=2, fused=True)
+    assert _outputs_by_uid(host) == _outputs_by_uid(fused)
+
+
+def test_flash_engine_matches_ref_engine(small_model):
+    """impl='flash' (Pallas decode kernel, interpret on CPU) end-to-end
+    against impl='ref' through the same fused engine."""
+    cfg, params = small_model
+    ref = _drain_workload(cfg, params, max_batch=2)
+    fl = _drain_workload(cfg, params, max_batch=2, impl="flash")
+    assert _outputs_by_uid(ref) == _outputs_by_uid(fl)
+
+
+def test_decode_chunk_matches_unchunked(small_model):
+    """decode_chunk>1 (multi-step scheduling: one lax.scan of K decode
+    iterations per host sync) must emit token-for-token identical outputs,
+    including requests that finish mid-chunk."""
+    cfg, params = small_model
+    one = _drain_workload(cfg, params, max_batch=2, max_new_tokens=5)
+    chk = _drain_workload(cfg, params, max_batch=2, max_new_tokens=5,
+                          decode_chunk=4)
+    assert _outputs_by_uid(one) == _outputs_by_uid(chk)
+
+
+def test_single_host_transfer_per_decode_iteration(small_model):
+    """Steady-state decode makes exactly one device→host transfer per
+    iteration (the packed (2,B) token/done array); everything else is
+    fenced off by a d2h transfer guard."""
+    cfg, params = small_model
+    eng = _engine(cfg, params, max_batch=2, max_new_tokens=8)
+    eng.submit(np.asarray([1, 2, 3, 4]))
+    eng.submit(np.asarray([5, 6, 7]))
+    eng.step()                       # admissions + first decode
+    base = eng.host_transfers
+    with jax.transfer_guard_device_to_host("disallow"):
+        for _ in range(3):
+            eng.step()
+    assert eng.host_transfers - base == 3
+    assert eng.host_bytes > 0
+
+
+def test_no_recompilation_across_drain(small_model):
+    """One compiled fused step for the whole drain; prefill compiles at
+    most once per prompt-length bucket."""
+    cfg, params = small_model
+    eng = _engine(cfg, params, max_batch=3, max_new_tokens=4)
+    rng = np.random.default_rng(3)
+    for plen in (3, 5, 8, 10, 12, 4):          # buckets: 8, 16
+        eng.submit(rng.integers(0, cfg.vocab_size, size=plen))
+    eng.run_until_drained()
+    assert eng._jit_step._cache_size() == 1
+    assert eng._jit_prefill_insert._cache_size() <= 2
+
+
+def test_max_new_tokens_zero_and_one(small_model):
+    """A request's own budget wins over the engine default — including 0
+    (the seed's ``or`` swapped in the default) and 1 (off-by-one)."""
+    cfg, params = small_model
+    eng = _engine(cfg, params)                 # engine default: 6
+    r0 = eng.submit(np.asarray([1, 2, 3]), max_new_tokens=0)
+    r1 = eng.submit(np.asarray([1, 2, 3]), max_new_tokens=1)
+    r2 = eng.submit(np.asarray([1, 2, 3]), max_new_tokens=3)
+    eng.run_until_drained()
+    assert r0.done and r0.output == []
+    assert r1.done and len(r1.output) == 1
+    assert r2.done and len(r2.output) == 3
+
+
 def test_moe_arch_serves(small_model):
     cfg = reduce_config(get_config("qwen3-moe-30b-a3b"))
     params = T.init_params(cfg, jax.random.PRNGKey(1),
