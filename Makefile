@@ -1,17 +1,20 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test verify bench-serving report
+.PHONY: test verify bench-serving bench-smoke report
 
 test:               ## tier-1 test suite
 	$(PY) -m pytest -x -q
 
-bench-serving:      ## full serving decode benchmark -> experiments/BENCH_serving.json
+bench-serving:      ## full serving decode+prefill benchmark -> experiments/BENCH_serving.json
 	$(PY) -m benchmarks.perf_serving
 
-verify:             ## CI gate: tier-1 tests + serving bench in smoke mode
-	$(PY) -m pytest -x -q
+bench-smoke:        ## tiny-config serving benchmark; asserts the JSON report schema
 	$(PY) -m benchmarks.perf_serving --smoke
+
+verify:             ## CI gate: tier-1 tests + serving bench smoke (schema-checked)
+	$(PY) -m pytest -x -q
+	$(MAKE) bench-smoke
 
 report:             ## render benchmark/dry-run tables
 	$(PY) -m benchmarks.report

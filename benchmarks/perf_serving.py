@@ -1,7 +1,8 @@
-"""Serving decode fast-path benchmark: seed (host-looped) vs fused engine.
+"""Serving benchmark: decode fast path + packed/chunked prefill admission.
 
-Measures steady-state decode throughput and device→host traffic per token
-for the three serving configurations:
+Two workloads, both through the same ``ServingEngine``:
+
+**decode** (steady-state decode throughput, device→host traffic per token):
 
 - ``seed``        — ``fused=False``: the original per-token host round trip
                     (host sampling fetch, Python slot loop, non-donated
@@ -11,12 +12,23 @@ for the three serving configurations:
 - ``fused_flash`` — same, routed through the Pallas decode-attention kernel
                     (interpret mode off-TPU, compiled on TPU).
 
-Methodology: one warm-up drain performs every compile (prompts share one
-length, so one prefill bucket), then the reported numbers are the best of
-``repeat`` timed drains of the full serving loop — decode steps *plus*
-continuous-batching admissions, measured identically for every path, so
-the seed/fused comparison is apples-to-apples engine throughput.
-Results go to ``experiments/BENCH_serving.json`` and are rendered by
+**prefill** (admission-bound: long prompts, short generations — the
+time-to-first-token critical path):
+
+- ``seq``    — ``packed=False``: PR-1 sequential admission, one
+               bucket-padded batch-1 prefill+insert call per request;
+- ``packed`` — packed ragged prefill (all queued requests in one segmented
+               call) + chunked prefill for prompts longer than the chunk.
+
+Reported: prefill tokens/s (prompt tokens ÷ host wall time spent in
+admission), mean TTFT over the drain, and the worst prefill-token stall
+between consecutive decode steps (bounded by ~2 chunks for ``packed``).
+
+Methodology: one warm-up drain performs every compile, then the reported
+numbers are the best of ``repeat`` timed drains of the full serving loop —
+measured identically for every path, so comparisons are apples-to-apples
+engine throughput.  Results go to ``experiments/BENCH_serving.json``
+(schema-checked — ``make bench-smoke``) and are rendered by
 ``benchmarks/report.py``.
 
     PYTHONPATH=src python -m benchmarks.perf_serving [--smoke]
@@ -29,6 +41,29 @@ import os
 import time
 
 EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+_DECODE_KEYS = {"fused", "impl", "decode_chunk", "tokens", "decode_steps",
+                "tokens_per_s", "step_ms", "host_bytes_per_token"}
+_PREFILL_KEYS = {"packed", "impl", "prefill_chunk", "prefill_tokens",
+                 "prefill_calls", "prefill_tokens_per_s", "mean_ttft_s",
+                 "max_stall_tokens", "tokens_per_s"}
+
+
+def check_schema(rec: dict) -> None:
+    """Assert the BENCH_serving.json record shape (CI bit-rot gate)."""
+    for key in ("bench", "arch", "backend", "smoke", "results", "prefill",
+                "prefill_long", "speedup_fused_vs_seed",
+                "speedup_packed_vs_seq_prefill"):
+        assert key in rec, f"missing top-level key {key!r}"
+    for name in ("seed", "fused", "fused_flash"):
+        row = rec["results"][name]
+        missing = _DECODE_KEYS - set(row)
+        assert not missing, f"decode row {name!r} missing {missing}"
+    for section in ("prefill", "prefill_long"):
+        for name in ("seq", "packed"):
+            row = rec[section][name]
+            missing = _PREFILL_KEYS - set(row)
+            assert not missing, f"{section} row {name!r} missing {missing}"
 
 
 def _tokens(eng) -> int:
@@ -76,6 +111,56 @@ def run_engine(cfg, params, *, fused: bool, impl: str, max_batch: int,
     }
 
 
+def run_prefill_workload(cfg, params, *, packed: bool, impl: str,
+                         max_batch: int, kv_len: int, max_new_tokens: int,
+                         prompt_lens, prefill_chunk: int = 0,
+                         repeat: int = 3) -> dict:
+    """Prefill-bound drain (long prompts, short generations): one engine,
+    repeated timed drains (all compiles in the warm-up), per-drain counter
+    deltas — same methodology as the decode workload."""
+    import numpy as np
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=max_batch, kv_len=kv_len, max_new_tokens=max_new_tokens,
+        impl=impl, fused=True, packed=packed, prefill_chunk=prefill_chunk))
+
+    def drain():
+        rng = np.random.default_rng(0)
+        n0 = len(eng.finished)
+        tok0, t0, call0 = eng.prefill_tokens, eng.prefill_time, eng.prefill_calls
+        eng.max_stall_tokens = 0
+        for plen in prompt_lens:
+            eng.submit(rng.integers(0, cfg.vocab_size, size=plen))
+        eng.run_until_drained()
+        done = eng.finished[n0:]
+        return {
+            "prefill_tokens": eng.prefill_tokens - tok0,
+            "prefill_calls": eng.prefill_calls - call0,
+            "prefill_tokens_per_s": (eng.prefill_tokens - tok0)
+                                    / max(eng.prefill_time - t0, 1e-9),
+            "mean_ttft_s": float(np.mean([r.t_first_token - r.t_enqueue
+                                          for r in done])),
+            "max_stall_tokens": eng.max_stall_tokens,
+            "tokens_per_s": (sum(len(r.output) for r in done)
+                             / max(max(r.t_done for r in done)
+                                   - min(r.t_enqueue for r in done), 1e-9)),
+        }
+
+    drain()                        # warm-up: all compiles happen here
+    best = None
+    for _ in range(repeat):
+        s = drain()
+        if best is None or s["prefill_tokens_per_s"] > best["prefill_tokens_per_s"]:
+            best = s
+    return {
+        "packed": packed,
+        "impl": impl,
+        "prefill_chunk": prefill_chunk,
+        **best,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
@@ -88,13 +173,36 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--decode-chunk", type=int, default=16,
                     help="device iterations per host sync on the fused path")
-    ap.add_argument("--out", default=os.path.join(EXPERIMENTS,
-                                                  "BENCH_serving.json"))
+    ap.add_argument("--prefill-max-batch", type=int, default=8)
+    ap.add_argument("--prefill-kv-len", type=int, default=128)
+    ap.add_argument("--prefill-chunk", type=int, default=96)
+    ap.add_argument("--prefill-requests", type=int, default=48)
+    ap.add_argument("--prefill-prompt-len", type=int, default=12,
+                    help="prefill-bound workload prompt length")
+    ap.add_argument("--prefill-new-tokens", type=int, default=4,
+                    help="short generations: the drain stays prefill-bound")
+    ap.add_argument("--prefill-long-len", type=int, default=100,
+                    help="long-prompt (chunked) workload prompt length")
+    ap.add_argument("--prefill-long-count", type=int, default=8,
+                    help="long prompts appended to the mixed workload")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: experiments/BENCH_serving"
+                         ".json, or BENCH_serving_smoke.json with --smoke "
+                         "so CI never clobbers the recorded full run)")
     args = ap.parse_args()
+    if args.out is None:
+        args.out = os.path.join(
+            EXPERIMENTS,
+            "BENCH_serving_smoke.json" if args.smoke else "BENCH_serving.json")
     if args.smoke:
         args.max_batch, args.kv_len = 2, 64
         args.max_new_tokens, args.prompt_len = 8, 8
         args.requests = 3
+        args.prefill_max_batch, args.prefill_kv_len = 2, 64
+        args.prefill_chunk = 32
+        args.prefill_requests, args.prefill_prompt_len = 6, 8
+        args.prefill_new_tokens = 2
+        args.prefill_long_len, args.prefill_long_count = 40, 2
 
     import jax
     import jax.numpy as jnp
@@ -117,25 +225,76 @@ def main():
         "fused_flash": run_engine(cfg, params, fused=True, impl="flash",
                                   decode_chunk=args.decode_chunk, **shape),
     }
+
+    # prefill-bound workloads: many prompts, short generations.  "prefill"
+    # is the admission-bottleneck burst (every prompt fits the packed
+    # stream); "prefill_long" mixes in prompts longer than the chunk, so
+    # the packed path exercises chunked prefill (bounded decode stall)
+    # while the sequential path stalls for a whole prompt per admission.
+    pshape = dict(max_batch=args.prefill_max_batch,
+                  kv_len=args.prefill_kv_len,
+                  max_new_tokens=args.prefill_new_tokens, impl="ref",
+                  repeat=5)
+    burst = [args.prefill_prompt_len] * args.prefill_requests
+    mixed = ([args.prefill_prompt_len]
+             * (args.prefill_requests - args.prefill_long_count)
+             + [args.prefill_long_len] * args.prefill_long_count)
+    prefill = {
+        "seq": run_prefill_workload(cfg, params, packed=False,
+                                    prompt_lens=burst, **pshape),
+        "packed": run_prefill_workload(cfg, params, packed=True,
+                                       prefill_chunk=args.prefill_chunk,
+                                       prompt_lens=burst, **pshape),
+    }
+    prefill_long = {
+        "seq": run_prefill_workload(cfg, params, packed=False,
+                                    prompt_lens=mixed, **pshape),
+        "packed": run_prefill_workload(cfg, params, packed=True,
+                                       prefill_chunk=args.prefill_chunk,
+                                       prompt_lens=mixed, **pshape),
+    }
+
     rec = {
-        "bench": "serving_decode",
+        "bench": "serving",
         "arch": args.arch,
         "backend": jax.default_backend(),
         "smoke": bool(args.smoke),
         **shape,
+        "prefill_shape": {
+            "max_batch": args.prefill_max_batch,
+            "kv_len": args.prefill_kv_len, "chunk": args.prefill_chunk,
+            "requests": args.prefill_requests,
+            "prompt_len": args.prefill_prompt_len,
+            "long_len": args.prefill_long_len,
+            "long_count": args.prefill_long_count,
+            "max_new_tokens": args.prefill_new_tokens,
+        },
         "results": results,
+        "prefill": prefill,
+        "prefill_long": prefill_long,
         "speedup_fused_vs_seed": (results["fused"]["tokens_per_s"]
                                   / max(results["seed"]["tokens_per_s"],
                                         1e-9)),
+        "speedup_packed_vs_seq_prefill": (
+            prefill["packed"]["prefill_tokens_per_s"]
+            / max(prefill["seq"]["prefill_tokens_per_s"], 1e-9)),
     }
+    check_schema(rec)
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
 
     rows = [{"path": k, **v} for k, v in results.items()]
     emit(rows, "serving_decode")
-    print(f"speedup fused/seed: {rec['speedup_fused_vs_seed']:.2f}x "
-          f"-> {args.out}")
+    rows = ([{"path": k, **v} for k, v in prefill.items()]
+            + [{"path": f"long_{k}", **v} for k, v in prefill_long.items()])
+    emit(rows, "serving_prefill")
+    print(f"speedup fused/seed: {rec['speedup_fused_vs_seed']:.2f}x · "
+          f"prefill packed/seq: {rec['speedup_packed_vs_seq_prefill']:.2f}x "
+          f"(ttft {prefill['seq']['mean_ttft_s']*1e3:.1f} -> "
+          f"{prefill['packed']['mean_ttft_s']*1e3:.1f} ms · long stall "
+          f"{prefill_long['seq']['max_stall_tokens']} -> "
+          f"{prefill_long['packed']['max_stall_tokens']} tok) -> {args.out}")
 
 
 if __name__ == "__main__":

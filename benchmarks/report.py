@@ -113,6 +113,28 @@ def serving_table() -> str:
     out.append("")
     out.append(f"fused / seed engine throughput: "
                f"**{r['speedup_fused_vs_seed']:.2f}×**")
+
+    ps = r.get("prefill_shape", {})
+    out += ["",
+            "#### Prefill admission (packed ragged + chunked vs sequential)",
+            "",
+            f"kv_len={ps.get('kv_len')} · chunk={ps.get('chunk')} · "
+            f"{ps.get('requests')} requests × {ps.get('prompt_len')} tok "
+            f"(+{ps.get('long_count')} × {ps.get('long_len')} tok in the "
+            f"long workload) · max_new={ps.get('max_new_tokens')}",
+            "",
+            "| workload | path | prefill tok/s | mean TTFT ms | calls | "
+            "max stall (tok) |",
+            "|---|---|---|---|---|---|"]
+    for section in ("prefill", "prefill_long"):
+        for name, row in r.get(section, {}).items():
+            out.append(
+                f"| {section} | {name} | {row['prefill_tokens_per_s']:.0f} | "
+                f"{row['mean_ttft_s']*1e3:.1f} | {row['prefill_calls']} | "
+                f"{row['max_stall_tokens']} |")
+    out.append("")
+    out.append(f"packed / sequential prefill throughput: "
+               f"**{r['speedup_packed_vs_seq_prefill']:.2f}×**")
     return "\n".join(out)
 
 

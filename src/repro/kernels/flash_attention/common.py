@@ -1,0 +1,33 @@
+"""Shared constants and helpers for the flash-attention kernel family.
+
+Single home for the masking sentinel and the block-alignment arithmetic
+that `kernel.py`, `decode.py`, `ref.py` and `ops.py` previously each
+copy-pasted.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Large-but-finite mask value: -inf would poison the online-softmax
+# rescaling (exp(-inf - -inf) = NaN) on fully-masked rows; 0.7 * f32max
+# keeps exp() underflowing to exactly 0.0 without overflow on negation.
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def block_size(cap: int, seq: int) -> int:
+    """Kernel block edge: the requested block capped at the sequence."""
+    return min(cap, seq)
+
+
+def blocks_aligned(seq: int, cap: int) -> bool:
+    """True when ``seq`` tiles exactly into ``block_size(cap, seq)`` blocks
+    (the Pallas grids here require exact tiling; callers fall back to the
+    reference path otherwise)."""
+    return seq > 0 and seq % block_size(cap, seq) == 0
+
+
+def vmem(shape, dtype=jnp.float32):
+    """VMEM scratch allocation (works in interpret mode on CPU too)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

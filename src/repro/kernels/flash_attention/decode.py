@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+from repro.kernels.flash_attention.common import NEG_INF, block_size, vmem
 
 
 def _decode_kernel(
@@ -117,7 +117,7 @@ def flash_decode_fwd(
     if rep * Hkv != Hq:
         raise ValueError(f"Hq ({Hq}) must be a multiple of Hkv ({Hkv})")
     scale = scale if scale is not None else hd ** -0.5
-    bk = min(block_k, Skv)
+    bk = block_size(block_k, Skv)
     if Skv % bk:
         raise ValueError(f"block size ({bk}) must divide Skv ({Skv})")
 
@@ -145,18 +145,11 @@ def flash_decode_fwd(
         out_specs=pl.BlockSpec((1, 1, rep, hdv), lambda b, h, ik: (b, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hdv), q.dtype),
         scratch_shapes=[
-            _vmem((rep, 1)),
-            _vmem((rep, 1)),
-            _vmem((rep, hdv)),
+            vmem((rep, 1)),
+            vmem((rep, 1)),
+            vmem((rep, hdv)),
         ],
         interpret=interpret,
     )(qf, kt, vt, qp, kp)
 
     return out.reshape(B, 1, Hq, hdv)
-
-
-def _vmem(shape):
-    """f32 VMEM scratch (works in interpret mode on CPU too)."""
-    from jax.experimental.pallas import tpu as pltpu
-
-    return pltpu.VMEM(shape, jnp.float32)

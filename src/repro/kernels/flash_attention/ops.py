@@ -12,15 +12,18 @@
 Two Pallas kernels sit behind this wrapper:
 
 - :func:`..kernel.flash_attention_fwd` — train/prefill self-attention with
-  implicit positions (long query blocks);
+  implicit positions (long query blocks).  With ``segments=`` it runs the
+  **ragged/packed** variant: several prompts in one token stream, per-token
+  prompt ids (-1 = pad), no cross-prompt attention;
 - :func:`..decode.flash_decode_fwd`    — the decode fast path: ``Sq == 1``
   with explicit ``q_pos``/``kv_pos`` vectors (slotted / ring-buffer caches,
   per-slot lengths, empty-slot masking).
 
 The decode kernel treats ``kv_pos < 0`` as invalid; an explicit ``kv_valid``
 mask is folded into ``kv_pos`` before the call (masked entries become -1),
-so any caller-supplied mask is honoured exactly.  Cross-attention decode
-(explicit positions but ``causal=False``) routes to the reference path.
+so any caller-supplied mask is honoured exactly.  Non-causal decode with
+explicit positions (cross-attention) is expressed by callers as causal
+attention with ``q_pos >= max(kv_pos)`` — see ``models/attention.py``.
 """
 from __future__ import annotations
 
@@ -29,21 +32,23 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.flash_attention.common import blocks_aligned
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.flash_attention import kernel as _kernel
 from repro.kernels.flash_attention import decode as _decode
 
 
-def _pallas_ok(q, k, causal, q_pos, kv_pos, kv_valid, window):
+def _pallas_ok(q, k, causal, q_pos, kv_pos, kv_valid, window, segments):
     if q_pos is not None or kv_pos is not None or kv_valid is not None:
         return False
     B, Sq, Hq, hd = q.shape
     Skv = k.shape[1]
     if Sq < 8 or Skv < 8:
         return False
-    bq = min(128, Sq)
-    bk = min(128, Skv)
-    return Sq % bq == 0 and Skv % bk == 0 and Hq % k.shape[2] == 0
+    if segments is not None and Sq != Skv:
+        return False
+    return (blocks_aligned(Sq, 128) and blocks_aligned(Skv, 128)
+            and Hq % k.shape[2] == 0)
 
 
 def _decode_ok(q, k, causal, q_pos, kv_pos):
@@ -53,8 +58,7 @@ def _decode_ok(q, k, causal, q_pos, kv_pos):
     Skv, Hkv = k.shape[1], k.shape[2]
     if Sq != 1 or Hq % Hkv:
         return False
-    bk = min(128, Skv)
-    return Skv % bk == 0
+    return blocks_aligned(Skv, 128)
 
 
 def attention(
@@ -65,6 +69,7 @@ def attention(
     q_pos: Optional[jax.Array] = None,
     kv_pos: Optional[jax.Array] = None,
     kv_valid: Optional[jax.Array] = None,
+    segments: Optional[jax.Array] = None,   # (B, S) packed prompt ids, -1 pad
     causal: bool = True,
     window: int = 0,
     softcap: float = 0.0,
@@ -86,15 +91,16 @@ def attention(
             return _decode.flash_decode_fwd(
                 q, k, v, q_pos=q_pos, kv_pos=kp, window=window,
                 softcap=softcap, scale=scale, interpret=interpret)
-        if _pallas_ok(q, k, causal, q_pos, kv_pos, kv_valid, window):
+        if _pallas_ok(q, k, causal, q_pos, kv_pos, kv_valid, window, segments):
             qt = q.transpose(0, 2, 1, 3)   # (B, H, S, hd)
             kt = k.transpose(0, 2, 1, 3)
             vt = v.transpose(0, 2, 1, 3)
             out = _kernel.flash_attention_fwd(
-                qt, kt, vt, causal=causal, window=window, softcap=softcap,
-                scale=scale, interpret=interpret)
+                qt, kt, vt, segments=segments, causal=causal, window=window,
+                softcap=softcap, scale=scale, interpret=interpret)
             return out.transpose(0, 2, 1, 3)
 
     return attention_ref(
         q, k, v, q_pos=q_pos, kv_pos=kv_pos, kv_valid=kv_valid,
+        q_seg=segments, kv_seg=segments,
         causal=causal, window=window, softcap=softcap, scale=scale)

@@ -1,10 +1,12 @@
 """Pure-jnp oracle for flash attention (and the CPU / dry-run exec path).
 
 Supports GQA/MQA, causal + sliding-window masks, gemma-style logit softcap,
-explicit position vectors (ring-buffer KV caches), and q-chunking so the
-O(Sq x Skv) score matrix never materialises for long sequences — the same
-"never leave fast memory" property the paper gets from fusing score+softmax
-on the SM chiplets (§3.2 step 4), expressed at the XLA level.
+explicit position vectors (ring-buffer KV caches), packed-segment masking
+(ragged prefill: a query never attends across a prompt boundary), and
+q-chunking so the O(Sq x Skv) score matrix never materialises for long
+sequences — the same "never leave fast memory" property the paper gets from
+fusing score+softmax on the SM chiplets (§3.2 step 4), expressed at the XLA
+level.
 """
 from __future__ import annotations
 
@@ -13,10 +15,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+from repro.kernels.flash_attention.common import NEG_INF
 
 
-def _mask(q_pos, kv_pos, kv_valid, causal, window):
+def _mask(q_pos, kv_pos, kv_valid, causal, window, q_seg=None, kv_seg=None):
     """(B, Sq, Skv) bool — True = attend."""
     m = jnp.ones((q_pos.shape[0], q_pos.shape[1], kv_pos.shape[1]), bool)
     if causal:
@@ -25,6 +27,10 @@ def _mask(q_pos, kv_pos, kv_valid, causal, window):
         m &= q_pos[:, :, None] - kv_pos[:, None, :] < window
     if kv_valid is not None:
         m &= kv_valid[:, None, :]
+    if q_seg is not None:
+        # pad rows (id -1) are fully masked -> exact zero outputs
+        m &= (q_seg[:, :, None] == kv_seg[:, None, :]) & \
+             (q_seg[:, :, None] >= 0)
     return m
 
 
@@ -50,6 +56,8 @@ def attention_ref(
     q_pos: Optional[jax.Array] = None,    # (B, Sq) int32
     kv_pos: Optional[jax.Array] = None,   # (B, Skv) int32
     kv_valid: Optional[jax.Array] = None,  # (B, Skv) bool
+    q_seg: Optional[jax.Array] = None,    # (B, Sq) int32 packed prompt ids
+    kv_seg: Optional[jax.Array] = None,   # (B, Skv) int32
     causal: bool = True,
     window: int = 0,
     softcap: float = 0.0,
@@ -64,6 +72,8 @@ def attention_ref(
         q_pos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
     if kv_pos is None:
         kv_pos = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32), (B, Skv))
+    if (q_seg is None) != (kv_seg is None):
+        raise ValueError("q_seg and kv_seg must be passed together")
 
     qr = q.reshape(B, Sq, Hkv, rep, hd)
 
@@ -71,20 +81,23 @@ def attention_ref(
         nc = Sq // q_chunk
         qc = qr.reshape(B, nc, q_chunk, Hkv, rep, hd).transpose(1, 0, 2, 3, 4, 5)
         pc = q_pos.reshape(B, nc, q_chunk).transpose(1, 0, 2)
+        sc = (jnp.zeros((nc, B, q_chunk), jnp.int32) if q_seg is None
+              else q_seg.reshape(B, nc, q_chunk).transpose(1, 0, 2))
 
         def one(args):
-            qi, pi = args
-            m = _mask(pi, kv_pos, kv_valid, causal, window)
+            qi, pi, si = args
+            m = _mask(pi, kv_pos, kv_valid, causal, window,
+                      None if q_seg is None else si, kv_seg)
             return _attend_block(qi, k, v, m, scale, softcap)
 
         # remat each q-chunk: without this the chunk loop saves every
         # chunk's (bq × Skv) probabilities for backward — the full score
         # matrix resident during each layer's bwd, even under layer-level
         # remat (measured: ~2.2 GiB/layer on llama-vision train_4k)
-        out = jax.lax.map(jax.checkpoint(one), (qc, pc))  # (nc, B, qc, ...)
+        out = jax.lax.map(jax.checkpoint(one), (qc, pc, sc))  # (nc, B, qc, ...)
         out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, v.shape[-1])
         return out
 
-    m = _mask(q_pos, kv_pos, kv_valid, causal, window)
+    m = _mask(q_pos, kv_pos, kv_valid, causal, window, q_seg, kv_seg)
     out = _attend_block(qr, k, v, m, scale, softcap)
     return out.reshape(B, Sq, Hq, v.shape[-1])

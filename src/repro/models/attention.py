@@ -5,6 +5,20 @@ These are the paper's *dynamic* kernels — per-token-changing operands that
 the paper routes to the SM/MC/DRAM plane (§3.1).  The sharding plan gives
 their activations head-wise placement ("SM cluster"); the inner product
 runs through :mod:`repro.kernels.flash_attention`.
+
+Serving modes beyond train/decode:
+
+- ``mode="prefill"`` with ``segments=`` — **packed ragged prefill**: several
+  prompts in one token stream, per-token prompt ids, no cross-prompt
+  attention.  Returns the *raw per-token* cache (no slot padding); the
+  serving engine gathers each segment into its KV slot.
+- ``mode="chunk"`` — **chunked prefill continuation**: a block of S tokens
+  per batch row is written into the existing KV cache at explicit
+  positions (``pos < 0`` = pad, dropped) and attends to the whole cache,
+  so later chunks of a long prompt see the KV of earlier chunks.
+- ``mode="prefill"`` with ``length=`` — right-padded single-prompt prefill
+  whose cache state is *exact* at ``length`` (ring caches keep the last
+  real tokens, not the pads).
 """
 from __future__ import annotations
 
@@ -13,6 +27,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.flash_attention.common import NEG_INF
 from repro.kernels.flash_attention.ops import attention as flash_attention
 from repro.models.modules import apply_rope, dense_init, rmsnorm
 from repro.parallel import constrain
@@ -87,16 +102,43 @@ def init_kv_cache(cfg, kind: str, batch: int, kv_len: int, dtype, n_cross: int =
     }
 
 
-def _ring_fill(k, v, positions, cap):
-    """Build a ring cache holding the last ``cap`` of S prefilled tokens."""
+def ring_positions(length, cap: int):
+    """Position held by each slot of a ``cap``-entry ring cache after
+    prefilling ``length`` tokens: slot ``s`` holds ``p ≡ s (mod cap)``,
+    ``p ∈ [length-cap, length)``; ``p < 0`` = empty.  ``length`` broadcasts
+    (scalar → (cap,), (B, 1) → (B, cap)).  For global caches (cap >= length)
+    this degenerates to the identity layout.  The single source of truth for
+    the layout shared by prefill ring fill and the serving engine's packed
+    multi-slot insert."""
+    s_idx = jnp.arange(cap, dtype=jnp.int32)
+    return length - 1 - ((length - 1 - s_idx) % cap)
+
+
+def _ring_fill(k, v, positions, cap, length=None):
+    """Build a ring cache holding the last ``cap`` prefilled tokens.
+
+    Without ``length`` the stream is exact and the last ``cap`` of S tokens
+    are kept.  With ``length`` (traced scalar) the stream is right-padded
+    (positions are ``arange(S)``) and the ring keeps the last
+    ``min(length, cap)`` *real* tokens — pads never enter the cache and
+    never evict real entries.
+    """
     B, S = k.shape[0], k.shape[1]
-    keep = min(S, cap)
-    pos_tail = positions[:, S - keep:]               # (B, keep)
-    slots = pos_tail % cap
-    bidx = jnp.arange(B)[:, None]
-    kc = jnp.zeros((B, cap) + k.shape[2:], k.dtype).at[bidx, slots].set(k[:, S - keep:])
-    vc = jnp.zeros((B, cap) + v.shape[2:], v.dtype).at[bidx, slots].set(v[:, S - keep:])
-    pc = jnp.full((B, cap), -1, jnp.int32).at[bidx, slots].set(pos_tail)
+    if length is None:
+        keep = min(S, cap)
+        pos_tail = positions[:, S - keep:]               # (B, keep)
+        slots = pos_tail % cap
+        bidx = jnp.arange(B)[:, None]
+        kc = jnp.zeros((B, cap) + k.shape[2:], k.dtype).at[bidx, slots].set(k[:, S - keep:])
+        vc = jnp.zeros((B, cap) + v.shape[2:], v.dtype).at[bidx, slots].set(v[:, S - keep:])
+        pc = jnp.full((B, cap), -1, jnp.int32).at[bidx, slots].set(pos_tail)
+        return kc, vc, pc
+    p = ring_positions(length, cap)
+    valid = p >= 0
+    src = jnp.clip(p, 0, S - 1)
+    kc = jnp.where(valid[None, :, None, None], k[:, src], 0)
+    vc = jnp.where(valid[None, :, None, None], v[:, src], 0)
+    pc = jnp.broadcast_to(jnp.where(valid, p, -1), (B, cap))
     return kc, vc, pc
 
 
@@ -116,14 +158,23 @@ def _pad_pos(pos, cap):
 
 
 def _ring_write(cache, new_k, new_v, pos):
-    """Write one token at per-batch ``pos`` (ring for local, direct for global)."""
+    """Write S tokens at per-(row, token) ``pos`` into the cache (ring for
+    local, direct for global).  ``pos < 0`` entries are dropped — dead pool
+    slots and chunk pads never touch the cache.  Within one call only the
+    last ``cap`` positions of a row survive the ring, so those are the only
+    ones written (keeps scatter indices unique per row)."""
     cap = cache["k"].shape[1]
-    slot = pos % cap
-    bidx = jnp.arange(pos.shape[0])
+    B, S = pos.shape
+    row_max = jnp.max(jnp.where(pos >= 0, pos, -1), axis=1, keepdims=True)
+    valid = (pos >= 0) & (pos > row_max - cap)
+    slot = jnp.where(valid, pos % cap, cap)          # cap = out of bounds
+    bidx = jnp.arange(B)[:, None]
     return {
-        "k": cache["k"].at[bidx, slot].set(new_k[:, 0]),
-        "v": cache["v"].at[bidx, slot].set(new_v[:, 0]),
-        "pos": cache["pos"].at[bidx, slot].set(pos),
+        "k": cache["k"].at[bidx, slot].set(
+            new_k.astype(cache["k"].dtype), mode="drop"),
+        "v": cache["v"].at[bidx, slot].set(
+            new_v.astype(cache["v"].dtype), mode="drop"),
+        "pos": cache["pos"].at[bidx, slot].set(pos, mode="drop"),
     }
 
 
@@ -137,13 +188,15 @@ def apply_attention(
     *,
     cfg,
     kind: str,               # global | local | cross
-    mode: str,               # train | prefill | decode
-    pos,                     # (B, S) int32 (decode: (B, 1))
+    mode: str,               # train | prefill | chunk | decode
+    pos,                     # (B, S) int32 (decode: (B, 1); chunk: -1 = pad)
     cache=None,
     cross_src=None,          # (B, S_src, D) for cross in train/prefill
     impl: str = "auto",
     causal: bool = True,     # encoder stacks pass False
     kv_cap: int = 0,         # prefill: cache capacity to allocate (>= S)
+    length=None,             # prefill: true prompt length of a padded stream
+    segments=None,           # prefill: (B, S) packed prompt ids, -1 = pad
 ):
     B, S, D = x.shape
     Hq, Hkv, hd, hdv = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.v_head_dim
@@ -158,9 +211,22 @@ def apply_attention(
     q = q.reshape(B, S, Hq, hd)
 
     if kind == "cross":
-        if mode == "decode":
+        if mode in ("decode", "chunk"):
             k, v = cache["k"], cache["v"]
             new_cache = cache
+            # non-causal attention over a fully-valid cache expressed via
+            # the masked explicit-position path: every q_pos >= every
+            # kv_pos makes the causal predicate vacuous, so impl="flash"
+            # runs the Pallas decode kernel instead of silently
+            # downgrading to the reference path
+            Skv = k.shape[1]
+            kv_pos = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32),
+                                      (B, Skv))
+            q = constrain(q, "act_heads")
+            out = flash_attention(q, k, v, causal=True,
+                                  softcap=cfg.attn_softcap, impl=impl,
+                                  q_pos=jnp.full((B, S), Skv, jnp.int32),
+                                  kv_pos=kv_pos, kv_valid=None)
         else:
             src = cross_src.astype(dt)
             k = src @ p["wk"].astype(dt)
@@ -171,11 +237,9 @@ def apply_attention(
             k = k.reshape(B, -1, Hkv, hd)
             v = v.reshape(B, -1, Hkv, hdv)
             new_cache = {"k": k, "v": v} if mode == "prefill" else None
-        q = constrain(q, "act_heads")
-        out = flash_attention(q, k, v, causal=False, softcap=cfg.attn_softcap,
-                              impl=impl if mode != "decode" else "ref",
-                              q_pos=None if mode != "decode" else pos,
-                              kv_pos=None, kv_valid=None)
+            q = constrain(q, "act_heads")
+            out = flash_attention(q, k, v, causal=False,
+                                  softcap=cfg.attn_softcap, impl=impl)
         out = out.reshape(B, S, Hq * hdv) @ p["wo"].astype(dt)
         return out, new_cache
 
@@ -199,21 +263,39 @@ def apply_attention(
 
     if mode in ("train", "prefill"):
         out = flash_attention(q, k, v, causal=causal, window=window,
-                              softcap=cfg.attn_softcap, impl=impl)
+                              softcap=cfg.attn_softcap, impl=impl,
+                              segments=segments)
         new_cache = None
         if mode == "prefill":
-            cap = max(kv_cap, S)
-            if kind == "local":
-                kc, vc, pc = _ring_fill(k, v, pos, min(cfg.window, cap))
-                new_cache = {"k": kc, "v": vc, "pos": pc}
+            if segments is not None:
+                # packed ragged prefill: raw per-token cache; the serving
+                # engine gathers each segment into its KV slot
+                new_cache = {"k": k, "v": v,
+                             "pos": jnp.where(segments >= 0, pos, -1)}
             else:
-                new_cache = {"k": _pad_cache(k, cap), "v": _pad_cache(v, cap),
-                             "pos": _pad_pos(pos, cap)}
-    else:  # decode: S == 1 — flash routes to the Pallas decode kernel
-        new_cache = _ring_write(cache, k, v, pos[:, 0])
-        kv_pos = new_cache["pos"]
+                cap = max(kv_cap, S)
+                if kind == "local":
+                    kc, vc, pc = _ring_fill(k, v, pos, min(cfg.window, cap),
+                                            length=length)
+                    new_cache = {"k": kc, "v": vc, "pos": pc}
+                else:
+                    new_cache = {"k": _pad_cache(k, cap),
+                                 "v": _pad_cache(v, cap),
+                                 "pos": _pad_pos(pos, cap)}
+    else:  # decode (S == 1 — Pallas decode kernel) / chunk (S-token write)
+        new_cache = _ring_write(cache, k, v, pos)
+        if mode == "chunk":
+            # attend to the PRE-write cache plus the in-stream chunk: the
+            # chunk write may evict ring entries that early chunk queries
+            # still need (their window reaches back before the chunk), and
+            # cache positions are all < the chunk's, so no duplicates
+            kc = jnp.concatenate([cache["k"].astype(k.dtype), k], axis=1)
+            vc = jnp.concatenate([cache["v"].astype(v.dtype), v], axis=1)
+            kv_pos = jnp.concatenate([cache["pos"], pos], axis=1)
+        else:
+            kc, vc, kv_pos = new_cache["k"], new_cache["v"], new_cache["pos"]
         out = flash_attention(
-            q, new_cache["k"], new_cache["v"],
+            q, kc, vc,
             q_pos=pos, kv_pos=kv_pos, kv_valid=kv_pos >= 0,
             causal=causal, window=window, softcap=cfg.attn_softcap, impl=impl)
 
@@ -250,10 +332,12 @@ def _mla_kv_latent(p, x, pos, cfg):
     return ckv, kr
 
 
-def apply_mla(p, x, *, cfg, mode, pos, cache=None, impl="auto", kv_cap: int = 0):
-    """MLA self-attention.  train/prefill: naive expanded path; decode:
-    absorbed latent-space path (the serving memory-traffic optimisation the
-    paper's MQA discussion anticipates, §3.2)."""
+def apply_mla(p, x, *, cfg, mode, pos, cache=None, impl="auto", kv_cap: int = 0,
+              length=None, segments=None):
+    """MLA self-attention.  train/prefill: naive expanded path (packed
+    ragged prefill via ``segments=``); decode/chunk: absorbed latent-space
+    path (the serving memory-traffic optimisation the paper's MQA
+    discussion anticipates, §3.2)."""
     B, S, D = x.shape
     dt = x.dtype
     H, dn, dr, dv = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
@@ -272,19 +356,28 @@ def apply_mla(p, x, *, cfg, mode, pos, cache=None, impl="auto", kv_cap: int = 0)
         v = constrain(v, "kv_heads")
         q = jnp.concatenate([q_nope, q_rope], -1)
         q = constrain(q, "act_heads")
-        out = flash_attention(q, k, v, causal=True, scale=scale, impl=impl)
+        out = flash_attention(q, k, v, causal=True, scale=scale, impl=impl,
+                              segments=segments)
         new_cache = None
         if mode == "prefill":
-            cap = max(kv_cap, S)
-            new_cache = {"ckv": _pad_cache(ckv, cap), "kr": _pad_cache(kr, cap),
-                         "pos": _pad_pos(pos, cap)}
-    else:  # decode — absorbed
-        bidx = jnp.arange(B)
-        slot = pos[:, 0]
+            if segments is not None:
+                new_cache = {"ckv": ckv, "kr": kr,
+                             "pos": jnp.where(segments >= 0, pos, -1)}
+            else:
+                cap = max(kv_cap, S)
+                new_cache = {"ckv": _pad_cache(ckv, cap),
+                             "kr": _pad_cache(kr, cap),
+                             "pos": _pad_pos(pos, cap)}
+    else:  # decode / chunk — absorbed; pos < 0 entries are dropped
+        cap = cache["ckv"].shape[1]
+        bidx = jnp.arange(B)[:, None]
+        slot = jnp.where(pos >= 0, pos, cap)         # cap = out of bounds
         new_cache = {
-            "ckv": cache["ckv"].at[bidx, slot].set(ckv[:, 0]),
-            "kr": cache["kr"].at[bidx, slot].set(kr[:, 0]),
-            "pos": cache["pos"].at[bidx, slot].set(pos[:, 0]),
+            "ckv": cache["ckv"].at[bidx, slot].set(
+                ckv.astype(cache["ckv"].dtype), mode="drop"),
+            "kr": cache["kr"].at[bidx, slot].set(
+                kr.astype(cache["kr"].dtype), mode="drop"),
+            "pos": cache["pos"].at[bidx, slot].set(pos, mode="drop"),
         }
         ckv_all, kr_all, kv_pos = new_cache["ckv"], new_cache["kr"], new_cache["pos"]
         w_uk = p["wkv_b"][..., :dn].astype(dt)        # (kvr, H, dn)
@@ -296,8 +389,10 @@ def apply_mla(p, x, *, cfg, mode, pos, cache=None, impl="auto", kv_cap: int = 0)
                                kr_all.astype(jnp.float32))) * scale
         mask = (kv_pos[:, None, None, :] <= pos[:, None, :, None]) & \
                (kv_pos >= 0)[:, None, None, :]
-        logits = jnp.where(mask, logits, -0.7 * float(jnp.finfo(jnp.float32).max))
-        w = jax.nn.softmax(logits, axis=-1).astype(dt)
+        logits = jnp.where(mask, logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        # fully-masked rows (chunk pads) must produce zeros, not NaN
+        w = jnp.where(mask.any(axis=-1)[..., None], w, 0.0).astype(dt)
         ctx = jnp.einsum("bhqk,bkr->bqhr", w, ckv_all)
         out = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv)
 

@@ -57,18 +57,29 @@ def _rglru_core(u, p):
     return a, b
 
 
-def apply_rglru(p, x, *, cfg, mode, cache=None):
-    """x (B, S, D) -> (y, new_cache)."""
+def apply_rglru(p, x, *, cfg, mode, cache=None, length=None):
+    """x (B, S, D) -> (y, new_cache).
+
+    ``length`` (prefill only, traced scalar): true prompt length of a
+    right-padded stream — pads become identity recurrence steps (a=1, b=0)
+    and are excluded from the conv state, so the prefill cache at
+    ``length`` is exactly the unpadded one.
+    """
     B, S, D = x.shape
     dt = x.dtype
 
     g = jax.nn.gelu(x @ p["w_gate"].astype(dt), approximate=True)
     u = x @ p["w_branch"].astype(dt)
     conv_state = cache["conv"] if cache is not None and mode == "decode" else None
-    u, new_conv = causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    u, new_conv = causal_conv(u, p["conv_w"], p["conv_b"], conv_state,
+                              length=length if mode == "prefill" else None)
     u = constrain(u, "act_ff")
 
     a, b = _rglru_core(u, p)
+    if length is not None and mode == "prefill":
+        real = (jnp.arange(S) < length)[None, :, None]
+        a = jnp.where(real, a, 1.0)
+        b = jnp.where(real, b, 0.0)
 
     if mode == "decode":
         h = a[:, 0] * cache["h"] + b[:, 0]                    # (B, W)

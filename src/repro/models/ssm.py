@@ -22,8 +22,14 @@ NEG_INF = -1e30
 # causal depthwise conv (width w) with optional streaming state
 # ---------------------------------------------------------------------------
 
-def causal_conv(x, w, b, state=None):
-    """x (B, S, C); w (W, C); state (B, W-1, C) or None -> (y, new_state)."""
+def causal_conv(x, w, b, state=None, length=None):
+    """x (B, S, C); w (W, C); state (B, W-1, C) or None -> (y, new_state).
+
+    ``length`` (traced scalar): true token count of a right-padded stream —
+    the streaming state is then the last W-1 inputs *before* ``length``
+    (missing ones zero), so pads never enter the state.  Conv outputs at
+    positions >= length are garbage and must not be consumed.
+    """
     B, S, C = x.shape
     W = w.shape[0]
     if state is None:
@@ -34,7 +40,13 @@ def causal_conv(x, w, b, state=None):
     y = sum(xp[:, i:i + S] * w[i].astype(x.dtype) for i in range(W))
     if b is not None:
         y = y + b.astype(x.dtype)
-    new_state = xp[:, S:]                              # last W-1 inputs
+    if length is None:
+        new_state = xp[:, S:]                          # last W-1 inputs
+    else:
+        idx = length - (W - 1) + jnp.arange(W - 1)     # inputs before length
+        valid = idx >= 0
+        new_state = jnp.where(valid[None, :, None],
+                              x[:, jnp.clip(idx, 0, S - 1)], 0)
     return y, new_state
 
 
@@ -158,8 +170,14 @@ def init_ssm_cache(cfg, batch, dtype):
     }
 
 
-def apply_mamba(p, x, *, cfg, mode, cache=None):
-    """x (B, S, D) -> (y, new_cache)."""
+def apply_mamba(p, x, *, cfg, mode, cache=None, length=None):
+    """x (B, S, D) -> (y, new_cache).
+
+    ``length`` (prefill only, traced scalar): true prompt length of a
+    right-padded stream.  Pads are masked out of the recurrence (dt = 0 →
+    state passes through unchanged) and out of the conv state, so the
+    prefill cache at ``length`` is exactly the unpadded one.
+    """
     B, S, D = x.shape
     d_inner, H, P, N, G = _dims(cfg)
     dt_x = x.dtype
@@ -170,13 +188,17 @@ def apply_mamba(p, x, *, cfg, mode, cache=None):
     dt_raw = zxbcdt[..., -H:]
 
     conv_state = cache["conv"] if cache is not None and mode == "decode" else None
-    xBC, new_conv = causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC, new_conv = causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state,
+                                length=length if mode == "prefill" else None)
     xBC = jax.nn.silu(xBC)
 
     x_ssm = xBC[..., :d_inner].reshape(B, S, H, P)
     Bm = xBC[..., d_inner:d_inner + G * N].reshape(B, S, G, N)
     Cm = xBC[..., d_inner + G * N:].reshape(B, S, G, N)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    if length is not None and mode == "prefill":
+        # dt = 0 on pads: exp(dt*A) = 1 and dt*x = 0 — identity update
+        dt = jnp.where((jnp.arange(S) < length)[None, :, None], dt, 0.0)
     A = -jnp.exp(p["A_log"])
 
     if mode == "decode":

@@ -154,17 +154,19 @@ def init_params(cfg: ModelConfig, key, *, param_dtype=jnp.float32):
 # ---------------------------------------------------------------------------
 
 def _apply_layer(p, x, *, cfg, kind, use_moe, mode, pos, cache, cross_src,
-                 impl, causal, kv_cap=0):
+                 impl, causal, kv_cap=0, length=None, segments=None):
     aux = jnp.zeros((), jnp.float32)
     new_cache = None
     if kind == "ssm":
         h = M.apply_norm(p["ln1"], x)
-        out, new_cache = apply_mamba(p["mamba"], h, cfg=cfg, mode=mode, cache=cache)
+        out, new_cache = apply_mamba(p["mamba"], h, cfg=cfg, mode=mode,
+                                     cache=cache, length=length)
         x = constrain(x + out, "residual")
         return x, new_cache, aux
     if kind == "recurrent":
         h = M.apply_norm(p["ln1"], x)
-        out, c = apply_rglru(p["rec"], h, cfg=cfg, mode=mode, cache=cache)
+        out, c = apply_rglru(p["rec"], h, cfg=cfg, mode=mode, cache=cache,
+                             length=length)
         x = constrain(x + out, "residual")
         h = M.apply_norm(p["ln2"], x)
         x = constrain(x + M.apply_mlp(p["mlp"], h, cfg), "residual")
@@ -185,19 +187,20 @@ def _apply_layer(p, x, *, cfg, kind, use_moe, mode, pos, cache, cross_src,
         c_self = cache["attn"] if cache is not None else None
         out, c = apply_attention(p["attn"], h, cfg=cfg, kind=kind, mode=mode,
                                  pos=pos, cache=c_self, impl=impl, causal=causal,
-                                 kv_cap=kv_cap)
+                                 kv_cap=kv_cap, length=length, segments=segments)
         x = constrain(x + out + M.apply_mlp(p["mlp"], h, cfg), "residual")
         return x, ({"attn": c} if mode != "train" else None), aux
 
     if cfg.is_mla:
         c_self = cache["attn"] if cache is not None else None
         out, c = apply_mla(p["attn"], h, cfg=cfg, mode=mode, pos=pos,
-                           cache=c_self, impl=impl, kv_cap=kv_cap)
+                           cache=c_self, impl=impl, kv_cap=kv_cap,
+                           length=length, segments=segments)
     else:
         c_self = cache["attn"] if cache is not None else None
         out, c = apply_attention(p["attn"], h, cfg=cfg, kind=kind, mode=mode,
                                  pos=pos, cache=c_self, impl=impl, causal=causal,
-                                 kv_cap=kv_cap)
+                                 kv_cap=kv_cap, length=length, segments=segments)
     if cfg.post_norm:
         out = M.apply_norm(p["ln1_post"], out)
     x = constrain(x + out, "residual")
@@ -236,7 +239,7 @@ def _apply_layer(p, x, *, cfg, kind, use_moe, mode, pos, cache, cross_src,
 # ---------------------------------------------------------------------------
 
 def _apply_block(p_blk, x, cache_blk, *, cfg, spec, mode, pos, cross_src,
-                 impl, causal, kv_cap=0):
+                 impl, causal, kv_cap=0, length=None, segments=None):
     new_cache = {}
     aux_total = jnp.zeros((), jnp.float32)
     for ui, (kind, use_moe) in enumerate(spec.units):
@@ -244,7 +247,7 @@ def _apply_block(p_blk, x, cache_blk, *, cfg, spec, mode, pos, cross_src,
         x, c_out, aux = _apply_layer(
             p_blk[f"u{ui}"], x, cfg=cfg, kind=kind, use_moe=use_moe, mode=mode,
             pos=pos, cache=c_in, cross_src=cross_src, impl=impl, causal=causal,
-            kv_cap=kv_cap)
+            kv_cap=kv_cap, length=length, segments=segments)
         new_cache[f"u{ui}"] = c_out
         aux_total = aux_total + aux
     return x, (new_cache if mode != "train" else None), aux_total
@@ -253,6 +256,7 @@ def _apply_block(p_blk, x, cache_blk, *, cfg, spec, mode, pos, cross_src,
 def run_stack(stack_params, x, *, cfg, groups, mode, pos, caches=None,
               cross_src=None, impl="auto", causal=True, remat=False,
               remat_policy: Optional[str] = None, kv_cap=0,
+              length=None, segments=None,
               decode_unroll: int = 8):
     """``decode_unroll``: decode-mode groups with at most this many repeats
     run as an unrolled Python loop instead of ``lax.scan``.  Scan passes the
@@ -268,7 +272,7 @@ def run_stack(stack_params, x, *, cfg, groups, mode, pos, caches=None,
         gp = stack_params[gi]
         gc = None if caches is None else caches[gi]
 
-        if mode == "decode" and gc is not None and not remat \
+        if mode in ("decode", "chunk") and gc is not None and not remat \
                 and spec.repeats <= decode_unroll:
             new_gc = gc
             for r in range(spec.repeats):
@@ -277,7 +281,7 @@ def run_stack(stack_params, x, *, cfg, groups, mode, pos, caches=None,
                 x, c_out, _ = _apply_block(
                     p_blk, x, c_blk, cfg=cfg, spec=spec, mode=mode, pos=pos,
                     cross_src=cross_src, impl=impl, causal=causal,
-                    kv_cap=kv_cap)
+                    kv_cap=kv_cap, length=length, segments=segments)
                 new_gc = jax.tree_util.tree_map(
                     lambda pool, one, r=r: pool.at[r].set(one.astype(pool.dtype)),
                     new_gc, c_out)
@@ -289,7 +293,8 @@ def run_stack(stack_params, x, *, cfg, groups, mode, pos, caches=None,
             p_blk, c_blk = xs
             x, c_out, aux = _apply_block(
                 p_blk, x, c_blk, cfg=cfg, spec=spec, mode=mode, pos=pos,
-                cross_src=cross_src, impl=impl, causal=causal, kv_cap=kv_cap)
+                cross_src=cross_src, impl=impl, causal=causal, kv_cap=kv_cap,
+                length=length, segments=segments)
             return x, (c_out, aux)
 
         if remat:
@@ -413,10 +418,12 @@ def prefill(params, cfg: ModelConfig, batch, *, impl="auto",
     """Returns (last-token logits (B, V), cache).
 
     ``length`` (optional traced scalar): true prompt length when ``tokens``
-    is right-padded to a bucketed shape — logits are taken at position
-    ``length - 1`` instead of the last position.  Causal masking makes the
-    prefix computation independent of the padded tail, so the returned
-    logits and the cache entries below ``length`` are exact.
+    is right-padded to a static shape — logits are taken at position
+    ``length - 1`` instead of the last position.  Causal masking makes
+    attention exact under padding; ``length`` is also threaded into the
+    stateful layer kinds (ring-buffer local attention, SSM, RG-LRU) so the
+    *cache* at ``length`` is exact too — any prompt length can be served
+    from a handful of padded compile shapes.
     """
     tokens = batch["tokens"]
     B, S = tokens.shape
@@ -426,12 +433,63 @@ def prefill(params, cfg: ModelConfig, batch, *, impl="auto",
     h = embed_tokens(params, cfg, tokens, pos, compute_dtype)
     h, caches, _ = run_stack(params["stack"], h, cfg=cfg, groups=build_groups(cfg),
                              mode="prefill", pos=pos, cross_src=cross_src,
-                             impl=impl, causal=True, kv_cap=kv_cap)
+                             impl=impl, causal=True, kv_cap=kv_cap,
+                             length=length)
     h = M.apply_norm(params["final_norm"], h)
     if length is None:
         last = h[:, -1:]
     else:
         last = jax.lax.dynamic_slice_in_dim(h, length - 1, 1, axis=1)
+    logits = unembed(params, cfg, last)[:, 0]
+    return logits, {"stack": caches}
+
+
+def prefill_packed(params, cfg: ModelConfig, tokens, positions, segments,
+                   gather_idx, *, impl="auto", compute_dtype=jnp.bfloat16):
+    """Packed ragged prefill: several prompts in one ``(1, C)`` stream.
+
+    ``positions`` are within-prompt positions (used for RoPE / absolute
+    embeddings), ``segments`` per-token prompt ids (-1 = pad) — a query
+    never attends across a prompt boundary.  ``gather_idx`` (n_seg,) picks
+    the packed index of each prompt's last token; returns
+    (logits (n_seg, V), raw per-token cache) — cache k/v/pos leaves keep
+    the packed stream layout, the caller scatters segments into KV slots.
+
+    Only attention layer kinds can be packed (SSM / recurrent state would
+    integrate across prompt boundaries).
+    """
+    if not all(k in ("global", "local") for k in cfg.layer_kinds):
+        raise ValueError(
+            f"packed prefill needs attention-only stacks, got {cfg.layer_kinds}")
+    h = embed_tokens(params, cfg, tokens, jnp.maximum(positions, 0),
+                     compute_dtype)
+    h, caches, _ = run_stack(params["stack"], h, cfg=cfg,
+                             groups=build_groups(cfg), mode="prefill",
+                             pos=positions, impl=impl, causal=True,
+                             segments=segments)
+    h = M.apply_norm(params["final_norm"], h)
+    last = h[0][gather_idx][:, None]                    # (n_seg, 1, D)
+    logits = unembed(params, cfg, last)[:, 0]
+    return logits, {"stack": caches}
+
+
+def chunk_prefill_step(params, cfg: ModelConfig, cache, tokens, pos, take_idx,
+                       *, impl="auto", compute_dtype=jnp.bfloat16):
+    """One chunked-prefill continuation step over the slot pool.
+
+    ``tokens`` (B, C): next chunk per row (right-padded); ``pos`` (B, C):
+    absolute positions, -1 = pad / inactive row; ``take_idx`` (B,): index
+    of each row's last real chunk token (0 for inactive rows).  Chunk K/V
+    is written into each row's cache at its positions, and the chunk
+    attends to the whole cache — later chunks of a long prompt see the KV
+    of earlier chunks.  Returns (logits (B, V) at take_idx, cache).
+    """
+    h = embed_tokens(params, cfg, tokens, jnp.maximum(pos, 0), compute_dtype)
+    h, caches, _ = run_stack(params["stack"], h, cfg=cfg,
+                             groups=build_groups(cfg), mode="chunk", pos=pos,
+                             caches=cache["stack"], impl=impl, causal=True)
+    h = M.apply_norm(params["final_norm"], h)
+    last = jnp.take_along_axis(h, take_idx[:, None, None], axis=1)  # (B,1,D)
     logits = unembed(params, cfg, last)[:, 0]
     return logits, {"stack": caches}
 

@@ -386,3 +386,22 @@ def serving_decode_plan(cfg: ModelConfig, mesh: Mesh, *, max_batch: int,
     (§3.1).  Feed the returned ctx to :func:`cache_shardings` for the pool."""
     shape = ShapeSpec("serving", "decode", kv_len, max_batch)
     return build_plan(cfg, shape, mesh, mode="decode")
+
+
+def serving_prefill_plan(cfg: ModelConfig, mesh: Mesh, *,
+                         prefill_chunk: int) -> tuple[Plan, PlanContext]:
+    """Prefill-mode plan for the engine's packed ragged prefill call.
+
+    The packed stream is a single ``(1, C)`` batch row, so the batch axes
+    cannot be used — the stream is sequence-sharded over ``model`` instead
+    (the FlashAttention partitioning of the score matrix the paper runs
+    across SM chiplets), with the prefill weight-gathered projection
+    strategy.  The chunked-continuation step runs over the whole slot pool
+    and uses the decode plan."""
+    shape = ShapeSpec("serving_packed", "prefill", prefill_chunk, 1)
+    seq_ax = "model" if prefill_chunk % mesh.shape["model"] == 0 else None
+    ctx = PlanContext(cfg, shape, mesh, fsdp=_serving_fsdp(cfg, mesh),
+                      dp=(), seq_axis=seq_ax)
+    plan = Plan(mesh=mesh, roles=_roles(ctx, mode="prefill"),
+                name=f"{cfg.name}:serving_packed:prefill")
+    return plan, ctx

@@ -1,41 +1,51 @@
-"""Batched serving engine with a slotted KV cache and continuous batching.
+"""Batched serving engine: slotted KV cache, continuous batching, packed
+ragged prefill and chunked prefill.
 
 The paper's evaluation is *inference*; this is the inference runtime for
 Plane A.  Design follows the production pattern (vLLM/TGI-style, expressed
-in JAX with static shapes):
+in JAX with static shapes).  Each engine iteration runs three phases:
 
-- a fixed pool of ``max_batch`` KV slots, each ``kv_len`` tokens deep
-  (static shapes → one compiled decode step, no recompilation as requests
-  come and go);
-- **continuous batching**: finished requests free their slot immediately
-  and a queued request is prefilled into it while other slots keep
-  decoding — the decode step always runs over the full slot pool with a
-  validity mask;
-- **fused decode fast path** (default): one jitted, cache-donated function
-  does decode → sample (greedy and temperature, PRNG threaded on device) →
-  position/budget/EOS bookkeeping, and the only device→host traffic per
-  iteration is one packed ``(2, max_batch)`` int32 array of
-  ``(next_token, done)`` — the serving analogue of the paper keeping the
-  attention dataflow on the fast side of the interconnect (§3.2).
-  Donation lets XLA update the KV pool in place instead of copying it
-  every token;
-- prefill is fused with slot insertion: one jitted, cache-donated call runs
-  the prompt forward pass, samples the first token on device, and inserts
-  the prefill cache into the pool via ``dynamic_update_slice``.  Prompts
-  are right-padded to bucketed lengths (causal masking keeps the logits
-  exact) so admission does not retrace per prompt length;
-- ``fused=False`` preserves the original host-looped step (host argmax,
-  per-slot Python bookkeeping, non-donated cache) as the measurement
-  baseline for ``benchmarks/perf_serving.py``;
-- greedy or temperature sampling, per-request max-token budget.
+1. **admission** — *all* queued requests that fit are packed back-to-back
+   into one ragged ``(1, C)`` token stream (``C = prefill_chunk``) and
+   prefilled in a **single** jitted call: the segmented flash kernel masks
+   cross-prompt attention, and one donated multi-slot scatter inserts every
+   segment's KV into its slot.  A burst of arrivals therefore costs one
+   device call, not one per request — time-to-first-token no longer scales
+   linearly with queue depth.  Prompts longer than ``C`` contribute their
+   first ``≤ C`` tokens and leave the slot in the *prefilling* state;
+2. **chunked-prefill continuation** — every prefilling slot advances by at
+   most one ``C``-token chunk per iteration (one batched jitted call over
+   the pool; chunk K/V is written at explicit positions and attends to the
+   whole cache, so later chunks see earlier chunks).  A long prompt can
+   never stall the decode pool for more than one chunk budget;
+3. **decode** — one jitted, cache-donated step over the full slot pool:
+   decode → sample (greedy and temperature, PRNG threaded on device) →
+   position/budget/EOS bookkeeping; the only device→host traffic per
+   iteration is one packed ``(K, 2, max_batch)`` int32 of
+   ``(next_token, done)``.  Mid-prefill and dead slots carry ``pos = -1``
+   so their decode writes are dropped, never corrupting a half-filled row.
+
+Every prefill shape is static: the packed stream is always ``(1, C)``, the
+continuation always ``(max_batch, C)``, and non-packable architectures
+(SSM / recurrent / MoE stacks, whose state or expert-capacity would couple
+packed prompts) prefill per-request right-padded to a multiple of ``C``
+with ``length``-exact state handling — no compile-per-distinct-prompt-length
+anywhere.
+
+``packed=False`` preserves the PR-1 sequential admission path (one
+bucket-padded batch-1 prefill+insert call per request) and ``fused=False``
+the original host-looped decode step — both kept as measurement baselines
+for ``benchmarks/perf_serving.py``.
 
 The engine is mesh-aware: pass ``mesh=`` to shard the slot pool (and run
 the decode step) over a pod with the decode-mode plan from
-``repro.parallel.sharding``; on CPU tests everything runs on one device
-with the same code path.
+``repro.parallel.sharding``; the packed prefill call runs under the
+sequence-sharded serving prefill plan.  On CPU tests everything runs on
+one device with the same code path.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Optional
@@ -56,9 +66,14 @@ class EngineConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0      # 0 → greedy
     eos_token: int = -1           # -1 → never stops early
-    impl: str = "ref"             # attention impl ("flash" → Pallas decode)
+    impl: str = "ref"             # attention impl ("flash" → Pallas kernels)
     seed: int = 0
     fused: bool = True            # zero-host-sync decode step (False = seed path)
+    packed: bool = True           # packed ragged prefill + chunked prefill
+    #   (False = PR-1 sequential admission: one batch-1 prefill per request)
+    prefill_chunk: int = 0        # packed-stream / chunk budget in tokens
+    #   (0 → min(128, kv_len)); also the padding quantum for non-packable
+    #   architectures, so every prefill shape is static
     decode_chunk: int = 1         # device decode iterations per step() —
     #   >1 runs a lax.scan of decode→sample on device (multi-step
     #   scheduling): host sync cost is amortised over the chunk, at the
@@ -78,7 +93,8 @@ class Request:
     t_done: float = 0.0
 
 
-# prompt-length buckets: one prefill compile per bucket, not per length
+# prompt-length buckets for the sequential (packed=False) baseline path:
+# one prefill compile per bucket, not per length
 _MIN_BUCKET = 8
 
 
@@ -99,29 +115,52 @@ class ServingEngine:
         B, S = ecfg.max_batch, ecfg.kv_len
         self.cache = T.init_cache(cfg, B, S, dtype=jnp.bfloat16)
         self.slot_req: list[Optional[Request]] = [None] * B
-        self.queue: list[Request] = []
+        # indexed FIFO admission queue: popleft is O(1) however deep the
+        # backlog (the old list.pop(0) rescan was O(n) per admission)
+        self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
         self._uid = 0
 
-        # host-transfer accounting (benchmarks/perf_serving.py)
+        # host-transfer / prefill accounting (benchmarks/perf_serving.py)
         self.host_transfers = 0
         self.host_bytes = 0
         self.decode_steps = 0
+        self.prefill_tokens = 0           # prompt tokens pushed through prefill
+        self.prefill_time = 0.0           # host wall time spent in admission
+        self.prefill_calls = 0
+        self.max_stall_tokens = 0         # max prefill tokens between decodes
+        self._stall_tokens = 0
 
-        # prompt-length bucketing is exact only when cache index == token
-        # position for every self-attention cache (causal masking hides the
-        # padded tail, and the decode write at ``pos`` overwrites the pad
-        # entry).  Ring-buffer (local-window) caches would evict real
-        # entries and SSM/recurrent state integrates the pads — those
-        # configs prefill at exact length (one compile per distinct length).
+        # packed-stream / chunk budget (also the padding quantum)
+        self._chunk = min(ecfg.prefill_chunk or min(128, S), S)
+
+        # pow2-bucketing (sequential baseline) is exact only when cache
+        # index == token position for every self-attention cache.  The
+        # packed path instead relies on length-exact prefill state for
+        # every layer kind, so it never needs this distinction.
         self._bucketed = all(k in ("global", "cross") for k in cfg.layer_kinds)
+
+        # multi-prompt packing / chunked continuation need (a) attention-only
+        # stacks — SSM/recurrent state would integrate across prompt
+        # boundaries — and (b) no MoE: packed prompts would compete for
+        # expert capacity, breaking packed==sequential equivalence
+        self._packable = (all(k in ("global", "local") for k in cfg.layer_kinds)
+                          and not cfg.n_experts
+                          and not cfg.cross_attn_decoder
+                          and not cfg.n_encoder_layers)
+        # slot → (next_prompt_pos, budget) for mid-prefill long prompts
+        self._prefilling: dict[int, tuple[int, int]] = {}
 
         # optional decode-mode sharding plan for the slot pool
         self._plan = None
+        self._prefill_plan = None
         if mesh is not None:
-            from repro.parallel.sharding import cache_shardings, serving_decode_plan
+            from repro.parallel.sharding import (
+                cache_shardings, serving_decode_plan, serving_prefill_plan)
             self._plan, ctx = serving_decode_plan(cfg, mesh, max_batch=B,
                                                   kv_len=S)
+            self._prefill_plan, _ = serving_prefill_plan(
+                cfg, mesh, prefill_chunk=self._chunk)
             shardings = cache_shardings(
                 jax.eval_shape(lambda: self.cache), ctx)
             self.cache = jax.device_put(self.cache, shardings)
@@ -137,6 +176,10 @@ class ServingEngine:
         self._jit_step = jax.jit(self._fused_step_fn, donate_argnums=(1, 2))
         self._jit_prefill_insert = jax.jit(self._prefill_insert_fn,
                                            donate_argnums=(1, 2))
+        self._jit_packed_prefill = jax.jit(self._packed_prefill_fn,
+                                           donate_argnums=(1, 2))
+        self._jit_chunk_step = jax.jit(self._chunk_step_fn,
+                                       donate_argnums=(1, 2))
 
         # -- seed-compat path (fused=False) ----------------------------------
         self._key = jax.random.PRNGKey(ecfg.seed)
@@ -170,11 +213,14 @@ class ServingEngine:
         done) — the only array the host reads back per step."""
         def one(carry, _):
             cache, state = carry
+            live = state["live"]
+            # dead / mid-prefill slots write at pos -1 → dropped, so a
+            # half-prefilled row is never corrupted by the decode sweep
+            pos_w = jnp.where(live, state["pos"], -1)
             logits, cache = T.decode_step(params, self.cfg, cache,
-                                          state["tokens"], state["pos"],
+                                          state["tokens"], pos_w,
                                           impl=self.ecfg.impl)
             nxt, key = self._sample_dev(logits, state["key"])
-            live = state["live"]
             pos_new = jnp.where(live, state["pos"] + 1, state["pos"])
             budget_new = jnp.where(live, state["budget"] - 1, state["budget"])
             done = (budget_new <= 0) | (pos_new >= self.ecfg.kv_len)
@@ -205,7 +251,8 @@ class ServingEngine:
     def _prefill_insert_fn(self, params, cache, state, tokens, slot, length,
                            budget):
         """prompt forward pass → first-token sample → slot insert → state
-        update, one jitted cache-donated call per admission."""
+        update, one jitted cache-donated call per admission (sequential
+        baseline + non-packable architectures)."""
         with activate_plan(self._plan):
             logits, pcache = T.prefill(params, self.cfg, {"tokens": tokens},
                                        impl=self.ecfg.impl,
@@ -225,19 +272,104 @@ class ServingEngine:
     def _insert_fn(self, cache, pcache, slot, length):
         """Insert a batch-1 prefill cache into slot ``slot`` of the pool
         with one ``dynamic_update_slice`` per leaf (batch axis is axis 1 of
-        every stacked leaf).  When prompts are bucket-padded, ``pos`` leaves
-        beyond ``length`` are invalidated so pad entries never attend."""
-        bucketed = self._bucketed
-
+        every stacked leaf).  ``pos`` entries at cache indices >= ``length``
+        are invalidated so right-padding never leaves attendable entries
+        (exact-length prefill makes it a no-op; ring caches only hold
+        positions < length)."""
         def ins(path, pool, one):
             one = one.astype(pool.dtype)
-            if bucketed and str(getattr(path[-1], "key", "")) == "pos":
+            if str(getattr(path[-1], "key", "")) == "pos":
                 idx = jnp.arange(one.shape[-1], dtype=jnp.int32)
                 one = jnp.where(idx[None, None, :] < length, one, -1)
             start = (0, slot) + (0,) * (one.ndim - 2)
             return jax.lax.dynamic_update_slice(pool, one, start)
 
         return jax.tree_util.tree_map_with_path(ins, cache, pcache)
+
+    def _packed_prefill_fn(self, params, cache, state, tokens, positions,
+                           seg, gather_idx, seg_off, seg_len, final, budget,
+                           active):
+        """One ragged prefill for every admitted segment: packed forward
+        pass (segment-masked attention) → per-segment first-token sample →
+        one multi-slot scatter insert → state update.  Segment id == target
+        slot index; ``active`` masks unused slots, ``final`` the segments
+        whose prompt completed in this stream (non-final = first chunk of a
+        long prompt, which only inserts KV)."""
+        with activate_plan(self._prefill_plan):
+            logits, pcache = T.prefill_packed(
+                params, self.cfg, tokens, positions, seg, gather_idx,
+                impl=self.ecfg.impl)
+        with activate_plan(self._plan):
+            nxt, key = self._sample_dev(logits, state["key"])
+            cache = self._packed_insert(cache, pcache["stack"], seg,
+                                        positions, seg_len, active)
+            fin = active & final
+            state = {
+                "tokens": jnp.where(fin, nxt, state["tokens"]),
+                "pos": jnp.where(fin, seg_len, state["pos"]),
+                "budget": jnp.where(fin, budget - 1, state["budget"]),
+                "live": jnp.where(fin, budget > 1, state["live"]),
+                "key": key,
+            }
+        return cache, state, jnp.where(fin, nxt, -1)
+
+    def _packed_insert(self, cache, pstack, seg, positions, seg_len, active):
+        """Scatter each packed segment into its KV slot — one scatter per
+        cache leaf for the whole admission burst (replaces the per-request
+        ``dynamic_update_slice`` loop).  Validity is governed entirely by
+        the ``pos`` leaves, so those rows are rebuilt per slot (ring slot
+        ``s`` of a cap-``c`` cache holds position ``p ≡ s (mod c)``,
+        ``p ∈ [len-c, len)`` — identity layout for global caches), while
+        k/v/latent leaves scatter the C packed tokens straight to their
+        (slot, ring index) targets — O(C) work, independent of pool size."""
+        B = self.ecfg.max_batch
+        tgt = jnp.where(active, jnp.arange(B), B)       # B = dropped
+        seg1 = seg[0]                                    # (C,) slot id, -1 pad
+        pos1 = positions[0]                              # (C,) within-seg pos
+
+        from repro.models.attention import ring_positions
+
+        def ins(path, pool, packed):
+            cap = pool.shape[2]
+            if str(getattr(path[-1], "key", "")) == "pos":
+                p = ring_positions(seg_len[:, None], cap)   # (B, cap)
+                valid = (p >= 0) & active[:, None]
+                rows = jnp.broadcast_to(
+                    jnp.where(valid, p, -1)[None], (pool.shape[0], B, cap))
+                return pool.at[:, tgt].set(rows, mode="drop")
+            # only the last `cap` tokens of a segment survive its ring —
+            # dropping the rest keeps scatter targets unique
+            keep = (seg1 >= 0) & (pos1 >= jnp.take(seg_len, jnp.clip(seg1, 0),
+                                                   mode="clip") - cap)
+            row = jnp.where(keep, seg1, B)
+            ring = jnp.where(keep, pos1 % cap, cap)
+            return pool.at[:, row, ring].set(
+                packed[:, 0].astype(pool.dtype), mode="drop")
+
+        new_stack = [jax.tree_util.tree_map_with_path(ins, pool, packed)
+                     for pool, packed in zip(cache["stack"], pstack)]
+        return {"stack": new_stack}
+
+    def _chunk_step_fn(self, params, cache, state, tokens, pos, take_idx,
+                       final, budget):
+        """One chunked-prefill continuation over the pool: write each
+        prefilling row's next chunk into its cache at explicit positions,
+        attend to the whole cache, and activate rows whose prompt completed
+        (sample their first token)."""
+        with activate_plan(self._plan):
+            logits, cache = T.chunk_prefill_step(
+                params, self.cfg, cache, tokens, pos, take_idx,
+                impl=self.ecfg.impl)
+            nxt, key = self._sample_dev(logits, state["key"])
+            pos_end = jnp.max(jnp.where(pos >= 0, pos + 1, 0), axis=1)
+            state = {
+                "tokens": jnp.where(final, nxt, state["tokens"]),
+                "pos": jnp.where(final, pos_end, state["pos"]),
+                "budget": jnp.where(final, budget - 1, state["budget"]),
+                "live": jnp.where(final, budget > 1, state["live"]),
+                "key": key,
+            }
+        return cache, state, jnp.where(final, nxt, -1)
 
     # -- jitted cores: seed-compat path ---------------------------------------
     def _decode_fn(self, params, cache, tokens, pos):
@@ -261,25 +393,36 @@ class ServingEngine:
         return req
 
     def step(self) -> int:
-        """One engine iteration: admit queued requests into free slots
-        (prefill), then one decode step over the slot pool.  Returns the
-        number of live slots."""
+        """One engine iteration: admission (packed prefill) + chunked
+        prefill continuation + one decode step over the slot pool.  Returns
+        the number of occupied slots."""
         if self.ecfg.fused:
             return self._step_fused()
         return self._step_host()
 
     def _step_fused(self) -> int:
-        self._admit_fused()
-        if not any(r is not None for r in self.slot_req):
-            return 0
+        t0 = time.perf_counter()
+        if self.ecfg.packed:
+            self._admit_packed()
+        else:
+            self._admit_fused()
+        self.prefill_time += time.perf_counter() - t0
+        occupied = sum(r is not None for r in self.slot_req)
+        if occupied == len(self._prefilling):
+            # no live slot: nothing to decode (and nothing being stalled —
+            # mid-prefill-only iterations just advance their chunks)
+            self._stall_tokens = 0
+            return occupied
         self.cache, self._state, packed = self._jit_step(
             self.params, self.cache, self._state)
         arr = self._fetch(packed)                 # ONE d2h transfer
         self.decode_steps += arr.shape[0]
+        self.max_stall_tokens = max(self.max_stall_tokens, self._stall_tokens)
+        self._stall_tokens = 0
         now = time.time()
         for it in range(arr.shape[0]):            # decode_chunk iterations
             for i, req in enumerate(self.slot_req):
-                if req is None or arr[it, 0, i] < 0:
+                if req is None or i in self._prefilling or arr[it, 0, i] < 0:
                     continue
                 tok = int(arr[it, 0, i])
                 if not req.output:
@@ -294,7 +437,9 @@ class ServingEngine:
 
     def _step_host(self) -> int:
         """Original per-token host round-trip step (measurement baseline)."""
+        t0 = time.perf_counter()
         self._admit_host()
+        self.prefill_time += time.perf_counter() - t0
         live = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not live:
             return 0
@@ -303,6 +448,8 @@ class ServingEngine:
         logits, self.cache = self._jit_decode(self.params, self.cache,
                                               tokens, pos)
         self.decode_steps += 1
+        self.max_stall_tokens = max(self.max_stall_tokens, self._stall_tokens)
+        self._stall_tokens = 0
         nxt = self._sample(logits)
         now = time.time()
         for i in live:
@@ -332,14 +479,12 @@ class ServingEngine:
                 raise RuntimeError("engine did not drain")
         return self.finished
 
-    # -- internals ---------------------------------------------------------------
-    def _next_request(self, slot: int) -> Optional[tuple]:
-        """Pop the next admissible queued request and its padded prompt, or
-        None.  Requests asking for 0 tokens finish immediately."""
-        if self.slot_req[slot] is not None:
-            return None
+    # -- admission: packed ragged prefill + chunked continuation ---------------
+    def _pop_admissible(self) -> Optional[tuple]:
+        """Pop the next admissible queued request (FIFO).  Requests asking
+        for 0 tokens finish immediately; over-long prompts raise."""
         while self.queue:
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
             # a request may ask for fewer tokens than the engine default —
             # including 0 (`or` would silently swap in the default)
             budget = req.max_new_tokens if req.max_new_tokens is not None \
@@ -352,11 +497,189 @@ class ServingEngine:
             plen = len(req.prompt)
             if plen + 1 >= self.ecfg.kv_len:
                 raise ValueError(f"prompt ({plen}) ≥ kv_len ({self.ecfg.kv_len})")
-            pad = _bucket_len(plen, self.ecfg.kv_len) if self._bucketed else plen
-            toks = np.zeros((1, pad), np.int32)
-            toks[0, :plen] = req.prompt
-            return req, toks, plen, budget
+            return req, plen, budget
         return None
+
+    def _pad_len(self, plen: int) -> int:
+        """Smallest chunk multiple >= plen (capped at kv_len) — the static
+        shape set for per-request prefill."""
+        C = self._chunk
+        return min(-(-max(plen, 1) // C) * C, self.ecfg.kv_len)
+
+    def _admit_packed(self):
+        B, C = self.ecfg.max_batch, self._chunk
+        if self._prefilling:
+            self._continue_chunks()
+        free = [i for i in range(B) if self.slot_req[i] is None]
+        if not free or not self.queue:
+            return
+        if not self._packable:
+            self._admit_padded(free)
+            return
+
+        segs = []                      # (req, slot, off, take, final, budget)
+        used = 0
+        try:
+            while free and used < C:
+                nxt = self._pop_admissible()
+                if nxt is None:
+                    break
+                req, plen, budget = nxt
+                if plen > C - used and used > 0:
+                    # whole prompt doesn't fit the remaining stream: don't
+                    # fragment it — a tail-sized first chunk would buy
+                    # little and cost an extra continuation call; re-queue
+                    # at the head (FIFO preserved) and admit next iteration
+                    self.queue.appendleft(req)
+                    break
+                take = min(plen, C - used)
+                slot = free.pop(0)
+                segs.append((req, slot, used, take, take == plen, budget))
+                used += take
+        except ValueError:
+            # an over-long prompt mid-burst must not strand the requests
+            # already popped into this stream — put them back (FIFO) first
+            for req, *_ in reversed(segs):
+                self.queue.appendleft(req)
+            raise
+        if not segs:
+            return
+
+        toks = np.zeros((1, C), np.int32)
+        seg = np.full((1, C), -1, np.int32)
+        pos = np.zeros((1, C), np.int32)
+        gather = np.zeros((B,), np.int32)
+        off_v = np.zeros((B,), np.int32)
+        len_v = np.zeros((B,), np.int32)
+        fin_v = np.zeros((B,), bool)
+        bud_v = np.ones((B,), np.int32)
+        act_v = np.zeros((B,), bool)
+        for req, slot, off, take, final, budget in segs:
+            toks[0, off:off + take] = req.prompt[:take]
+            seg[0, off:off + take] = slot
+            pos[0, off:off + take] = np.arange(take)
+            gather[slot] = off + take - 1
+            off_v[slot], len_v[slot] = off, take
+            fin_v[slot], bud_v[slot], act_v[slot] = final, budget, True
+
+        self.cache, self._state, first = self._jit_packed_prefill(
+            self.params, self.cache, self._state, jnp.asarray(toks),
+            jnp.asarray(pos), jnp.asarray(seg), jnp.asarray(gather),
+            jnp.asarray(off_v), jnp.asarray(len_v), jnp.asarray(fin_v),
+            jnp.asarray(bud_v), jnp.asarray(act_v))
+        arr = self._fetch(first)                  # one d2h per admission burst
+        self.prefill_tokens += used
+        self.prefill_calls += 1
+        self._stall_tokens += used
+        now = time.time()
+        for req, slot, off, take, final, budget in segs:
+            if final:
+                tok = int(arr[slot])
+                req.output = [tok]
+                req.t_first_token = now
+                if budget == 1:     # the prefill sample was the whole budget
+                    req.done = True
+                    req.t_done = now
+                    self.finished.append(req)
+                    continue
+                self.slot_req[slot] = req
+            else:                   # long prompt: first chunk only
+                self.slot_req[slot] = req
+                self._prefilling[slot] = (take, budget)
+
+    def _continue_chunks(self):
+        """Advance every mid-prefill slot by one <= C-token chunk (one
+        batched jitted call), activating rows whose prompt completed."""
+        B, C = self.ecfg.max_batch, self._chunk
+        toks = np.zeros((B, C), np.int32)
+        pos = np.full((B, C), -1, np.int32)
+        take_idx = np.zeros((B,), np.int32)
+        fin_v = np.zeros((B,), bool)
+        bud_v = np.ones((B,), np.int32)
+        plan = []                                  # (slot, start, c, budget)
+        for slot, (start, budget) in self._prefilling.items():
+            req = self.slot_req[slot]
+            plen = len(req.prompt)
+            c = min(plen - start, C)
+            toks[slot, :c] = req.prompt[start:start + c]
+            pos[slot, :c] = start + np.arange(c)
+            take_idx[slot] = c - 1
+            fin_v[slot] = start + c == plen
+            bud_v[slot] = budget
+            plan.append((slot, start, c, budget))
+
+        self.cache, self._state, first = self._jit_chunk_step(
+            self.params, self.cache, self._state, jnp.asarray(toks),
+            jnp.asarray(pos), jnp.asarray(take_idx), jnp.asarray(fin_v),
+            jnp.asarray(bud_v))
+        arr = self._fetch(first)
+        total = sum(c for _, _, c, _ in plan)
+        self.prefill_tokens += total
+        self.prefill_calls += 1
+        self._stall_tokens += C                    # one batched chunk call
+        now = time.time()
+        for slot, start, c, budget in plan:
+            req = self.slot_req[slot]
+            if start + c == len(req.prompt):       # prompt complete
+                del self._prefilling[slot]
+                tok = int(arr[slot])
+                req.output = [tok]
+                req.t_first_token = now
+                if budget == 1:
+                    req.done = True
+                    req.t_done = now
+                    self.finished.append(req)
+                    self.slot_req[slot] = None
+            else:
+                self._prefilling[slot] = (start + c, budget)
+
+    def _admit_one(self, req, slot: int, plen: int, budget: int, pad: int):
+        """One right-padded batch-1 prefill+insert call and its bookkeeping
+        (shared by the chunk-padded and pow2-bucketed sequential paths)."""
+        toks = np.zeros((1, pad), np.int32)
+        toks[0, :plen] = req.prompt
+        self.cache, self._state, first = self._jit_prefill_insert(
+            self.params, self.cache, self._state, jnp.asarray(toks),
+            jnp.int32(slot), jnp.int32(plen), jnp.int32(budget))
+        tok = int(self._fetch(first))
+        self.prefill_tokens += plen
+        self.prefill_calls += 1
+        self._stall_tokens += pad
+        req.output = [tok]
+        req.t_first_token = time.time()
+        if budget == 1:             # the prefill sample was the whole budget
+            req.done = True
+            req.t_done = req.t_first_token
+            self.finished.append(req)
+        else:
+            self.slot_req[slot] = req
+
+    def _admit_padded(self, free):
+        """Per-request admission for non-packable architectures: prompts
+        right-padded to a chunk multiple with length-exact prefill state —
+        static shapes, no compile-per-distinct-length."""
+        while free and self.queue:
+            nxt = self._pop_admissible()
+            if nxt is None:
+                break
+            req, plen, budget = nxt
+            self._admit_one(req, free.pop(0), plen, budget,
+                            self._pad_len(plen))
+
+    # -- admission: sequential baselines ---------------------------------------
+    def _next_request(self, slot: int) -> Optional[tuple]:
+        """Pop the next admissible queued request and its padded prompt, or
+        None (sequential baseline paths)."""
+        if self.slot_req[slot] is not None:
+            return None
+        nxt = self._pop_admissible()
+        if nxt is None:
+            return None
+        req, plen, budget = nxt
+        pad = _bucket_len(plen, self.ecfg.kv_len) if self._bucketed else plen
+        toks = np.zeros((1, pad), np.int32)
+        toks[0, :plen] = req.prompt
+        return req, toks, plen, budget
 
     def _admit_fused(self):
         for slot in range(self.ecfg.max_batch):
@@ -364,18 +687,7 @@ class ServingEngine:
             if nxt is None:
                 continue
             req, toks, plen, budget = nxt
-            self.cache, self._state, first = self._jit_prefill_insert(
-                self.params, self.cache, self._state, jnp.asarray(toks),
-                jnp.int32(slot), jnp.int32(plen), jnp.int32(budget))
-            tok = int(self._fetch(first))
-            req.output = [tok]
-            req.t_first_token = time.time()
-            if budget == 1:         # the prefill sample was the whole budget
-                req.done = True
-                req.t_done = req.t_first_token
-                self.finished.append(req)
-            else:
-                self.slot_req[slot] = req
+            self._admit_one(req, slot, plen, budget, toks.shape[1])
 
     def _admit_host(self):
         if not hasattr(self, "_slot_pos"):
@@ -393,6 +705,9 @@ class ServingEngine:
             self.cache = self._jit_insert(self.cache, pcache, jnp.int32(slot),
                                           jnp.int32(plen))
             first = self._sample(logits)
+            self.prefill_tokens += plen
+            self.prefill_calls += 1
+            self._stall_tokens += toks.shape[1]
             req.output = [int(first[0])]
             req.t_first_token = time.time()
             if budget == 1:         # the prefill sample was the whole budget
@@ -431,4 +746,9 @@ class ServingEngine:
             "host_transfers": self.host_transfers,
             "host_bytes": self.host_bytes,
             "host_bytes_per_token": self.host_bytes / max(toks, 1),
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_calls": self.prefill_calls,
+            "prefill_time_s": self.prefill_time,
+            "prefill_tokens_per_s": self.prefill_tokens / max(self.prefill_time, 1e-9),
+            "max_stall_tokens": self.max_stall_tokens,
         }

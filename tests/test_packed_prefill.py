@@ -1,0 +1,377 @@
+"""Packed ragged prefill + chunked-prefill scheduler.
+
+Three levels:
+
+- kernel: the segmented flash kernel (interpret mode) vs the segment-masked
+  oracle and vs per-segment sequential attention — MHA/GQA/MQA, sliding
+  window, softcap;
+- model: ``prefill_packed`` vs per-prompt ``prefill`` — logit and per-slot
+  KV-cache equivalence, plus length-exact padded prefill for the stateful
+  layer kinds (ring-buffer local attention, SSM, RG-LRU);
+- engine: packed+chunked admission vs the PR-1 sequential path —
+  token-for-token drains across bucketed and non-bucketed layer kinds, the
+  bounded decode-stall invariant, one compile per chunk shape, and the
+  deep-queue FIFO regression.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduce_config
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models import transformer as T
+from repro.models.attention import apply_attention, init_attention
+from repro.serving.engine import EngineConfig, ServingEngine
+
+
+def _qkv(key, B, S, Hq, Hkv, hd, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, S, Hq, hd), dtype)
+    k = jax.random.normal(k2, (B, S, Hkv, hd), dtype)
+    v = jax.random.normal(k3, (B, S, Hkv, hd), dtype)
+    return q, k, v
+
+
+def _segments(S, lens):
+    seg = np.full((1, S), -1, np.int32)
+    off = 0
+    for i, l in enumerate(lens):
+        seg[0, off:off + l] = i
+        off += l
+    assert off <= S
+    return jnp.asarray(seg)
+
+
+# ---------------------------------------------------------------------------
+# kernel level
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (4, 2), (8, 1)])  # MHA/GQA/MQA
+@pytest.mark.parametrize("window", [0, 7])
+def test_segmented_kernel_matches_ref(Hq, Hkv, window):
+    S, lens = 64, [20, 25, 10]                  # + 9 pad tokens
+    q, k, v = _qkv(jax.random.PRNGKey(0), 1, S, Hq, Hkv, 16)
+    seg = _segments(S, lens)
+    out = attention(q, k, v, segments=seg, causal=True, window=window,
+                    impl="pallas_interpret")
+    ref = attention(q, k, v, segments=seg, causal=True, window=window,
+                    impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [0, 5])
+def test_segmented_kernel_matches_per_segment_oracle(window):
+    """No cross-prompt attention: every packed segment must equal attention
+    run on that segment alone."""
+    S, lens = 64, [17, 30, 8]
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, S, 4, 2, 16)
+    seg = _segments(S, lens)
+    out = attention(q, k, v, segments=seg, causal=True, window=window,
+                    softcap=10.0, impl="pallas_interpret")
+    off = 0
+    for l in lens:
+        solo = attention_ref(q[:, off:off + l], k[:, off:off + l],
+                             v[:, off:off + l], causal=True, window=window,
+                             softcap=10.0)
+        np.testing.assert_allclose(np.asarray(out[:, off:off + l]),
+                                   np.asarray(solo), atol=2e-5)
+        off += l
+
+
+def test_segmented_kernel_pad_isolation():
+    """Changing pad-region q/k/v must not change any real segment output."""
+    S, lens = 32, [10, 9]
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, S, 4, 4, 16)
+    seg = _segments(S, lens)
+    out1 = attention(q, k, v, segments=seg, causal=True, impl="pallas_interpret")
+    q2 = q.at[:, 19:].set(99.0)
+    k2 = k.at[:, 19:].set(-99.0)
+    v2 = v.at[:, 19:].set(7.0)
+    out2 = attention(q2, k2, v2, segments=seg, causal=True,
+                     impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(out1[:, :19]),
+                                  np.asarray(out2[:, :19]))
+
+
+# ---------------------------------------------------------------------------
+# model level
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "gemma2-9b"])
+def test_prefill_packed_matches_sequential(arch):
+    """Packed multi-prompt prefill == per-prompt prefill: logits within bf16
+    tolerance and KV cache entries exact per slot (gemma2 covers the
+    local/ring + softcap path, qwen the GQA global path)."""
+    cfg = reduce_config(get_config(arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(0),
+                           param_dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    lens = [5, 9, 3]
+    prompts = [rng.integers(0, cfg.vocab_size, size=l).astype(np.int32)
+               for l in lens]
+    C = 32
+    toks = np.zeros((1, C), np.int32)
+    pos = np.zeros((1, C), np.int32)
+    offs, off = [], 0
+    for i, p in enumerate(prompts):
+        toks[0, off:off + len(p)] = p
+        pos[0, off:off + len(p)] = np.arange(len(p))
+        offs.append(off)
+        off += len(p)
+    seg = _segments(C, lens)
+    gidx = jnp.asarray([offs[i] + lens[i] - 1 for i in range(len(lens))],
+                       jnp.int32)
+    logits_p, cache_p = T.prefill_packed(
+        params, cfg, jnp.asarray(toks), jnp.asarray(pos), seg, gidx)
+    for i, p in enumerate(prompts):
+        logits_s, cache_s = T.prefill(params, cfg,
+                                      {"tokens": jnp.asarray(p[None])})
+        np.testing.assert_allclose(np.asarray(logits_p[i]),
+                                   np.asarray(logits_s[0]), atol=1e-2)
+        flat_p = jax.tree_util.tree_leaves(cache_p)
+        flat_s = jax.tree_util.tree_leaves(cache_s)
+        for lp, ls in zip(flat_p, flat_s):
+            a = np.asarray(lp[:, :, offs[i]:offs[i] + lens[i]], np.float32)
+            b = np.asarray(ls[:, :, :lens[i]], np.float32)
+            np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "mamba2-130m",
+                                  "recurrentgemma-9b"])
+def test_padded_prefill_state_exact(arch):
+    """Right-padded prefill with ``length=`` must produce exactly the
+    unpadded cache state for every stateful layer kind: ring-buffer local
+    attention, SSM conv+state, RG-LRU conv+h."""
+    cfg = reduce_config(get_config(arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(1),
+                           param_dtype=jnp.float32)
+    rng = np.random.default_rng(1)
+    plen, pad = 21, 32
+    prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+    toks = np.zeros((1, pad), np.int32)
+    toks[0, :plen] = prompt
+    lp, cache_pad = T.prefill(params, cfg, {"tokens": jnp.asarray(toks)},
+                              kv_cap=pad, length=jnp.int32(plen))
+    le, cache_ex = T.prefill(params, cfg,
+                             {"tokens": jnp.asarray(prompt[None])},
+                             kv_cap=pad)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(le), atol=1e-2)
+    flat_p = jax.tree_util.tree_flatten_with_path(cache_pad)[0]
+    flat_e = jax.tree_util.tree_flatten_with_path(cache_ex)[0]
+    for (kp, a), (_, b) in zip(flat_p, flat_e):
+        name = str(getattr(kp[-1], "key", ""))
+        a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        if name == "conv":                          # raw input gather
+            np.testing.assert_array_equal(a, b)
+        elif name in ("state", "h"):                # SSM / RG-LRU state:
+            # scan tree shape differs between padded and exact lengths —
+            # mathematically identical, ulp-level fp differences
+            np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-3)
+        elif name == "pos":
+            # same set of real positions; global-cache pad entries carry
+            # their stream index and are invalidated at engine insert
+            a = np.where(a >= plen, -1, a)
+            b = np.where(b >= plen, -1, b)
+            np.testing.assert_array_equal(np.sort(a, -1), np.sort(b, -1))
+    # attention caches: compare k/v entries position-by-position
+    def ring_kv(cache):
+        out = {}
+        for (kp, leaf) in jax.tree_util.tree_flatten_with_path(cache)[0]:
+            out["/".join(str(getattr(p, "key", p)) for p in kp)] = \
+                np.asarray(leaf, np.float32)
+        return out
+    rp, re_ = ring_kv(cache_pad), ring_kv(cache_ex)
+    for key in rp:
+        if key.endswith("/pos"):
+            base = key[:-4]
+            pos_p, pos_e = rp[key], re_[key]
+            for nm in ("k", "v", "ckv", "kr"):
+                kk = f"{base}/{nm}"
+                if kk not in rp or rp[kk].shape != re_[kk].shape:
+                    continue
+                for p_ in range(plen):
+                    ia = np.argwhere(pos_p == p_)
+                    ib = np.argwhere(pos_e == p_)
+                    if len(ia) == 0 and len(ib) == 0:
+                        continue
+                    assert len(ia) == len(ib)
+                    for a_idx, b_idx in zip(ia, ib):
+                        np.testing.assert_array_equal(
+                            rp[kk][tuple(a_idx)], re_[kk][tuple(b_idx)])
+
+
+def test_cross_attention_decode_routes_flash():
+    """Cross-attention decode no longer silently downgrades to ref: the
+    masked decode-kernel path (q_pos >= every kv_pos) must match the
+    non-causal reference."""
+    cfg = reduce_config(get_config("qwen2.5-3b"))
+    p = init_attention(jax.random.PRNGKey(0), cfg, cross=True,
+                       dtype=jnp.float32)
+    B, S_src = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 1, cfg.d_model))
+    cache = {
+        "k": jax.random.normal(jax.random.PRNGKey(2),
+                               (B, S_src, cfg.n_kv_heads, cfg.head_dim)),
+        "v": jax.random.normal(jax.random.PRNGKey(3),
+                               (B, S_src, cfg.n_kv_heads, cfg.v_head_dim)),
+    }
+    pos = jnp.full((B, 1), 7, jnp.int32)
+    out_f, _ = apply_attention(p, x, cfg=cfg, kind="cross", mode="decode",
+                               pos=pos, cache=cache, impl="flash")
+    out_r, _ = apply_attention(p, x, cfg=cfg, kind="cross", mode="decode",
+                               pos=pos, cache=cache, impl="ref")
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_r),
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine level
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = reduce_config(get_config("qwen2.5-3b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(1),
+                           param_dtype=jnp.float32)
+    return cfg, params
+
+
+def _drain(cfg, params, lens, *, seed=3, **kw):
+    defaults = dict(max_batch=2, kv_len=96, max_new_tokens=4, impl="ref")
+    defaults.update(kw)
+    eng = ServingEngine(cfg, params, EngineConfig(**defaults))
+    rng = np.random.default_rng(seed)
+    for plen in lens:
+        eng.submit(rng.integers(0, cfg.vocab_size, size=plen))
+    eng.run_until_drained()
+    return [r.output for r in sorted(eng.finished, key=lambda r: r.uid)], eng
+
+
+@pytest.mark.parametrize("arch,impl", [
+    ("qwen2.5-3b", "ref"),        # GQA global, bucketed kind
+    ("gemma2-9b", "ref"),         # sliding-window local + global
+    ("gemma2-9b", "flash"),       # through the Pallas kernels
+    ("mamba2-130m", "ref"),       # non-packable: padded per-request path
+])
+def test_packed_engine_matches_sequential(arch, impl):
+    """Packed+chunked admission must reproduce the PR-1 sequential
+    admission token-for-token (greedy), including prompts longer than the
+    chunk (40, 60 > 16)."""
+    cfg = reduce_config(get_config(arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(0),
+                           param_dtype=jnp.float32)
+    lens = (40, 5, 60, 12, 3)
+    seq, _ = _drain(cfg, params, lens, kv_len=128, packed=False)
+    pk, eng = _drain(cfg, params, lens, kv_len=128, packed=True,
+                     prefill_chunk=16)
+    assert seq == pk
+
+
+def test_chunked_prefill_bounded_decode_stall(qwen):
+    """A long prompt admitted mid-decode may stall the pool by at most
+    ~2 chunk budgets (one packed stream + one continuation call); the
+    sequential path stalls for the whole padded prompt."""
+    cfg, params = qwen
+    C = 16
+    lens = (5, 6, 80, 7, 8)
+    _, seq = _drain(cfg, params, lens, kv_len=128, max_new_tokens=8,
+                    packed=False)
+    _, pk = _drain(cfg, params, lens, kv_len=128, max_new_tokens=8,
+                   packed=True, prefill_chunk=C)
+    assert pk.max_stall_tokens <= 2 * C
+    assert seq.max_stall_tokens >= 80        # full prompt in one admission
+    assert pk._jit_chunk_step._cache_size() == 1
+
+
+def test_packed_no_retrace_across_mixed_lengths(qwen):
+    """One compiled packed-prefill graph serves a burst of mixed prompt
+    lengths (no compile-per-distinct-length), and the fused decode step
+    still compiles exactly once."""
+    cfg, params = qwen
+    lens = (3, 5, 8, 10, 12, 4, 21, 33)
+    _, eng = _drain(cfg, params, lens, max_batch=3, kv_len=64,
+                    packed=True, prefill_chunk=32)
+    assert eng._jit_packed_prefill._cache_size() == 1
+    assert eng._jit_chunk_step._cache_size() <= 1
+    assert eng._jit_step._cache_size() == 1
+    assert eng._jit_prefill_insert._cache_size() == 0   # packable arch
+
+
+def test_deep_queue_admission_fifo(qwen):
+    """Deep queue of mixed lengths (with zero-budget requests sprinkled
+    in): every request finishes, admission preserves FIFO order, and the
+    engine drains without quadratic queue rescans."""
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=4, kv_len=64, max_new_tokens=2, impl="ref",
+        prefill_chunk=32))
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(120):
+        plen = int(rng.integers(1, 30))
+        budget = 0 if i % 17 == 5 else None
+        reqs.append(eng.submit(rng.integers(0, cfg.vocab_size, size=plen),
+                               max_new_tokens=budget))
+    done = eng.run_until_drained()
+    assert len(done) == 120
+    assert all(r.done for r in reqs)
+    zero = [r for r in reqs if r.max_new_tokens == 0]
+    assert all(r.output == [] for r in zero)
+    # FIFO: non-zero-budget requests get their first token in uid order
+    firsts = [r.t_first_token for r in reqs if r.max_new_tokens is None]
+    assert firsts == sorted(firsts)
+
+
+def test_overlong_prompt_mid_burst_does_not_strand_neighbours(qwen):
+    """An over-long prompt raising mid-admission must re-queue the requests
+    already popped into the packed stream — they drain on the next step."""
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=2, kv_len=32, max_new_tokens=2, impl="ref",
+        prefill_chunk=16))
+    rng = np.random.default_rng(0)
+    r1 = eng.submit(rng.integers(0, cfg.vocab_size, size=5))
+    eng.submit(rng.integers(0, cfg.vocab_size, size=40))   # >= kv_len
+    r3 = eng.submit(rng.integers(0, cfg.vocab_size, size=4))
+    with pytest.raises(ValueError, match="kv_len"):
+        eng.step()
+    eng.run_until_drained()
+    assert r1.done and r3.done
+    assert len(r1.output) == 2 and len(r3.output) == 2
+
+
+def test_no_decode_while_pool_is_prefill_only(qwen):
+    """While the only occupied slots are mid-prefill there is nothing to
+    decode: the fused step must not burn decode iterations on a dead pool."""
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=2, kv_len=128, max_new_tokens=2, impl="ref",
+        prefill_chunk=16, decode_chunk=8))
+    rng = np.random.default_rng(0)
+    req = eng.submit(rng.integers(0, cfg.vocab_size, size=70))
+    for _ in range(3):                  # first chunk + 2 continuations
+        eng.step()
+        assert eng.decode_steps == 0
+    eng.run_until_drained()
+    assert req.done and len(req.output) == 2
+
+
+def test_packed_admission_single_call_per_burst(qwen):
+    """A burst that fits the packed stream and the free slots is admitted
+    in ONE jitted call + one d2h fetch (the admission bottleneck is gone)."""
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=4, kv_len=64, max_new_tokens=4, impl="ref",
+        prefill_chunk=32))
+    rng = np.random.default_rng(2)
+    for _ in range(4):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=7))
+    base = eng.host_transfers
+    eng._admit_packed()
+    assert eng.prefill_calls == 1
+    assert eng.host_transfers - base == 1
+    assert sum(r is not None for r in eng.slot_req) == 4
+    eng.run_until_drained()
+    assert len(eng.finished) == 4

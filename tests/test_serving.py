@@ -163,10 +163,11 @@ def test_single_host_transfer_per_decode_iteration(small_model):
 
 
 def test_no_recompilation_across_drain(small_model):
-    """One compiled fused step for the whole drain; prefill compiles at
-    most once per prompt-length bucket."""
+    """Sequential path: one compiled fused step for the whole drain;
+    prefill compiles at most once per prompt-length bucket.  (The packed
+    default compiles once total — tests/test_packed_prefill.py.)"""
     cfg, params = small_model
-    eng = _engine(cfg, params, max_batch=3, max_new_tokens=4)
+    eng = _engine(cfg, params, max_batch=3, max_new_tokens=4, packed=False)
     rng = np.random.default_rng(3)
     for plen in (3, 5, 8, 10, 12, 4):          # buckets: 8, 16
         eng.submit(rng.integers(0, cfg.vocab_size, size=plen))
