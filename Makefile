@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test verify bench-serving bench-smoke report
+.PHONY: test verify bench-serving bench-cosim bench-smoke report
 
 test:               ## tier-1 test suite
 	$(PY) -m pytest -x -q
@@ -9,10 +9,14 @@ test:               ## tier-1 test suite
 bench-serving:      ## full serving decode+prefill benchmark -> experiments/BENCH_serving.json
 	$(PY) -m benchmarks.perf_serving
 
-bench-smoke:        ## tiny-config serving benchmark; asserts the JSON report schema
-	$(PY) -m benchmarks.perf_serving --smoke
+bench-cosim:        ## generation co-simulation sweep (zoo x architectures) -> experiments/BENCH_cosim.json
+	$(PY) -m benchmarks.perf_cosim
 
-verify:             ## CI gate: tier-1 tests + serving bench smoke (schema-checked)
+bench-smoke:        ## tiny-config serving+cosim benchmarks; assert the JSON report schemas
+	$(PY) -m benchmarks.perf_serving --smoke
+	$(PY) -m benchmarks.perf_cosim --smoke
+
+verify:             ## CI gate: tier-1 tests + bench smokes (schema-checked)
 	$(PY) -m pytest -x -q
 	$(MAKE) bench-smoke
 

@@ -1,0 +1,220 @@
+"""Decode-aware co-simulation benchmark: serving-latency evaluation of the
+chiplet architectures over the model zoo.
+
+For each model the full generation episode (prompt prefill + KV-cache
+write-back + autoregressive decode) runs through ``simulate_generation``
+on 2.5D-HI, HAIMA_chiplet and TransPIM_chiplet, reporting TTFT, per-token
+decode latency, steady-state decode tok/s, energy per generated token and
+the prefill-vs-decode traffic split (decode dominates: weights re-stream
+per token and the KV cache is read at every step).
+
+Two optional sections (full run only):
+
+- **bridge** — a real ``ServingEngine`` drain on a reduced config; its
+  measured episode mix (``stats()`` → ``core.cosim.mix_from_stats``) is
+  projected onto the full-size model and replayed through Plane B;
+- **noi** — MOO-STAGE NoI design search over the *generation* traffic
+  (``core.cosim.generation_objective``), vs the placement-unaware mesh.
+
+    PYTHONPATH=src python -m benchmarks.perf_cosim [--smoke]
+
+Results: ``experiments/BENCH_cosim.json`` (``BENCH_cosim_smoke.json`` with
+``--smoke`` so CI never clobbers the recorded full run); rendered by
+``benchmarks/report.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+ARCHS = ("2.5D-HI", "HAIMA_chiplet", "TransPIM_chiplet")
+
+# model zoo sweep: paper workloads + assigned archs covering MHA, GQA/MQA,
+# parallel-block and encoder-decoder stacks
+ZOO = ("llama2-7b", "gpt-j", "gemma2-9b", "qwen2.5-3b",
+       "bart-large", "whisper-large-v3")
+
+_ARCH_KEYS = {"ttft_ms", "decode_step_ms", "decode_tok_s", "tokens_per_s",
+              "energy_per_token_mj", "prefill_gb", "decode_gb",
+              "decode_traffic_frac"}
+
+
+def check_schema(rec: dict) -> None:
+    """Assert the BENCH_cosim.json record shape (CI bit-rot gate)."""
+    for key in ("bench", "smoke", "chiplets", "prompt_len", "gen_len",
+                "models"):
+        assert key in rec, f"missing top-level key {key!r}"
+    assert len(rec["models"]) >= 4 or rec["smoke"], "zoo must cover ≥4 models"
+    saw_gqa = saw_encdec = False
+    for name, row in rec["models"].items():
+        saw_gqa |= row["kv_frac"] < 1.0
+        saw_encdec |= row["enc_dec"]
+        for arch in ARCHS:
+            missing = _ARCH_KEYS - set(row["archs"][arch])
+            assert not missing, f"{name}/{arch} missing {missing}"
+    if not rec["smoke"]:
+        assert saw_gqa and saw_encdec, "zoo must include GQA and enc-dec"
+
+
+def _row(g) -> dict:
+    return {
+        "ttft_ms": g.ttft_s * 1e3,
+        "decode_step_ms": g.decode_step_s * 1e3,
+        "decode_tok_s": g.decode_tok_s,
+        "tokens_per_s": g.tokens_per_s,
+        "energy_per_token_mj": g.energy_per_token_j * 1e3,
+        "prefill_gb": g.prefill_bytes / 2**30,
+        "decode_gb": g.decode_bytes / 2**30,
+        "decode_traffic_frac": g.decode_bytes
+                               / max(g.prefill_bytes + g.decode_bytes, 1e-30),
+    }
+
+
+def run_zoo(models, chiplets: int, prompt_len: int, gen_len: int) -> dict:
+    from repro.config import get_config
+    from repro.core.simulator import simulate_generation
+    from repro.core.traffic import Workload
+
+    out = {}
+    for name in models:
+        cfg = get_config(name)
+        w = Workload.from_config(cfg, seq_len=prompt_len)
+        archs = {a: _row(simulate_generation(w, chiplets, prompt_len, gen_len,
+                                             arch=a))
+                 for a in ARCHS}
+        hi = archs["2.5D-HI"]
+        base_ttft = min(archs[a]["ttft_ms"] for a in ARCHS[1:])
+        base_step = min(archs[a]["decode_step_ms"] for a in ARCHS[1:])
+        base_epr = min(archs[a]["energy_per_token_mj"] for a in ARCHS[1:])
+        out[name] = {
+            "family": cfg.family,
+            "kv_frac": w.kv_frac,
+            "enc_dec": w.enc_dec,
+            "archs": archs,
+            "ttft_gain": base_ttft / hi["ttft_ms"],
+            "decode_gain": base_step / hi["decode_step_ms"],
+            "energy_gain": base_epr / hi["energy_per_token_mj"],
+        }
+    return out
+
+
+def run_bridge(arch: str, chiplets: int) -> dict:
+    """Measured-engine bridge: drain a small mixed workload on the reduced
+    config, project the measured episode mix onto the full model."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.config import get_config, reduce_config
+    from repro.core.cosim import cosim_from_engine
+    from repro.models import transformer as T
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    cfg = reduce_config(get_config(arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(0), param_dtype=jnp.bfloat16)
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=4, kv_len=64, max_new_tokens=8, prefill_chunk=32))
+    rng = np.random.default_rng(0)
+    for plen in (6, 10, 14, 10, 22, 6):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=plen))
+    eng.run_until_drained()
+    rec = cosim_from_engine(eng, cfg=get_config(arch), n_chiplets=chiplets)
+    rec["arch"] = arch
+    rec["backend"] = jax.default_backend()
+    return rec
+
+
+def run_noi(arch: str, chiplets: int, prompt_len: int, gen_len: int,
+            requests: int, seed: int = 0) -> dict:
+    """Decode-aware NoI search: does a placement optimised under the
+    generation traffic beat the placement-unaware mesh?"""
+    import numpy as np
+
+    from repro.core.cosim import (Episode, EpisodeMix, generation_objective,
+                                  optimize_generation_noi)
+    from repro.core.placement import initial_placement
+
+    mix = EpisodeMix([Episode(prompt_len, gen_len, requests)])
+    res, mesh_ev = optimize_generation_noi(arch, mix, chiplets,
+                                           iterations=2, ls_steps=10,
+                                           seed=seed)
+    objective, _, _ = generation_objective(arch, mix, chiplets,
+                                           mesh_ev=mesh_ev)
+    front = np.asarray(res.archive.objs)
+    # report one real design from the front (the min-μ point), not the
+    # per-column minima of two different placements
+    best = front[int(np.argmin(front[:, 0]))]
+    seed_obj = objective(initial_placement(chiplets))
+    return {
+        "arch": arch, "chiplets": chiplets,
+        "n_evals": res.n_evals,
+        "pareto_points": len(res.archive.objs),
+        "best_mu_norm": float(best[0]),
+        "best_sigma_norm": float(best[1]),
+        "seed_mu_norm": float(seed_obj[0]),
+        "seed_sigma_norm": float(seed_obj[1]),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (seconds, still writes JSON)")
+    ap.add_argument("--chiplets", type=int, default=64, choices=(36, 64, 100))
+    ap.add_argument("--prompt-len", type=int, default=512)
+    ap.add_argument("--gen-len", type=int, default=128)
+    ap.add_argument("--bridge-arch", default="qwen2.5-3b")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = os.path.join(
+            EXPERIMENTS,
+            "BENCH_cosim_smoke.json" if args.smoke else "BENCH_cosim.json")
+
+    models = ("gemma2-9b", "bart-large") if args.smoke else ZOO
+    if args.smoke:
+        args.prompt_len, args.gen_len = 64, 16
+
+    from benchmarks.common import emit
+
+    rec = {
+        "bench": "perf_cosim",
+        "smoke": args.smoke,
+        "chiplets": args.chiplets,
+        "prompt_len": args.prompt_len,
+        "gen_len": args.gen_len,
+        "models": run_zoo(models, args.chiplets, args.prompt_len,
+                          args.gen_len),
+    }
+    if not args.smoke:
+        rec["bridge"] = run_bridge(args.bridge_arch, args.chiplets)
+        rec["noi"] = run_noi("qwen2.5-3b", 36, args.prompt_len, args.gen_len,
+                             requests=4)
+    check_schema(rec)
+
+    rows = []
+    for name, m in rec["models"].items():
+        for arch in ARCHS:
+            r = m["archs"][arch]
+            rows.append({"model": name, "system": arch,
+                         "ttft_ms": r["ttft_ms"],
+                         "decode_ms_per_tok": r["decode_step_ms"],
+                         "decode_tok_s": r["decode_tok_s"],
+                         "energy_mj_per_tok": r["energy_per_token_mj"],
+                         "decode_traffic_frac": r["decode_traffic_frac"]})
+    emit(rows, f"cosim: generation episodes ({args.chiplets} chiplets, "
+               f"prompt={args.prompt_len}, gen={args.gen_len})")
+    if "noi" in rec:
+        emit([rec["noi"]], "cosim: decode-aware NoI search (vs 2-D mesh)")
+
+    os.makedirs(EXPERIMENTS, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"# wrote {os.path.normpath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -138,6 +138,52 @@ def serving_table() -> str:
     return "\n".join(out)
 
 
+def cosim_table() -> str:
+    """Render experiments/BENCH_cosim.json (benchmarks.perf_cosim)."""
+    path = os.path.normpath(os.path.join(DRYRUN, "..", "BENCH_cosim.json"))
+    if not os.path.exists(path):
+        return "(no BENCH_cosim.json — run `python -m benchmarks.perf_cosim`)"
+    r = json.load(open(path))
+    out = [f"chiplets={r['chiplets']} · prompt={r['prompt_len']} · "
+           f"gen={r['gen_len']}" + (" · SMOKE" if r.get("smoke") else ""),
+           "",
+           "| model | system | TTFT ms | decode ms/tok | decode tok/s | "
+           "E/tok mJ | decode traffic |",
+           "|---|---|---|---|---|---|---|"]
+    for name, m in r["models"].items():
+        for arch, row in m["archs"].items():
+            out.append(
+                f"| {name} | {arch} | {row['ttft_ms']:.0f} | "
+                f"{row['decode_step_ms']:.2f} | {row['decode_tok_s']:.0f} | "
+                f"{row['energy_per_token_mj']:.0f} | "
+                f"{row['decode_traffic_frac']*100:.1f}% |")
+    gains = [(n, m["ttft_gain"], m["decode_gain"], m["energy_gain"])
+             for n, m in r["models"].items()]
+    out += ["",
+            "2.5D-HI vs best chiplet baseline: "
+            + "; ".join(f"{n} **{t:.1f}×** TTFT / **{d:.1f}×** decode / "
+                        f"**{e:.1f}×** E/tok" for n, t, d, e in gains)]
+    noi = r.get("noi")
+    if noi:
+        out += ["",
+                f"decode-aware NoI search ({noi['arch']}, "
+                f"{noi['chiplets']} chiplets): best (min-μ) design μ_norm "
+                f"{noi['best_mu_norm']:.3f} / σ_norm "
+                f"{noi['best_sigma_norm']:.3f} vs placement-unaware mesh 1.0 "
+                f"({noi['n_evals']} evals)"]
+    br = r.get("bridge")
+    if br:
+        mix = br["mix"]
+        out += ["",
+                f"engine bridge: {br['arch']} ({br['backend']}) served "
+                f"{mix['requests']} requests "
+                f"({mix['prefill_tokens']} prefill + {mix['decode_tokens']} "
+                f"decode tok, chunk={mix['prefill_chunk']}) → 2.5D-HI "
+                f"{br['archs']['2.5D-HI']['tokens_per_s']:.0f} tok/s "
+                f"projected on the full model"]
+    return "\n".join(out)
+
+
 def main():
     recs = load()
     print("### Dry-run matrix (40 cells × 2 meshes)\n")
@@ -146,7 +192,9 @@ def main():
     print("### Roofline (single-pod, per §Roofline)\n")
     print(roofline_table(recs) + "\n")
     print("### Serving decode fast path (benchmarks.perf_serving)\n")
-    print(serving_table())
+    print(serving_table() + "\n")
+    print("### Generation co-simulation (benchmarks.perf_cosim)\n")
+    print(cosim_table())
 
 
 if __name__ == "__main__":

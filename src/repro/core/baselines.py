@@ -23,8 +23,11 @@ from typing import Optional
 from repro.core import chiplets as C
 from repro.core.noi import evaluate_noi, noi_energy, noi_phase_time
 from repro.core.placement import Placement, grid_for, initial_placement, mesh_links
-from repro.core.simulator import Calib, CALIB, SimResult, _energy
-from repro.core.traffic import BYTES, Phase, Workload, transformer_phases
+from repro.core.simulator import (Calib, CALIB, GenResult, SimResult,
+                                  _decode_positions, _energy)
+from repro.core.traffic import (BYTES, Phase, Workload, decode_step_phases,
+                                kv_cache_bytes_per_layer, total_traffic_bytes,
+                                transformer_phases)
 
 
 def _baseline_placement(n_chiplets: int, kinds: dict) -> Placement:
@@ -90,14 +93,30 @@ DYNAMIC_WRITE_PENALTY = 8.0
 KQV_WRITEBACK = 1.25
 
 
-def simulate_haima_chiplet(w: Workload, n_chiplets: int, *,
-                           calib: Calib = CALIB,
-                           chiplet: bool = True) -> SimResult:
+def _haima_env(n_chiplets: int, calib: Calib, chiplet: bool) -> dict:
+    """Chiplet mix, placement and effective rates of the HAIMA_chiplet plane
+    (shared between the single-pass and decode-step models)."""
     n_sram = max(n_chiplets // 6, 2)
     n_host = max(n_chiplets // 18, 1)
     n_dram = n_chiplets - n_sram - n_host
     pl = _baseline_placement(n_chiplets,
                              {"SRAM": n_sram, "HOST": n_host, "DRAM": n_dram})
+    # DRAM-PIM effective rate: banks × bit-serial MAC rate × calibrated eff.
+    bank_rate = 32e9                      # ops/s per chiplet's PIM banks
+    cap = 1.0 if chiplet else calib.orig_bank_cap
+    return {
+        "n_sram": n_sram, "n_host": n_host, "n_dram": n_dram, "pl": pl,
+        "pim_rate0": n_dram * bank_rate * 64 * calib.haima_eff * cap,
+        "sram_rate0": n_sram * 2.0e12 * calib.haima_eff * 24,
+        "alloc": {"SRAM": n_sram, "HOST": n_host, "DRAM": n_dram},
+    }
+
+
+def simulate_haima_chiplet(w: Workload, n_chiplets: int, *,
+                           calib: Calib = CALIB,
+                           chiplet: bool = True) -> SimResult:
+    env = _haima_env(n_chiplets, calib, chiplet)
+    n_dram, pl = env["n_dram"], env["pl"]
 
     # score/softmax spill: the N²·h attention matrix leaves the SRAM plane
     # for the host (softmax) and back (§4.2 — "repeated data exchange with
@@ -118,11 +137,7 @@ def simulate_haima_chiplet(w: Workload, n_chiplets: int, *,
     noi_t_list, ev = _phase_noi_times_baseline(pl, phases)
     noi_by = {p.name: t for p, t in zip(phases, noi_t_list)}
 
-    # DRAM-PIM effective rate: banks × bit-serial MAC rate × calibrated eff.
-    bank_rate = 32e9                      # ops/s per chiplet's PIM banks
-    cap = 1.0 if chiplet else calib.orig_bank_cap
-    pim_rate0 = n_dram * bank_rate * 64 * calib.haima_eff * cap
-    sram_rate0 = n_sram * 2.0e12 * calib.haima_eff * 24
+    pim_rate0, sram_rate0 = env["pim_rate0"], env["sram_rate0"]
 
     def host_time(p):
         return (p.host_bytes / C.HOST_LINK.bw
@@ -157,7 +172,10 @@ def simulate_haima_chiplet(w: Workload, n_chiplets: int, *,
                   "ff": t_ff * k, "lm_head": t_head}
     times = {"embed": t_embed, "kqv": t_kqv, "score": t_score, "ff": t_ff,
              "lm_head": t_head}
-    alloc = {"SRAM": n_sram, "HOST": n_host, "DRAM": n_dram}
+    if "cross" in by:
+        times["cross"] = t_cross
+        per_kernel["cross"] = t_cross * by["cross"].repeat
+    alloc = env["alloc"]
     # per-phase active units: score on the SRAM plane + host softmax; the
     # weight-stationary kernels on DRAM-PIM banks
     busy = {n: ({"SRAM", "HOST"} if n == "score" else {"DRAM"})
@@ -174,12 +192,30 @@ def simulate_haima_chiplet(w: Workload, n_chiplets: int, *,
 # TransPIM_chiplet
 # ---------------------------------------------------------------------------
 
-def simulate_transpim_chiplet(w: Workload, n_chiplets: int, *,
-                              calib: Calib = CALIB,
-                              chiplet: bool = True) -> SimResult:
+ACU_LATENCY = 1.2e-6                 # per-kernel ACU hand-off (§2)
+ACU_BW = 25e9                        # ACU vector-unit stream bandwidth
+
+
+def _transpim_env(n_chiplets: int, calib: Calib, chiplet: bool) -> dict:
+    """Chiplet mix, placement and effective rates of the TransPIM_chiplet
+    plane (shared between the single-pass and decode-step models)."""
     n_acu = max(n_chiplets // 9, 1)
     n_dram = n_chiplets - n_acu
     pl = _baseline_placement(n_chiplets, {"ACU": n_acu, "DRAM": n_dram})
+    bank_rate = 32e9
+    cap = 1.0 if chiplet else calib.orig_bank_cap
+    return {
+        "n_acu": n_acu, "n_dram": n_dram, "pl": pl,
+        "pim_rate0": n_dram * bank_rate * 64 * calib.transpim_eff * cap,
+        "alloc": {"ACU": n_acu, "DRAM": n_dram},
+    }
+
+
+def simulate_transpim_chiplet(w: Workload, n_chiplets: int, *,
+                              calib: Calib = CALIB,
+                              chiplet: bool = True) -> SimResult:
+    env = _transpim_env(n_chiplets, calib, chiplet)
+    n_acu, n_dram, pl = env["n_acu"], env["n_dram"], env["pl"]
 
     phases = transformer_phases(w)
     ring_bytes = w.seq_len * w.d_model * BYTES
@@ -197,11 +233,8 @@ def simulate_transpim_chiplet(w: Workload, n_chiplets: int, *,
     noi_t_list, ev = _phase_noi_times_baseline(pl, phases)
     noi_by = {p.name: t for p, t in zip(phases, noi_t_list)}
 
-    bank_rate = 32e9
-    cap = 1.0 if chiplet else calib.orig_bank_cap
-    pim_rate0 = n_dram * bank_rate * 64 * calib.transpim_eff * cap
-    acu_latency = 1.2e-6                 # per-kernel ACU hand-off (§2)
-    acu_bw = 25e9                        # ACU vector-unit stream bandwidth
+    pim_rate0 = env["pim_rate0"]
+    acu_latency, acu_bw = ACU_LATENCY, ACU_BW
 
     by = {p.name: p for p in phases}
 
@@ -233,7 +266,7 @@ def simulate_transpim_chiplet(w: Workload, n_chiplets: int, *,
     per_kernel = {"embed": t["embed"], "kqv": t["kqv"] * k,
                   "score": t["score"] * k, "ff": t["ff"] * k,
                   "lm_head": t["lm_head"]}
-    alloc = {"ACU": n_acu, "DRAM": n_dram}
+    alloc = env["alloc"]
     busy = {n: ({"ACU", "DRAM"} if n == "score" else {"DRAM"}) for n in t}
     energy = _energy(phases, t, alloc, ev, busy)
     name = "TransPIM_chiplet" if chiplet else "TransPIM"
@@ -256,6 +289,155 @@ def _phase_noi_times_baseline(pl, phases):
     ev = evaluate_noi(pl, phases, roles_override=aliased)
     times = [noi_phase_time(u) for u in ev.per_phase_link_bytes] or [0.0] * len(phases)
     return times, ev
+
+
+# ---------------------------------------------------------------------------
+# generation episodes on the baselines
+# ---------------------------------------------------------------------------
+#
+# Both baselines keep the KV cache inside the DRAM-PIM banks where it was
+# computed, so prefill write-back is an intra-bank commit (DRAM access
+# energy + bank-bandwidth time, no NoI crossing).  Every decode step still
+# has to move the cached K/V to wherever score runs: HAIMA streams it to
+# the SRAM plane (and round-trips the softmax through the host), TransPIM
+# ring-broadcasts the token state and spills the score row through the
+# ACUs — the per-kernel hand-off latencies the paper calls out (§2) are
+# paid per generated token, per layer.
+
+def _haima_decode_step(w: Workload, env: dict, kv_pos: int, calib: Calib):
+    phases = decode_step_phases(w, kv_pos)
+    score_spill = 2.0 * kv_pos * w.n_heads * BYTES   # 1×P score row, ×2 ways
+    for p in phases:
+        if p.name == "score_dec":
+            p.host_bytes = 2 * w.d_model * BYTES + score_spill
+            p.sm_mc_bytes *= 2.0          # contention paths (§4.2); the
+            # cached K/V itself crosses the DRAM↔SRAM boundary via dram_bytes
+        if p.name == "embed_dec":
+            p.sm_mc_bytes += w.d_model * BYTES
+    noi_t, ev = _phase_noi_times_baseline(env["pl"], phases)
+    noi_by = {p.name: t for p, t in zip(phases, noi_t)}
+    by = {p.name: p for p in phases}
+
+    def host_time(p):
+        return (p.host_bytes / C.HOST_LINK.bw
+                + (2 * C.HOST_LINK.latency_s if p.host_bytes else 0.0))
+
+    def t_of(p, rate0, *, exponent=1.5, dyn=1.0):
+        rate = rate0 * _dim_util(_phase_dim(p.name, w), exponent) / dyn
+        return max((p.sm_flops + p.reram_flops) / rate, noi_by[p.name],
+                   p.dram_bytes / (env["n_dram"] * C.DRAM.bw)) + host_time(p)
+
+    e = calib.haima_scale_exp
+    t = {"embed_dec": t_of(by["embed_dec"], env["pim_rate0"], exponent=e),
+         "kqv_dec": t_of(by["kqv_dec"], env["pim_rate0"], exponent=e),
+         "score_dec": t_of(by["score_dec"], env["sram_rate0"], exponent=1.0,
+                           dyn=DYNAMIC_WRITE_PENALTY),
+         "ff_dec": t_of(by["ff_dec"], env["pim_rate0"], exponent=e),
+         "lm_head_dec": t_of(by["lm_head_dec"], env["pim_rate0"], exponent=e)}
+    if "cross_dec" in by:
+        t["cross_dec"] = t_of(by["cross_dec"], env["pim_rate0"], exponent=e)
+    k = max(w.n_dec_layers, 1)
+    per_layer = t["kqv_dec"] + t["score_dec"] + t["ff_dec"] \
+        + t.get("cross_dec", 0.0)
+    step = t["embed_dec"] + k * per_layer + t["lm_head_dec"]   # serialized
+    busy = {n: ({"SRAM", "HOST"} if n == "score_dec" else {"DRAM"})
+            for n in t}
+    energy = _energy(phases, t, env["alloc"], ev, busy) * 1.35  # contention
+    return step, energy, ev
+
+
+def _transpim_decode_step(w: Workload, env: dict, kv_pos: int, calib: Calib):
+    phases = decode_step_phases(w, kv_pos)
+    ring_bytes = w.d_model * BYTES                   # 1-token ring broadcast
+    acu_spill = 2.0 * kv_pos * w.n_heads * BYTES     # 1×P score row via ACUs
+    for p in phases:
+        if p.name in ("kqv_dec", "score_dec"):
+            p.sm_mc_bytes += ring_bytes
+        if p.name == "score_dec":
+            p.sm_mc_bytes += acu_spill
+        if p.name == "embed_dec":
+            p.sm_mc_bytes += w.d_model * BYTES
+    noi_t, ev = _phase_noi_times_baseline(env["pl"], phases)
+    noi_by = {p.name: t for p, t in zip(phases, noi_t)}
+    by = {p.name: p for p in phases}
+
+    def t_of(p):
+        dyn = 1.0
+        if p.name == "score_dec":
+            dyn = DYNAMIC_WRITE_PENALTY
+        elif p.name == "kqv_dec":
+            dyn = KQV_WRITEBACK
+        rate = (env["pim_rate0"]
+                * _dim_util(_phase_dim(p.name, w), calib.transpim_scale_exp)
+                / dyn)
+        spill_t = (acu_spill / (env["n_acu"] * ACU_BW)
+                   if p.name == "score_dec" else 0.0)
+        return (max((p.sm_flops + p.reram_flops) / rate, noi_by[p.name],
+                    p.dram_bytes / (env["n_dram"] * C.DRAM.bw)) + ACU_LATENCY
+                + spill_t)
+
+    t = {n: t_of(p) for n, p in by.items()}
+    k = max(w.n_dec_layers, 1)
+    per_layer = t["kqv_dec"] + t["score_dec"] + t["ff_dec"] \
+        + t.get("cross_dec", 0.0)
+    step = t["embed_dec"] + k * per_layer + t["lm_head_dec"]
+    busy = {n: ({"ACU", "DRAM"} if n == "score_dec" else {"DRAM"}) for n in t}
+    energy = _energy(phases, t, env["alloc"], ev, busy)
+    return step, energy, ev
+
+
+def _baseline_generation(arch: str, w: Workload, n_chiplets: int,
+                         prompt_len: int, gen_len: int, *, calib: Calib,
+                         samples: int, prefill_fn, env: dict,
+                         step_fn) -> GenResult:
+    w = dataclasses.replace(w, seq_len=prompt_len)
+    prefill = prefill_fn(w, n_chiplets, calib=calib)
+    # intra-bank KV commit: bank-bandwidth time + DRAM access energy
+    kv_bytes = kv_cache_bytes_per_layer(w, prompt_len) * max(w.n_dec_layers, 1)
+    t_kv = kv_bytes / (env["n_dram"] * C.DRAM.bw)
+    kv_energy = kv_bytes * 8 * C.DRAM.energy_pj_per_bit * 1e-12
+    ttft = prefill.latency_s + t_kv
+
+    steps = max(gen_len - 1, 0)
+    step_t, step_e, ev = [], [], None
+    for pos in _decode_positions(prompt_len, gen_len, samples):
+        t, e, ev = step_fn(w, env, pos, calib)
+        step_t.append(t)
+        step_e.append(e)
+    decode_step = sum(step_t) / len(step_t)
+    decode_energy = steps * sum(step_e) / len(step_e)
+    mid = _decode_positions(prompt_len, gen_len, 1)[0]
+    return GenResult(
+        arch=arch, workload=w.name, n_chiplets=n_chiplets,
+        prompt_len=prompt_len, gen_len=gen_len, ttft_s=ttft,
+        decode_step_s=decode_step, latency_s=ttft + steps * decode_step,
+        energy_j=prefill.energy_j + kv_energy + decode_energy,
+        # the intra-bank KV commit never crosses the fabric, so prefill
+        # traffic is the plain forward pass (unlike 2.5D-HI's kv_write)
+        prefill_bytes=total_traffic_bytes(transformer_phases(w)),
+        decode_bytes=steps * total_traffic_bytes(decode_step_phases(w, mid)),
+        prefill=prefill, noi=ev)
+
+
+def simulate_generation_haima(w: Workload, n_chiplets: int, prompt_len: int,
+                              gen_len: int, *, calib: Calib = CALIB,
+                              samples: int = 4) -> GenResult:
+    env = _haima_env(n_chiplets, calib, chiplet=True)
+    return _baseline_generation(
+        "HAIMA_chiplet", w, n_chiplets, prompt_len, gen_len, calib=calib,
+        samples=samples, prefill_fn=simulate_haima_chiplet, env=env,
+        step_fn=_haima_decode_step)
+
+
+def simulate_generation_transpim(w: Workload, n_chiplets: int,
+                                 prompt_len: int, gen_len: int, *,
+                                 calib: Calib = CALIB,
+                                 samples: int = 4) -> GenResult:
+    env = _transpim_env(n_chiplets, calib, chiplet=True)
+    return _baseline_generation(
+        "TransPIM_chiplet", w, n_chiplets, prompt_len, gen_len, calib=calib,
+        samples=samples, prefill_fn=simulate_transpim_chiplet, env=env,
+        step_fn=_transpim_decode_step)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,229 @@
+"""Plane-A ↔ Plane-B co-simulation bridge.
+
+The serving engine (`repro.serving.engine`) runs real prefill+decode
+schedules on JAX; the analytical simulator (`core/simulator`) evaluates
+chiplet architectures.  This module closes the loop:
+
+1. **measure** — ``mix_from_stats`` turns ``ServingEngine.stats()`` into a
+   :class:`EpisodeMix`: the batch mix of (prompt_len, gen_len) episodes the
+   engine actually served, plus its chunked-prefill schedule;
+2. **replay** — ``cosim_mix`` replays that mix through
+   ``simulate_generation`` for every architecture, on the *full* model
+   config (the engine typically serves a ``reduce_config`` shrink of it),
+   reporting TTFT, decode tok/s and energy/token per architecture;
+3. **design** — ``generation_phases`` expands the mix into a decode-heavy
+   phase list whose repeats weight prefill vs decode by their measured
+   token counts, and ``generation_objective`` feeds it to the existing
+   MOO solvers (`core/moo`) — so NoI placement/link search optimises for
+   the traffic a *generation* workload actually produces (KV-cache reads
+   dominating), not a single fixed-length forward pass.
+
+The single-pass calibration contract is untouched: everything here is
+built from ``prefill_phases`` / ``decode_step_phases`` on top of the
+anchored single-pass models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+from repro.config import ModelConfig, get_config
+from repro.core.noi import NoIEval, evaluate_noi, mesh_baseline_eval
+from repro.core.simulator import (CALIB, Calib, _decode_positions,
+                                  simulate_generation)
+from repro.core.traffic import (Phase, Workload, decode_step_phases,
+                                prefill_phases)
+
+ARCHS = ("2.5D-HI", "HAIMA_chiplet", "TransPIM_chiplet")
+
+
+@dataclasses.dataclass(frozen=True)
+class Episode:
+    """One served request class: prompt_len tokens in, gen_len tokens out."""
+    prompt_len: int
+    gen_len: int
+    count: int = 1
+
+
+@dataclasses.dataclass
+class EpisodeMix:
+    """The measured workload of a serving run (the Plane-A ground truth)."""
+    episodes: list[Episode]
+    prefill_chunk: int = 0        # engine chunked-prefill budget (tokens)
+    max_batch: int = 0            # engine slot-pool size
+
+    @property
+    def requests(self) -> int:
+        return sum(e.count for e in self.episodes)
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(e.prompt_len * e.count for e in self.episodes)
+
+    @property
+    def decode_tokens(self) -> int:
+        return sum(max(e.gen_len - 1, 0) * e.count for e in self.episodes)
+
+
+def mix_from_stats(stats: dict) -> EpisodeMix:
+    """Build the episode mix from ``ServingEngine.stats()``.
+
+    Requires the per-request ``prompt_lens``/``gen_lens`` lists the engine
+    records for finished requests; identical (prompt, gen) pairs collapse
+    into one weighted episode."""
+    if not stats.get("finished"):
+        raise ValueError("engine stats carry no finished requests")
+    plens = stats.get("prompt_lens")
+    glens = stats.get("gen_lens")
+    if not plens or not glens or len(plens) != len(glens):
+        raise ValueError("stats missing per-request prompt_lens/gen_lens")
+    counts: dict[tuple[int, int], int] = {}
+    for p, g in zip(plens, glens):
+        counts[(int(p), int(g))] = counts.get((int(p), int(g)), 0) + 1
+    episodes = [Episode(p, g, c) for (p, g), c in sorted(counts.items())]
+    return EpisodeMix(episodes,
+                      prefill_chunk=int(stats.get("prefill_chunk", 0)),
+                      max_batch=int(stats.get("max_batch", 0)))
+
+
+def _resolve(cfg) -> ModelConfig:
+    return get_config(cfg) if isinstance(cfg, str) else cfg
+
+
+def workload_for(cfg, episode: Episode) -> Workload:
+    """Plane-B workload for one episode of a (full-size) model config."""
+    return Workload.from_config(_resolve(cfg), seq_len=episode.prompt_len)
+
+
+# ---------------------------------------------------------------------------
+# replay: measured mix → per-architecture generation metrics
+# ---------------------------------------------------------------------------
+
+def cosim_mix(cfg, mix: EpisodeMix, n_chiplets: int,
+              archs: Sequence[str] = ARCHS, *,
+              calib: Calib = CALIB) -> dict:
+    """Replay a measured episode mix through every architecture.
+
+    Returns ``{arch: {ttft_s, decode_step_s, tokens_per_s,
+    energy_per_token_j, prefill_bytes, decode_bytes, decode_traffic_frac}}``
+    with request-count-weighted means (throughput weighted by tokens)."""
+    cfg = _resolve(cfg)
+    out: dict[str, dict] = {}
+    for arch in archs:
+        ttft = step = energy = toks = lat = pre_b = dec_b = 0.0
+        n = 0
+        for ep in mix.episodes:
+            w = workload_for(cfg, ep)
+            g = simulate_generation(w, n_chiplets, ep.prompt_len, ep.gen_len,
+                                    arch=arch, calib=calib)
+            n += ep.count
+            ttft += g.ttft_s * ep.count
+            step += g.decode_step_s * ep.count
+            energy += g.energy_j * ep.count
+            toks += g.gen_len * ep.count
+            lat += g.latency_s * ep.count
+            pre_b += g.prefill_bytes * ep.count
+            dec_b += g.decode_bytes * ep.count
+        out[arch] = {
+            "ttft_s": ttft / n,
+            "decode_step_s": step / n,
+            "tokens_per_s": toks / max(lat, 1e-30),
+            "energy_per_token_j": energy / max(toks, 1),
+            "prefill_bytes": pre_b,
+            "decode_bytes": dec_b,
+            "decode_traffic_frac": dec_b / max(pre_b + dec_b, 1e-30),
+        }
+    return out
+
+
+def cosim_from_engine(engine, cfg=None, n_chiplets: int = 64,
+                      archs: Sequence[str] = ARCHS, *,
+                      calib: Calib = CALIB) -> dict:
+    """End-to-end bridge: measured engine run → Plane-B evaluation.
+
+    ``cfg`` defaults to the engine's own (usually reduced) config; pass the
+    full-size config to project the measured schedule onto the real model
+    dims."""
+    mix = mix_from_stats(engine.stats())
+    cfg = _resolve(cfg) if cfg is not None else engine.cfg
+    return {"mix": {"requests": mix.requests,
+                    "prefill_tokens": mix.prefill_tokens,
+                    "decode_tokens": mix.decode_tokens,
+                    "prefill_chunk": mix.prefill_chunk,
+                    "max_batch": mix.max_batch,
+                    "episodes": [dataclasses.asdict(e) for e in mix.episodes]},
+            "archs": cosim_mix(cfg, mix, n_chiplets, archs, calib=calib)}
+
+
+# ---------------------------------------------------------------------------
+# design: generation traffic → MOO/placement objective
+# ---------------------------------------------------------------------------
+
+def generation_phases(cfg, mix: EpisodeMix, *, samples: int = 1) -> list[Phase]:
+    """Phase list of a whole generation episode mix, for NoI evaluation.
+
+    Prefill phases keep their per-layer repeats; decode phases (evaluated
+    at ``samples`` KV positions per episode) get their repeats scaled by
+    the number of decode steps they represent, so ``evaluate_noi``'s
+    repeat-weighted time-average (eqs 14-15) sees prefill and decode in
+    their measured proportions — decode-heavy mixes dominate the objective
+    exactly as they dominate the real fabric."""
+    cfg = _resolve(cfg)
+    phases: list[Phase] = []
+    for ep in mix.episodes:
+        w = workload_for(cfg, ep)
+        for p in prefill_phases(w):
+            q = dataclasses.replace(p, repeat=p.repeat * ep.count)
+            phases.append(q)
+        steps = max(ep.gen_len - 1, 0)
+        if not steps:
+            continue
+        positions = _decode_positions(ep.prompt_len, ep.gen_len, samples)
+        # partition the decode steps across the sampled positions exactly,
+        # so the repeat-weighted decode/prefill ratio matches the mix
+        base, rem = divmod(steps, len(positions))
+        for i, pos in enumerate(positions):
+            per_pos = base + (1 if i < rem else 0)
+            for p in decode_step_phases(w, pos):
+                q = dataclasses.replace(
+                    p, repeat=p.repeat * per_pos * ep.count)
+                phases.append(q)
+    return phases
+
+
+def generation_objective(cfg, mix: EpisodeMix, n_chiplets: int,
+                         *, samples: int = 1,
+                         mesh_ev: Optional[NoIEval] = None,
+                         ) -> tuple[Callable, NoIEval, list[Phase]]:
+    """(objective_fn, mesh_ev, phases): the paper's 2-objective NoI metric
+    (μ, σ normalised to the placement-unaware 2-D mesh) over the measured
+    generation traffic.  Drop-in for `core/moo` solvers."""
+    phases = generation_phases(cfg, mix, samples=samples)
+    mesh_ev = mesh_ev or mesh_baseline_eval(n_chiplets, phases)
+
+    def objective(p):
+        ev = evaluate_noi(p, phases)
+        return (ev.mu / mesh_ev.mu, ev.sigma / mesh_ev.sigma)
+
+    return objective, mesh_ev, phases
+
+
+def optimize_generation_noi(cfg, mix: EpisodeMix, n_chiplets: int, *,
+                            iterations: int = 3, ls_steps: int = 12,
+                            seed: int = 0, samples: int = 1):
+    """Decode-aware NoI design search: MOO-STAGE over the generation
+    traffic, seeded (like `examples/noi_design.py`) with a local search
+    from the dataflow-aware initial placement.  Returns
+    (MooStageResult, mesh_ev)."""
+    import random
+
+    from repro.core.moo import local_search, moo_stage
+    from repro.core.placement import initial_placement
+
+    objective, mesh_ev, _ = generation_objective(cfg, mix, n_chiplets,
+                                                 samples=samples)
+    res = moo_stage(n_chiplets, objective, (2.0, 2.0),
+                    iterations=iterations, ls_steps=ls_steps, seed=seed)
+    local_search(initial_placement(n_chiplets), objective, res.archive,
+                 random.Random(seed), max_steps=ls_steps)
+    return res, mesh_ev

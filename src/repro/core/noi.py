@@ -99,7 +99,7 @@ def evaluate_noi(p: Placement, phases: list[Phase],
         per_phase_link_bytes=per_phase)
 
 
-def noi_phase_time(link_bytes: np.ndarray, repeat: int = 1) -> float:
+def noi_phase_time(link_bytes: np.ndarray) -> float:
     """Serialisation time of a phase on the NoI: the busiest link bounds
     throughput (wormhole, all flows concurrent)."""
     if len(link_bytes) == 0:

@@ -24,7 +24,9 @@ from typing import Optional
 from repro.core import chiplets as C
 from repro.core.noi import NoIEval, evaluate_noi, noi_energy, noi_phase_time
 from repro.core.placement import Placement, initial_placement
-from repro.core.traffic import Phase, Workload, transformer_phases
+from repro.core.traffic import (Phase, Workload, decode_step_phases,
+                                prefill_phases, total_traffic_bytes,
+                                transformer_phases)
 
 
 @dataclasses.dataclass
@@ -79,7 +81,11 @@ def _phase_noi_times(placement: Placement, phases: list[Phase]) -> tuple[list[fl
 def _energy(phases, times_by_phase, alloc, noi_ev, busy: dict) -> float:
     """busy: phase-name -> set of busy unit types."""
     e = 0.0
-    total_t = sum(times_by_phase.values())
+    # background term integrates over the *executed* runtime: each phase
+    # runs ph.repeat times (summing one execution per phase under-counted
+    # the idle-DRAM window by ~n_layers×)
+    total_t = sum(times_by_phase.get(ph.name, 0.0) * ph.repeat
+                  for ph in phases)
     unit_power = {
         "SM": alloc.get("SM", 0) * C.SM.power_w,
         "MC": alloc.get("MC", 0) * C.MC.power_w,
@@ -177,6 +183,165 @@ def simulate_2p5d_hi(w: Workload, n_chiplets: int, *,
     energy = _energy(phases, times, alloc, ev, busy)
     return SimResult("2.5D-HI", w.name, n_chiplets, w.seq_len, total, energy,
                      per_kernel, ev)
+
+
+# ---------------------------------------------------------------------------
+# generation episodes (prefill + autoregressive decode)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GenResult:
+    """One generation episode: prefill a prompt, decode ``gen_len`` tokens.
+
+    The first token is sampled from the prefill logits (standard serving
+    convention), so TTFT = prefill latency (+ KV-cache write-back) and the
+    remaining ``gen_len - 1`` tokens run the decode step."""
+    arch: str
+    workload: str
+    n_chiplets: int
+    prompt_len: int
+    gen_len: int
+    ttft_s: float
+    decode_step_s: float          # mean per-token decode latency
+    latency_s: float              # full episode wall time
+    energy_j: float               # full episode energy
+    prefill_bytes: float          # fabric bytes injected during prefill
+    decode_bytes: float           # fabric bytes injected during decode
+    prefill: Optional[SimResult] = None
+    noi: Optional[NoIEval] = None  # decode-step NoI at the mid position
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.gen_len / max(self.latency_s, 1e-30)
+
+    @property
+    def decode_tok_s(self) -> float:
+        """Steady-state decode throughput (ignoring TTFT)."""
+        return 1.0 / max(self.decode_step_s, 1e-30)
+
+    @property
+    def energy_per_token_j(self) -> float:
+        return self.energy_j / max(self.gen_len, 1)
+
+
+def _decode_positions(prompt_len: int, gen_len: int, samples: int) -> list[int]:
+    """KV positions at which to evaluate the decode step.  Decode runs
+    ``gen_len - 1`` steps at positions ``prompt_len … prompt_len+gen_len-2``;
+    phase costs are linear in position, so a few samples averaged across the
+    range reconstruct the episode sum (max() of linear terms makes this an
+    approximation only when the binding bottleneck flips mid-episode)."""
+    steps = max(gen_len - 1, 1)
+    lo, hi = prompt_len, prompt_len + steps - 1
+    n = min(samples, steps)
+    if n <= 1:
+        return [(lo + hi) // 2]
+    return [round(lo + (hi - lo) * i / (n - 1)) for i in range(n)]
+
+
+_DECODE_BUSY = {"embed_dec": {"ReRAM"}, "kqv_dec": {"SM", "MC"},
+                "score_dec": {"SM", "MC"}, "cross_dec": {"SM", "MC"},
+                "ff_dec": {"ReRAM", "MC"}, "lm_head_dec": {"ReRAM"}}
+
+
+def _hi_decode_step(w: Workload, alloc: dict, placement: Placement,
+                    kv_pos: int, calib: Calib):
+    """(step_time_s, step_energy_j, NoIEval) of one 2.5D-HI decode step.
+
+    Same execution model as the single pass (SM attention fed by MC/DRAM,
+    FF on the ReRAM macro, layer-l MHA over layer-(l-1) FF pipelining) at
+    N=1, with the KV-cache read bounding the score phase."""
+    phases = decode_step_phases(w, kv_pos)
+    noi_t, ev = _phase_noi_times(placement, phases)
+    noi_by = {p.name: t for p, t in zip(phases, noi_t)}
+    by = {p.name: p for p in phases}
+    dram_bw = alloc["DRAM"] * C.DRAM.bw
+
+    def sm_rate(dim):
+        return (alloc["SM"] * C.SM.peak_flops * calib.sm_efficiency
+                * min(1.0, dim / C.SM_SAT_DIM))
+
+    def rer_rate():
+        return alloc["ReRAM"] * C.RERAM.peak_flops * calib.reram_fill
+
+    def t_attn(name):
+        p = by[name]
+        return max(p.sm_flops / sm_rate(w.d_model),
+                   p.dram_bytes / dram_bw, noi_by[name])
+
+    def t_reram(name):
+        p = by[name]
+        return max(p.reram_flops / rer_rate(), noi_by[name])
+
+    times = {"embed_dec": t_reram("embed_dec"), "kqv_dec": t_attn("kqv_dec"),
+             "score_dec": t_attn("score_dec"), "ff_dec": t_reram("ff_dec"),
+             "lm_head_dec": t_reram("lm_head_dec")}
+    stage_attn = times["kqv_dec"] + times["score_dec"]
+    if "cross_dec" in by:
+        times["cross_dec"] = t_attn("cross_dec")
+        stage_attn += times["cross_dec"]
+    stage_ff = times["ff_dec"]
+    k = max(w.n_dec_layers, 1)
+    if w.parallel_mha_ff:
+        step = (times["embed_dec"] + k * max(stage_attn, stage_ff)
+                + times["lm_head_dec"])
+    else:
+        step = (times["embed_dec"] + stage_attn
+                + (k - 1) * max(stage_attn, stage_ff) + stage_ff
+                + times["lm_head_dec"])
+    energy = _energy(phases, times, alloc, ev, _DECODE_BUSY)
+    return step, energy, ev
+
+
+def simulate_generation(w: Workload, n_chiplets: int, prompt_len: int,
+                        gen_len: int, *, arch: str = "2.5D-HI",
+                        placement: Optional[Placement] = None,
+                        calib: Calib = CALIB, samples: int = 4) -> GenResult:
+    """Full generation episode on any of the three architectures.
+
+    TTFT is the calibrated single-pass latency over the prompt plus the
+    explicit KV-cache write-back; decode is evaluated at ``samples`` KV
+    positions across the episode and averaged (costs are linear in
+    position)."""
+    if arch != "2.5D-HI":
+        from repro.core import baselines as B  # local import (module cycle)
+        fn = {"HAIMA_chiplet": B.simulate_generation_haima,
+              "TransPIM_chiplet": B.simulate_generation_transpim}[arch]
+        return fn(w, n_chiplets, prompt_len, gen_len, calib=calib,
+                  samples=samples)
+
+    w = dataclasses.replace(w, seq_len=prompt_len)
+    alloc = _alloc(n_chiplets)
+    placement = placement or initial_placement(n_chiplets)
+    prefill = simulate_2p5d_hi(w, n_chiplets, placement=placement, calib=calib)
+
+    # KV write-back rides on top of the calibrated single pass: per-layer
+    # commit of the prompt's K/V (or the cross-KV projection) to DRAM
+    pre_phases = prefill_phases(w)
+    kv_phase = pre_phases[-1]
+    kv_noi, kv_ev = _phase_noi_times(placement, [kv_phase])
+    t_kv = max(kv_phase.dram_bytes / (alloc["DRAM"] * C.DRAM.bw), kv_noi[0])
+    kv_energy = _energy([kv_phase], {"kv_write": t_kv}, alloc, kv_ev,
+                        {"kv_write": {"MC"}})
+    ttft = prefill.latency_s + t_kv * kv_phase.repeat
+
+    steps = max(gen_len - 1, 0)
+    step_t, step_e, ev = [], [], None
+    for pos in _decode_positions(prompt_len, gen_len, samples):
+        t, e, ev = _hi_decode_step(w, alloc, placement, pos, calib)
+        step_t.append(t)
+        step_e.append(e)
+    decode_step = sum(step_t) / len(step_t)
+    decode_energy = steps * sum(step_e) / len(step_e)
+
+    mid = _decode_positions(prompt_len, gen_len, 1)[0]
+    decode_bytes = steps * total_traffic_bytes(decode_step_phases(w, mid))
+    return GenResult(
+        arch="2.5D-HI", workload=w.name, n_chiplets=n_chiplets,
+        prompt_len=prompt_len, gen_len=gen_len, ttft_s=ttft,
+        decode_step_s=decode_step, latency_s=ttft + steps * decode_step,
+        energy_j=prefill.energy_j + kv_energy + decode_energy,
+        prefill_bytes=total_traffic_bytes(pre_phases),
+        decode_bytes=decode_bytes, prefill=prefill, noi=ev)
 
 
 # ---------------------------------------------------------------------------

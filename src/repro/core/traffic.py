@@ -14,6 +14,20 @@ Phases per encoder/decoder block (Fig. 2a):
 A workload descriptor captures exactly what the traffic model needs —
 dims, heads (MQA/GQA collapse the K/V share), enc/dec structure, and the
 parallel MHA-FF flag (GPT-J) which overlaps ④ and ⑤.
+
+Beyond the single fixed-length forward pass (``transformer_phases``, the
+Table-4 calibration surface — never changed by the generation model), the
+module derives full *generation* episodes:
+
+- ``prefill_phases``    — the forward pass over the prompt **plus** the
+  explicit KV-cache write-back traffic (SM→MC→DRAM) that a serving run
+  performs so decode can read the cache later;
+- ``decode_step_phases`` — one autoregressive step at a given KV position:
+  per-token KQV (N=1, weights re-streamed), score over the *cached* KV
+  (DRAM→MC→SM read traffic growing linearly with position, GQA-aware via
+  ``kv_frac``), cross-attention over the frozen encoder KV (enc-dec), FF
+  and lm_head per token.  Decode phases repeat over the *decoder* stack
+  only (``n_dec_layers``).
 """
 from __future__ import annotations
 
@@ -37,6 +51,24 @@ class Workload:
     seq_len: int
     enc_dec: bool = False
     parallel_mha_ff: bool = False        # GPT-J (paper eq. 9)
+    n_enc_layers: int = 0                # encoder share of n_layers (enc-dec)
+
+    def __post_init__(self):
+        # direct construction with enc_dec=True but no declared encoder
+        # share keeps the legacy symmetric-stack assumption rather than
+        # silently treating every layer as a decoder layer
+        if self.enc_dec and self.n_enc_layers == 0:
+            object.__setattr__(self, "n_enc_layers", self.n_layers // 2)
+
+    @property
+    def n_dec_layers(self) -> int:
+        """Decoder-stack depth — the layers that run per generated token."""
+        return self.n_layers - self.n_enc_layers
+
+    @property
+    def kv_frac(self) -> float:
+        """K/V share vs MHA (GQA/MQA collapse the cached heads)."""
+        return self.n_kv_heads / self.n_heads
 
     @classmethod
     def from_config(cls, cfg: ModelConfig, seq_len: int) -> "Workload":
@@ -46,7 +78,8 @@ class Workload:
             n_heads=max(cfg.n_heads, 1), n_kv_heads=max(cfg.n_kv_heads, 1),
             d_ff=cfg.d_ff or 4 * cfg.d_model, vocab=cfg.vocab_size,
             seq_len=seq_len, enc_dec=cfg.n_encoder_layers > 0,
-            parallel_mha_ff=cfg.parallel_block)
+            parallel_mha_ff=cfg.parallel_block,
+            n_enc_layers=cfg.n_encoder_layers)
 
 
 @dataclasses.dataclass
@@ -102,19 +135,119 @@ def transformer_phases(w: Workload) -> list[Phase]:
     )
     phases += [kqv, score, ff]
     if w.enc_dec:
-        # decoder cross-attention adds one extra attention block per layer
+        # decoder cross-attention adds one extra attention block per
+        # *decoder* layer — repeat follows the decoder stack, not half the
+        # total (which was only correct for symmetric enc/dec stacks)
         cross = Phase(
             "cross",
             sm_flops=2.0 * N * N * D + 2.0 * N * D * D * (1 + 2 * kv_frac) / 2,
             sm_mc_bytes=2 * N * D * BYTES,
             dram_bytes=D * D * BYTES,
-            repeat=w.n_layers // 2,
+            repeat=w.n_dec_layers,
         )
         phases.append(cross)
     phases.append(Phase("lm_head",
                         reram_flops=2.0 * N * D * w.vocab / max(N, 1),
                         mc_reram_bytes=D * w.vocab * BYTES / max(N, 1)))
     return phases
+
+
+# ---------------------------------------------------------------------------
+# generation: prefill (+KV write-back) and per-token decode phases
+# ---------------------------------------------------------------------------
+
+def kv_cache_bytes_per_layer(w: Workload, kv_len: int) -> float:
+    """K + V cache rows for ``kv_len`` positions of one (decoder) layer —
+    the quantity streamed DRAM→MC→SM at every decode step and written back
+    during prefill.  GQA/MQA shrink it by ``kv_frac``."""
+    return 2.0 * kv_len * w.d_model * w.kv_frac * BYTES
+
+
+def prefill_phases(w: Workload) -> list[Phase]:
+    """Prompt-ingest phases of a generation episode: the single forward
+    pass over ``w.seq_len`` prompt tokens **plus** the explicit KV-cache
+    write-back (SM→MC→DRAM) that the fixed-length model omits.  For
+    enc-dec workloads the written cache is the cross-KV projection of the
+    encoder output (same N·D·kv_frac footprint per decoder layer).
+
+    ``transformer_phases`` itself is untouched — it remains the Table-4
+    calibration surface."""
+    kv_bytes = kv_cache_bytes_per_layer(w, w.seq_len)
+    return transformer_phases(w) + [Phase(
+        "kv_write",
+        sm_mc_bytes=kv_bytes,            # SM→MC hand-off of the fresh K/V
+        dram_bytes=kv_bytes,             # MC→DRAM cache commit
+        repeat=w.n_dec_layers,
+    )]
+
+
+def decode_step_phases(w: Workload, kv_pos: int) -> list[Phase]:
+    """One autoregressive decode step with ``kv_pos`` tokens already cached.
+
+    N=1 everywhere: weights are re-streamed per token (the memory-bound
+    regime), the score phase reads the whole cached K/V (linear in
+    ``kv_pos``, GQA-aware), the fresh K/V row is written back, and enc-dec
+    stacks re-read the frozen cross-KV of the ``w.seq_len``-token source.
+    All per-layer phases repeat over the decoder stack only."""
+    D, F, k = w.d_model, w.d_ff, w.n_dec_layers
+    kv_frac = w.kv_frac
+    kv_read = kv_cache_bytes_per_layer(w, kv_pos)
+    kv_write = kv_cache_bytes_per_layer(w, 1)
+    w_kqv = (1 + 2 * kv_frac) * D * D * BYTES
+
+    phases = [Phase(
+        "embed_dec",                      # 1-token embedding lookup
+        reram_flops=2.0 * D,
+        reram_pipe_bytes=D * BYTES,
+        mc_reram_bytes=D * BYTES,
+    )]
+    phases.append(Phase(
+        "kqv_dec",                        # per-token projections + KV commit
+        sm_flops=2.0 * D * D * (1 + 2 * kv_frac),
+        dram_bytes=w_kqv + D * BYTES + kv_write,
+        sm_mc_bytes=D * (1 + 2 * kv_frac) * BYTES + kv_write,
+        repeat=k,
+    ))
+    phases.append(Phase(
+        "score_dec",                      # q·Kᵀ, softmax, ·V over the cache
+        sm_flops=2.0 * kv_pos * D * 2 + 2.0 * D * D,
+        dram_bytes=D * D * BYTES + kv_read,
+        sm_mc_bytes=2 * D * BYTES,
+        repeat=k,
+    ))
+    if w.enc_dec:
+        enc_kv = kv_cache_bytes_per_layer(w, w.seq_len)
+        phases.append(Phase(
+            "cross_dec",                  # attend over the frozen cross-KV
+            sm_flops=2.0 * w.seq_len * D * 2 + 2.0 * D * D,
+            dram_bytes=D * D * BYTES + enc_kv,
+            sm_mc_bytes=2 * D * BYTES,
+            repeat=k,
+        ))
+    phases.append(Phase(
+        "ff_dec",
+        reram_flops=2.0 * D * F * 2,
+        mc_reram_bytes=2 * D * BYTES,
+        reram_pipe_bytes=F * BYTES,
+        repeat=k,
+    ))
+    phases.append(Phase(
+        "lm_head_dec",                    # every generated token pays the head
+        reram_flops=2.0 * D * w.vocab,
+        mc_reram_bytes=(D + w.vocab) * BYTES,
+    ))
+    return phases
+
+
+def phase_bytes(ph: Phase) -> float:
+    """Total bytes one execution of a phase injects into the fabric."""
+    return (ph.dram_bytes + ph.sm_mc_bytes + ph.reram_pipe_bytes
+            + ph.mc_reram_bytes + ph.host_bytes)
+
+
+def total_traffic_bytes(phases: list[Phase]) -> float:
+    """Repeat-weighted bytes injected by a whole phase list."""
+    return sum(phase_bytes(p) * p.repeat for p in phases)
 
 
 def rewrites_per_token(w: Workload) -> float:

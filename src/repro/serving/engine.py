@@ -751,4 +751,10 @@ class ServingEngine:
             "prefill_time_s": self.prefill_time,
             "prefill_tokens_per_s": self.prefill_tokens / max(self.prefill_time, 1e-9),
             "max_stall_tokens": self.max_stall_tokens,
+            # per-request episode shape + schedule, consumed by the Plane-B
+            # co-simulation bridge (repro.core.cosim.mix_from_stats)
+            "prompt_lens": [len(r.prompt) for r in done],
+            "gen_lens": [len(r.output) for r in done],
+            "prefill_chunk": self._chunk,
+            "max_batch": self.ecfg.max_batch,
         }

@@ -1,0 +1,259 @@
+"""Decode-aware co-simulation: generation traffic invariants, the
+simulate_generation execution model, the energy-accounting fixes, and the
+Plane-A → Plane-B bridge (`core/cosim`)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.core import chiplets as C
+from repro.core.cosim import (Episode, EpisodeMix, cosim_mix,
+                              generation_objective, generation_phases,
+                              mix_from_stats)
+from repro.core.noi import evaluate_noi
+from repro.core.placement import initial_placement
+from repro.core.simulator import _energy, simulate_2p5d_hi, simulate_generation
+from repro.core.traffic import (Phase, Workload, decode_step_phases,
+                                kv_cache_bytes_per_layer, prefill_phases,
+                                total_traffic_bytes, transformer_phases)
+
+
+def _w(arch, n):
+    return Workload.from_config(get_config(arch), seq_len=n)
+
+
+# ---------------------------------------------------------------------------
+# decode-phase traffic invariants
+# ---------------------------------------------------------------------------
+
+def test_kv_cache_read_grows_linearly_with_position():
+    w = _w("llama2-7b", 64)
+    by1 = {p.name: p for p in decode_step_phases(w, 256)}
+    by2 = {p.name: p for p in decode_step_phases(w, 512)}
+    fixed = w.d_model * w.d_model * 2          # weight stream, pos-independent
+    kv1 = by1["score_dec"].dram_bytes - fixed
+    kv2 = by2["score_dec"].dram_bytes - fixed
+    assert kv2 == pytest.approx(2 * kv1)
+    assert kv1 == pytest.approx(kv_cache_bytes_per_layer(w, 256))
+
+
+def test_gqa_shrinks_kv_traffic_vs_mha():
+    dims = dict(name="x", d_model=4096, n_layers=32, d_ff=11008,
+                vocab=32000, seq_len=256)
+    mha = Workload(n_heads=32, n_kv_heads=32, **dims)
+    gqa = Workload(n_heads=32, n_kv_heads=8, **dims)
+    mqa = Workload(n_heads=32, n_kv_heads=1, **dims)
+    assert kv_cache_bytes_per_layer(gqa, 512) == pytest.approx(
+        kv_cache_bytes_per_layer(mha, 512) / 4)
+    assert kv_cache_bytes_per_layer(mqa, 512) == pytest.approx(
+        kv_cache_bytes_per_layer(mha, 512) / 32)
+    # ...and it reaches the score phase's streamed bytes
+    s_mha = {p.name: p for p in decode_step_phases(mha, 512)}["score_dec"]
+    s_gqa = {p.name: p for p in decode_step_phases(gqa, 512)}["score_dec"]
+    assert s_gqa.dram_bytes < s_mha.dram_bytes
+
+
+def test_decode_phases_cover_decoder_stack_only():
+    w = _w("whisper-large-v3", 64)          # 32 enc + 32 dec layers
+    assert w.n_enc_layers == 32 and w.n_dec_layers == 32
+    by = {p.name: p for p in decode_step_phases(w, 128)}
+    assert by["kqv_dec"].repeat == 32
+    assert "cross_dec" in by                # enc-dec re-reads the cross-KV
+    assert by["cross_dec"].repeat == 32
+
+
+def test_enc_dec_cross_repeat_follows_decoder_stack():
+    """The old ``n_layers // 2`` collapse was only right for symmetric
+    stacks; an asymmetric workload must repeat cross per decoder layer."""
+    sym = _w("bart-large", 64)              # 12 + 12
+    by = {p.name: p for p in transformer_phases(sym)}
+    assert by["cross"].repeat == 12
+    asym = dataclasses.replace(sym, n_layers=30, n_enc_layers=24)
+    by = {p.name: p for p in transformer_phases(asym)}
+    assert by["cross"].repeat == 6          # = n_dec_layers, not 30//2
+
+
+@pytest.mark.parametrize("n_chiplets", sorted(C.SYSTEM_ALLOC))
+def test_decode_noi_routes_on_all_system_sizes(n_chiplets):
+    w = _w("gemma2-9b", 128)
+    p = initial_placement(n_chiplets)
+    ev = evaluate_noi(p, decode_step_phases(w, 384))
+    assert np.isfinite(ev.mu) and ev.mu > 0
+    assert np.isfinite(ev.max_util)
+    ev_pre = evaluate_noi(p, prefill_phases(w))
+    assert np.isfinite(ev_pre.mu) and ev_pre.mu > 0
+
+
+def test_prefill_phases_add_kv_writeback_only():
+    w = _w("llama2-7b", 256)
+    pre = prefill_phases(w)
+    assert [p.name for p in pre[:-1]] == [p.name for p in transformer_phases(w)]
+    kv = pre[-1]
+    assert kv.name == "kv_write"
+    assert kv.repeat == w.n_dec_layers
+    assert kv.dram_bytes == pytest.approx(kv_cache_bytes_per_layer(w, 256))
+
+
+# ---------------------------------------------------------------------------
+# generation execution model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["2.5D-HI", "HAIMA_chiplet",
+                                  "TransPIM_chiplet"])
+def test_generation_slower_than_single_pass_same_tokens(arch):
+    """Autoregressive generation of P+G tokens can never beat one
+    single-pass forward over P+G tokens (decode loses batch amortisation)."""
+    from repro.core.baselines import (simulate_haima_chiplet,
+                                      simulate_transpim_chiplet)
+    sims = {"2.5D-HI": simulate_2p5d_hi,
+            "HAIMA_chiplet": simulate_haima_chiplet,
+            "TransPIM_chiplet": simulate_transpim_chiplet}
+    prompt, gen = 192, 64
+    w = _w("llama2-7b", prompt + gen)
+    single = sims[arch](w, 64)
+    g = simulate_generation(w, 64, prompt, gen, arch=arch)
+    assert g.latency_s >= single.latency_s
+    assert g.ttft_s < g.latency_s
+    assert g.energy_j > 0 and g.decode_step_s > 0
+
+
+def test_generation_decode_latency_grows_with_position():
+    w = _w("llama2-7b", 64)
+    short = simulate_generation(w, 64, 64, 32)
+    long = simulate_generation(w, 64, 2048, 32)
+    assert long.decode_step_s > short.decode_step_s   # bigger KV to stream
+    assert long.ttft_s > short.ttft_s
+
+
+def test_generation_gqa_decodes_faster_than_mha():
+    dims = dict(name="x", d_model=4096, n_layers=32, d_ff=11008,
+                vocab=32000, seq_len=512)
+    mha = Workload(n_heads=32, n_kv_heads=32, **dims)
+    mqa = Workload(n_heads=32, n_kv_heads=1, **dims)
+    g_mha = simulate_generation(mha, 64, 512, 64)
+    g_mqa = simulate_generation(mqa, 64, 512, 64)
+    assert g_mqa.decode_step_s < g_mha.decode_step_s
+    assert g_mqa.decode_bytes < g_mha.decode_bytes
+
+
+def test_generation_traffic_split_decode_heavy():
+    """Weights re-stream per generated token: with a non-trivial gen length
+    decode dominates the fabric traffic — the regime the NoI must serve."""
+    w = _w("llama2-7b", 512)
+    g = simulate_generation(w, 64, 512, 128)
+    assert g.decode_bytes > g.prefill_bytes
+
+
+# ---------------------------------------------------------------------------
+# energy accounting (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_energy_background_weighted_by_repeat():
+    """DRAM background energy integrates phase time × repeat; the busy /
+    background composition is pinned against hand-computed values."""
+    alloc = {"SM": 2, "DRAM": 3}
+    phases = [Phase("a", repeat=10), Phase("b", repeat=1)]
+    times = {"a": 0.5, "b": 2.0}
+    busy = {"a": {"SM"}, "b": set()}
+    e = _energy(phases, times, alloc, None, busy)
+    busy_e = 2 * C.SM.power_w * 0.5 * 10          # SM busy during a × repeat
+    background = 3 * C.DRAM.idle_power_w * (0.5 * 10 + 2.0)
+    assert e == pytest.approx(busy_e + background)
+
+
+def test_energy_background_scales_with_depth():
+    """A 2× deeper model must carry ≥2× the background DRAM energy (the old
+    sum-one-execution-per-phase under-counted this by ~n_layers×)."""
+    w12 = _w("bert-base", 64)
+    w24 = dataclasses.replace(w12, n_layers=24)
+    e12 = simulate_2p5d_hi(w12, 36).energy_j
+    e24 = simulate_2p5d_hi(w24, 36).energy_j
+    assert e24 > 1.8 * e12
+
+
+# ---------------------------------------------------------------------------
+# Plane-A → Plane-B bridge
+# ---------------------------------------------------------------------------
+
+def _fake_stats():
+    return {"finished": 4, "prompt_lens": [8, 8, 16, 24],
+            "gen_lens": [4, 4, 8, 8], "prefill_chunk": 32, "max_batch": 4}
+
+
+def test_mix_from_stats_groups_episodes():
+    mix = mix_from_stats(_fake_stats())
+    assert mix.requests == 4
+    assert mix.prefill_chunk == 32 and mix.max_batch == 4
+    assert Episode(8, 4, 2) in mix.episodes
+    assert mix.prefill_tokens == 8 + 8 + 16 + 24
+    assert mix.decode_tokens == 3 + 3 + 7 + 7
+    with pytest.raises(ValueError):
+        mix_from_stats({"finished": 0})
+
+
+def test_cosim_mix_reports_all_archs():
+    mix = mix_from_stats(_fake_stats())
+    rec = cosim_mix("qwen2.5-3b", mix, 36)
+    assert set(rec) == {"2.5D-HI", "HAIMA_chiplet", "TransPIM_chiplet"}
+    for row in rec.values():
+        assert row["ttft_s"] > 0 and row["tokens_per_s"] > 0
+        assert 0.0 < row["decode_traffic_frac"] < 1.0
+
+
+def test_generation_objective_is_finite_and_decode_weighted():
+    mix = EpisodeMix([Episode(64, 32, 2)])
+    objective, mesh_ev, phases = generation_objective("qwen2.5-3b", mix, 36)
+    assert np.isfinite(mesh_ev.mu) and mesh_ev.mu > 0
+    mu, sigma = objective(initial_placement(36))
+    assert np.isfinite(mu) and np.isfinite(sigma)
+    # decode phases must dominate the repeat-weighted traffic
+    dec = sum(total_traffic_bytes([p]) for p in phases
+              if p.name.endswith("_dec"))
+    total = sum(total_traffic_bytes([p]) for p in phases)
+    assert dec / total > 0.5
+
+
+def test_generation_phases_scale_with_gen_len():
+    one = generation_phases("qwen2.5-3b", EpisodeMix([Episode(64, 8, 1)]))
+    two = generation_phases("qwen2.5-3b", EpisodeMix([Episode(64, 64, 1)]))
+    assert total_traffic_bytes(two) > total_traffic_bytes(one)
+
+
+@pytest.mark.parametrize("gen_len,samples", [(11, 4), (8, 4), (64, 3)])
+def test_generation_phases_partition_decode_steps_exactly(gen_len, samples):
+    """The sampled decode positions must represent exactly gen_len-1 steps
+    (rounding must not over/under-weight decode in the MOO objective)."""
+    w = _w("qwen2.5-3b", 64)
+    mix = EpisodeMix([Episode(64, gen_len, 3)])
+    phases = generation_phases("qwen2.5-3b", mix, samples=samples)
+    per_layer = w.n_dec_layers * 3                  # repeat × episode count
+    kqv_repeats = sum(p.repeat for p in phases if p.name == "kqv_dec")
+    assert kqv_repeats == (gen_len - 1) * per_layer
+
+
+def test_engine_stats_feed_the_bridge():
+    """End-to-end: a real (tiny) engine drain produces stats the cosim can
+    consume."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    import numpy as np_
+
+    from repro.config import reduce_config
+    from repro.core.cosim import cosim_from_engine
+    from repro.models import transformer as T
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    cfg = reduce_config(get_config("qwen2.5-3b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(0), param_dtype=jnp.bfloat16)
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=2, kv_len=32, max_new_tokens=4))
+    rng = np_.random.default_rng(0)
+    for plen in (5, 9):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=plen))
+    eng.run_until_drained()
+    st = eng.stats()
+    assert st["prompt_lens"] == [5, 9] or sorted(st["prompt_lens"]) == [5, 9]
+    rec = cosim_from_engine(eng, cfg=get_config("qwen2.5-3b"), n_chiplets=36)
+    assert rec["mix"]["requests"] == 2
+    assert rec["archs"]["2.5D-HI"]["ttft_s"] > 0
