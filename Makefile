@@ -1,10 +1,13 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test verify bench-serving bench-cosim bench-smoke report
+.PHONY: test test-slow verify bench-serving bench-cosim bench-smoke report
 
-test:               ## tier-1 test suite
+test:               ## tier-1 test suite (everything, slow included)
 	$(PY) -m pytest -x -q
+
+test-slow:          ## only the slow-marked tests (CI runs these non-blocking)
+	$(PY) -m pytest -q -m slow
 
 bench-serving:      ## full serving decode+prefill benchmark -> experiments/BENCH_serving.json
 	$(PY) -m benchmarks.perf_serving
@@ -16,8 +19,9 @@ bench-smoke:        ## tiny-config serving+cosim benchmarks; assert the JSON rep
 	$(PY) -m benchmarks.perf_serving --smoke
 	$(PY) -m benchmarks.perf_cosim --smoke
 
-verify:             ## CI gate: tier-1 tests + bench smokes (schema-checked)
-	$(PY) -m pytest -x -q
+# slow-marked tests run in their own non-blocking CI job (test-slow)
+verify:             ## CI gate: fast tests + bench smokes (schema-checked)
+	$(PY) -m pytest -x -q -m "not slow"
 	$(MAKE) bench-smoke
 
 report:             ## render benchmark/dry-run tables

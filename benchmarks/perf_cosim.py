@@ -1,20 +1,28 @@
 """Decode-aware co-simulation benchmark: serving-latency evaluation of the
-chiplet architectures over the model zoo.
+chiplet architectures over the model zoo, under continuous batching.
 
 For each model the full generation episode (prompt prefill + KV-cache
-write-back + autoregressive decode) runs through ``simulate_generation``
-on 2.5D-HI, HAIMA_chiplet and TransPIM_chiplet, reporting TTFT, per-token
-decode latency, steady-state decode tok/s, energy per generated token and
-the prefill-vs-decode traffic split (decode dominates: weights re-stream
-per token and the KV cache is read at every step).
+write-back + batched autoregressive decode) runs through
+``simulate_generation`` on 2.5D-HI, HAIMA_chiplet and TransPIM_chiplet,
+reporting TTFT, batched decode-step latency, decode tok/s over the batch,
+energy per generated token and the prefill-vs-decode traffic split
+(decode dominates: the KV cache is read at every step; batching amortises
+the per-step weight streams, so each model also records its batched
+decode-throughput uplift over a single stream).
 
-Two optional sections (full run only):
+Two further sections:
 
-- **bridge** — a real ``ServingEngine`` drain on a reduced config; its
-  measured episode mix (``stats()`` → ``core.cosim.mix_from_stats``) is
-  projected onto the full-size model and replayed through Plane B;
-- **noi** — MOO-STAGE NoI design search over the *generation* traffic
-  (``core.cosim.generation_objective``), vs the placement-unaware mesh.
+- **bridge** (full run only) — a real ``ServingEngine`` drain with a deep
+  queue on a reduced config; its measured episode mix + active-slot
+  histogram (``stats()`` → ``core.cosim.mix_from_stats``) is projected
+  onto the full-size model and replayed through Plane B at the measured
+  slot-pool occupancy, next to the single-stream replay;
+- **noi_sweep** — decode-aware MOO-STAGE NoI design search
+  (``core.cosim.generation_objective``: batched decode traffic +
+  chunk-interleaved prefill) across system sizes × zoo models, emitting
+  the Pareto front per cell and comparing it against the design the same
+  search budget finds under *single-pass* traffic (the pre-generation
+  objective), both evaluated under the generation traffic.
 
     PYTHONPATH=src python -m benchmarks.perf_cosim [--smoke]
 
@@ -37,15 +45,21 @@ ARCHS = ("2.5D-HI", "HAIMA_chiplet", "TransPIM_chiplet")
 ZOO = ("llama2-7b", "gpt-j", "gemma2-9b", "qwen2.5-3b",
        "bart-large", "whisper-large-v3")
 
+SWEEP_SIZES = (36, 64, 100)
+
 _ARCH_KEYS = {"ttft_ms", "decode_step_ms", "decode_tok_s", "tokens_per_s",
               "energy_per_token_mj", "prefill_gb", "decode_gb",
-              "decode_traffic_frac"}
+              "decode_traffic_frac", "batch", "batch_uplift"}
+
+_SWEEP_KEYS = {"model", "chiplets", "front", "best_mu_norm",
+               "best_sigma_norm", "single_pass_mu_norm",
+               "single_pass_sigma_norm", "gain_mu", "same_design", "n_evals"}
 
 
 def check_schema(rec: dict) -> None:
     """Assert the BENCH_cosim.json record shape (CI bit-rot gate)."""
     for key in ("bench", "smoke", "chiplets", "prompt_len", "gen_len",
-                "models"):
+                "batch", "models", "noi_sweep"):
         assert key in rec, f"missing top-level key {key!r}"
     assert len(rec["models"]) >= 4 or rec["smoke"], "zoo must cover ≥4 models"
     saw_gqa = saw_encdec = False
@@ -57,9 +71,19 @@ def check_schema(rec: dict) -> None:
             assert not missing, f"{name}/{arch} missing {missing}"
     if not rec["smoke"]:
         assert saw_gqa and saw_encdec, "zoo must include GQA and enc-dec"
+    cells = rec["noi_sweep"]["cells"]
+    for cell in cells:
+        missing = _SWEEP_KEYS - set(cell)
+        assert not missing, f"noi_sweep cell missing {missing}"
+        assert cell["front"], f"empty Pareto front for {cell['model']}"
+    if not rec["smoke"]:
+        sizes = {c["chiplets"] for c in cells}
+        models = {c["model"] for c in cells}
+        assert len(sizes) >= 3, f"sweep must cover >=3 system sizes: {sizes}"
+        assert len(models) >= 6, f"sweep must cover >=6 models: {models}"
 
 
-def _row(g) -> dict:
+def _row(g, g1) -> dict:
     return {
         "ttft_ms": g.ttft_s * 1e3,
         "decode_step_ms": g.decode_step_s * 1e3,
@@ -70,10 +94,14 @@ def _row(g) -> dict:
         "decode_gb": g.decode_bytes / 2**30,
         "decode_traffic_frac": g.decode_bytes
                                / max(g.prefill_bytes + g.decode_bytes, 1e-30),
+        "batch": g.batch,
+        # batched decode throughput over the same episode single-streamed
+        "batch_uplift": g.decode_tok_s / max(g1.decode_tok_s, 1e-30),
     }
 
 
-def run_zoo(models, chiplets: int, prompt_len: int, gen_len: int) -> dict:
+def run_zoo(models, chiplets: int, prompt_len: int, gen_len: int,
+            batch: int) -> dict:
     from repro.config import get_config
     from repro.core.simulator import simulate_generation
     from repro.core.traffic import Workload
@@ -82,9 +110,13 @@ def run_zoo(models, chiplets: int, prompt_len: int, gen_len: int) -> dict:
     for name in models:
         cfg = get_config(name)
         w = Workload.from_config(cfg, seq_len=prompt_len)
-        archs = {a: _row(simulate_generation(w, chiplets, prompt_len, gen_len,
-                                             arch=a))
-                 for a in ARCHS}
+        archs = {}
+        for a in ARCHS:
+            g = simulate_generation(w, chiplets, prompt_len, gen_len,
+                                    arch=a, batch=batch)
+            g1 = g if batch == 1 else simulate_generation(
+                w, chiplets, prompt_len, gen_len, arch=a)
+            archs[a] = _row(g, g1)
         hi = archs["2.5D-HI"]
         base_ttft = min(archs[a]["ttft_ms"] for a in ARCHS[1:])
         base_step = min(archs[a]["decode_step_ms"] for a in ARCHS[1:])
@@ -102,14 +134,16 @@ def run_zoo(models, chiplets: int, prompt_len: int, gen_len: int) -> dict:
 
 
 def run_bridge(arch: str, chiplets: int) -> dict:
-    """Measured-engine bridge: drain a small mixed workload on the reduced
-    config, project the measured episode mix onto the full model."""
+    """Measured-engine bridge: drain a deep queue (continuous batching
+    keeps the slot pool busy) on the reduced config, project the measured
+    episode mix + active-slot histogram onto the full model, and replay it
+    both at the measured occupancy and single-streamed."""
     import jax
     import jax.numpy as jnp
     import numpy as np
 
     from repro.config import get_config, reduce_config
-    from repro.core.cosim import cosim_from_engine
+    from repro.core.cosim import cosim_from_engine, cosim_mix, mix_from_stats
     from repro.models import transformer as T
     from repro.serving.engine import EngineConfig, ServingEngine
 
@@ -118,45 +152,91 @@ def run_bridge(arch: str, chiplets: int) -> dict:
     eng = ServingEngine(cfg, params, EngineConfig(
         max_batch=4, kv_len=64, max_new_tokens=8, prefill_chunk=32))
     rng = np.random.default_rng(0)
-    for plen in (6, 10, 14, 10, 22, 6):
+    # deep queue: 3× the slot pool, so admission back-fills freed slots and
+    # the active-slot histogram reflects real continuous batching
+    for plen in (6, 10, 14, 10, 22, 6, 18, 10, 6, 14, 10, 22):
         eng.submit(rng.integers(0, cfg.vocab_size, size=plen))
     eng.run_until_drained()
-    rec = cosim_from_engine(eng, cfg=get_config(arch), n_chiplets=chiplets)
+    full = get_config(arch)
+    rec = cosim_from_engine(eng, cfg=full, n_chiplets=chiplets)
+    rec["archs_batch1"] = cosim_mix(full, mix_from_stats(eng.stats()),
+                                    chiplets, batch=1)
     rec["arch"] = arch
     rec["backend"] = jax.default_backend()
     return rec
 
 
-def run_noi(arch: str, chiplets: int, prompt_len: int, gen_len: int,
-            requests: int, seed: int = 0) -> dict:
-    """Decode-aware NoI search: does a placement optimised under the
-    generation traffic beat the placement-unaware mesh?"""
+def run_noi_sweep(models, sizes, prompt_len: int, gen_len: int, *,
+                  requests: int = 4, batch: int = 8, iterations: int = 3,
+                  ls_steps: int = 12, seed: int = 0) -> dict:
+    """Decode-aware NoI Pareto sweep: for every system size × zoo model,
+    MOO-STAGE under the *generation* traffic (batched decode +
+    chunk-interleaved prefill) vs the design the same search budget finds
+    under *single-pass* traffic — both scored under the generation
+    objective, normalised to the placement-unaware mesh."""
     import numpy as np
 
+    from repro.config import get_config
     from repro.core.cosim import (Episode, EpisodeMix, generation_objective,
-                                  optimize_generation_noi)
-    from repro.core.placement import initial_placement
+                                  seeded_noi_search)
+    from repro.core.noi import evaluate_noi, mesh_baseline_eval
+    from repro.core.traffic import Workload, transformer_phases
 
-    mix = EpisodeMix([Episode(prompt_len, gen_len, requests)])
-    res, mesh_ev = optimize_generation_noi(arch, mix, chiplets,
-                                           iterations=2, ls_steps=10,
-                                           seed=seed)
-    objective, _, _ = generation_objective(arch, mix, chiplets,
-                                           mesh_ev=mesh_ev)
-    front = np.asarray(res.archive.objs)
-    # report one real design from the front (the min-μ point), not the
-    # per-column minima of two different placements
-    best = front[int(np.argmin(front[:, 0]))]
-    seed_obj = objective(initial_placement(chiplets))
-    return {
-        "arch": arch, "chiplets": chiplets,
-        "n_evals": res.n_evals,
-        "pareto_points": len(res.archive.objs),
-        "best_mu_norm": float(best[0]),
-        "best_sigma_norm": float(best[1]),
-        "seed_mu_norm": float(seed_obj[0]),
-        "seed_sigma_norm": float(seed_obj[1]),
-    }
+    chunk = max(prompt_len // 4, 1)
+    cells = []
+    for chips in sizes:
+        for name in models:
+            mix = EpisodeMix([Episode(prompt_len, gen_len, requests)],
+                             prefill_chunk=chunk, max_batch=batch,
+                             active_hist={batch: 1},
+                             max_stall_tokens=chunk)
+            # one objective instance searches AND scores the control, so
+            # both sides are guaranteed to see the same traffic model
+            gen_obj, _, _ = generation_objective(name, mix, chips)
+            res = seeded_noi_search(gen_obj, chips, iterations=iterations,
+                                    ls_steps=ls_steps, seed=seed)
+            objs = np.asarray(res.archive.objs)
+            best_idx = int(np.argmin(objs[:, 0]))
+            best = res.archive.objs[best_idx]
+            best_design = res.archive.designs[best_idx]
+
+            # single-pass-optimised design: same search budget, but the
+            # objective only sees one fixed-length forward pass (the
+            # pre-generation traffic model) — then score it under the
+            # generation traffic
+            w = Workload.from_config(get_config(name), seq_len=prompt_len)
+            sp_phases = transformer_phases(w)
+            sp_mesh = mesh_baseline_eval(chips, sp_phases)
+
+            def sp_objective(p):
+                ev = evaluate_noi(p, sp_phases)
+                return (ev.mu / sp_mesh.mu, ev.sigma / sp_mesh.sigma)
+
+            sp_res = seeded_noi_search(sp_objective, chips,
+                                       iterations=iterations,
+                                       ls_steps=ls_steps, seed=seed)
+            sp_objs = np.asarray(sp_res.archive.objs)
+            sp_design = sp_res.archive.designs[int(np.argmin(sp_objs[:, 0]))]
+            sp_under_gen = gen_obj(sp_design)
+
+            cells.append({
+                "model": name, "chiplets": chips,
+                "front": sorted([float(m), float(s)]
+                                for m, s in res.archive.objs),
+                "best_mu_norm": float(best[0]),
+                "best_sigma_norm": float(best[1]),
+                "single_pass_mu_norm": float(sp_under_gen[0]),
+                "single_pass_sigma_norm": float(sp_under_gen[1]),
+                "gain_mu": float(sp_under_gen[0] / max(best[0], 1e-30)),
+                # both same-seed searches can converge to the very same
+                # placement — flagged so a 1.0× gain is readable as "the
+                # searches coincided", not "decode-awareness is free"
+                "same_design": sp_design == best_design,
+                "n_evals": res.n_evals + sp_res.n_evals,
+            })
+    return {"sizes": list(sizes), "models": list(models), "batch": batch,
+            "requests": requests, "iterations": iterations,
+            "ls_steps": ls_steps, "cells": cells}
 
 
 def main():
@@ -166,6 +246,9 @@ def main():
     ap.add_argument("--chiplets", type=int, default=64, choices=(36, 64, 100))
     ap.add_argument("--prompt-len", type=int, default=512)
     ap.add_argument("--gen-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="decode batch (slot-pool occupancy) for the zoo "
+                         "sweep and the NoI search traffic")
     ap.add_argument("--bridge-arch", default="qwen2.5-3b")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -175,8 +258,9 @@ def main():
             "BENCH_cosim_smoke.json" if args.smoke else "BENCH_cosim.json")
 
     models = ("gemma2-9b", "bart-large") if args.smoke else ZOO
+    sizes = (36,) if args.smoke else SWEEP_SIZES
     if args.smoke:
-        args.prompt_len, args.gen_len = 64, 16
+        args.prompt_len, args.gen_len, args.batch = 64, 16, 4
 
     from benchmarks.common import emit
 
@@ -186,13 +270,16 @@ def main():
         "chiplets": args.chiplets,
         "prompt_len": args.prompt_len,
         "gen_len": args.gen_len,
+        "batch": args.batch,
         "models": run_zoo(models, args.chiplets, args.prompt_len,
-                          args.gen_len),
+                          args.gen_len, args.batch),
+        "noi_sweep": run_noi_sweep(
+            models, sizes, args.prompt_len, args.gen_len, batch=args.batch,
+            iterations=1 if args.smoke else 3,
+            ls_steps=4 if args.smoke else 12),
     }
     if not args.smoke:
         rec["bridge"] = run_bridge(args.bridge_arch, args.chiplets)
-        rec["noi"] = run_noi("qwen2.5-3b", 36, args.prompt_len, args.gen_len,
-                             requests=4)
     check_schema(rec)
 
     rows = []
@@ -203,12 +290,19 @@ def main():
                          "ttft_ms": r["ttft_ms"],
                          "decode_ms_per_tok": r["decode_step_ms"],
                          "decode_tok_s": r["decode_tok_s"],
+                         "batch_uplift": r["batch_uplift"],
                          "energy_mj_per_tok": r["energy_per_token_mj"],
                          "decode_traffic_frac": r["decode_traffic_frac"]})
     emit(rows, f"cosim: generation episodes ({args.chiplets} chiplets, "
-               f"prompt={args.prompt_len}, gen={args.gen_len})")
-    if "noi" in rec:
-        emit([rec["noi"]], "cosim: decode-aware NoI search (vs 2-D mesh)")
+               f"prompt={args.prompt_len}, gen={args.gen_len}, "
+               f"batch={args.batch})")
+    emit([{"model": c["model"], "chiplets": c["chiplets"],
+           "pareto_pts": len(c["front"]),
+           "best_mu_norm": c["best_mu_norm"],
+           "single_pass_mu_norm": c["single_pass_mu_norm"],
+           "gain_mu": c["gain_mu"]}
+          for c in rec["noi_sweep"]["cells"]],
+         "cosim: decode-aware NoI Pareto sweep vs single-pass designs")
 
     os.makedirs(EXPERIMENTS, exist_ok=True)
     with open(args.out, "w") as f:

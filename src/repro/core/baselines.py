@@ -304,16 +304,19 @@ def _phase_noi_times_baseline(pl, phases):
 # ACUs — the per-kernel hand-off latencies the paper calls out (§2) are
 # paid per generated token, per layer.
 
-def _haima_decode_step(w: Workload, env: dict, kv_pos: int, calib: Calib):
-    phases = decode_step_phases(w, kv_pos)
-    score_spill = 2.0 * kv_pos * w.n_heads * BYTES   # 1×P score row, ×2 ways
+def _haima_decode_step(w: Workload, env: dict, kv_pos: int, calib: Calib,
+                       batch: int = 1):
+    phases = decode_step_phases(w, kv_pos, batch)
+    # per-slot 1×P score rows, ×2 ways; the host round-trip latency itself
+    # is paid once per step — the batch amortises it
+    score_spill = 2.0 * kv_pos * w.n_heads * BYTES * batch
     for p in phases:
         if p.name == "score_dec":
-            p.host_bytes = 2 * w.d_model * BYTES + score_spill
+            p.host_bytes = batch * 2 * w.d_model * BYTES + score_spill
             p.sm_mc_bytes *= 2.0          # contention paths (§4.2); the
             # cached K/V itself crosses the DRAM↔SRAM boundary via dram_bytes
         if p.name == "embed_dec":
-            p.sm_mc_bytes += w.d_model * BYTES
+            p.sm_mc_bytes += batch * w.d_model * BYTES
     noi_t, ev = _phase_noi_times_baseline(env["pl"], phases)
     noi_by = {p.name: t for p, t in zip(phases, noi_t)}
     by = {p.name: p for p in phases}
@@ -346,17 +349,20 @@ def _haima_decode_step(w: Workload, env: dict, kv_pos: int, calib: Calib):
     return step, energy, ev
 
 
-def _transpim_decode_step(w: Workload, env: dict, kv_pos: int, calib: Calib):
-    phases = decode_step_phases(w, kv_pos)
-    ring_bytes = w.d_model * BYTES                   # 1-token ring broadcast
-    acu_spill = 2.0 * kv_pos * w.n_heads * BYTES     # 1×P score row via ACUs
+def _transpim_decode_step(w: Workload, env: dict, kv_pos: int, calib: Calib,
+                          batch: int = 1):
+    phases = decode_step_phases(w, kv_pos, batch)
+    # per-slot token-state broadcast and score-row spill; the per-kernel
+    # ACU hand-off latency is paid once per step (batch-amortised)
+    ring_bytes = w.d_model * BYTES * batch           # 1 token per slot
+    acu_spill = 2.0 * kv_pos * w.n_heads * BYTES * batch  # 1×P rows via ACUs
     for p in phases:
         if p.name in ("kqv_dec", "score_dec"):
             p.sm_mc_bytes += ring_bytes
         if p.name == "score_dec":
             p.sm_mc_bytes += acu_spill
         if p.name == "embed_dec":
-            p.sm_mc_bytes += w.d_model * BYTES
+            p.sm_mc_bytes += batch * w.d_model * BYTES
     noi_t, ev = _phase_noi_times_baseline(env["pl"], phases)
     noi_by = {p.name: t for p, t in zip(phases, noi_t)}
     by = {p.name: p for p in phases}
@@ -389,7 +395,9 @@ def _transpim_decode_step(w: Workload, env: dict, kv_pos: int, calib: Calib):
 def _baseline_generation(arch: str, w: Workload, n_chiplets: int,
                          prompt_len: int, gen_len: int, *, calib: Calib,
                          samples: int, prefill_fn, env: dict,
-                         step_fn) -> GenResult:
+                         step_fn, batch: int = 1) -> GenResult:
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
     w = dataclasses.replace(w, seq_len=prompt_len)
     prefill = prefill_fn(w, n_chiplets, calib=calib)
     # intra-bank KV commit: bank-bandwidth time + DRAM access energy
@@ -401,11 +409,12 @@ def _baseline_generation(arch: str, w: Workload, n_chiplets: int,
     steps = max(gen_len - 1, 0)
     step_t, step_e, ev = [], [], None
     for pos in _decode_positions(prompt_len, gen_len, samples):
-        t, e, ev = step_fn(w, env, pos, calib)
+        t, e, ev = step_fn(w, env, pos, calib, batch)
         step_t.append(t)
         step_e.append(e)
     decode_step = sum(step_t) / len(step_t)
-    decode_energy = steps * sum(step_e) / len(step_e)
+    # per-episode shares of the batched step (see simulator.GenResult)
+    decode_energy = steps * sum(step_e) / len(step_e) / batch
     mid = _decode_positions(prompt_len, gen_len, 1)[0]
     return GenResult(
         arch=arch, workload=w.name, n_chiplets=n_chiplets,
@@ -415,29 +424,31 @@ def _baseline_generation(arch: str, w: Workload, n_chiplets: int,
         # the intra-bank KV commit never crosses the fabric, so prefill
         # traffic is the plain forward pass (unlike 2.5D-HI's kv_write)
         prefill_bytes=total_traffic_bytes(transformer_phases(w)),
-        decode_bytes=steps * total_traffic_bytes(decode_step_phases(w, mid)),
-        prefill=prefill, noi=ev)
+        decode_bytes=(steps
+                      * total_traffic_bytes(decode_step_phases(w, mid, batch))
+                      / batch),
+        prefill=prefill, noi=ev, batch=batch)
 
 
 def simulate_generation_haima(w: Workload, n_chiplets: int, prompt_len: int,
                               gen_len: int, *, calib: Calib = CALIB,
-                              samples: int = 4) -> GenResult:
+                              samples: int = 4, batch: int = 1) -> GenResult:
     env = _haima_env(n_chiplets, calib, chiplet=True)
     return _baseline_generation(
         "HAIMA_chiplet", w, n_chiplets, prompt_len, gen_len, calib=calib,
         samples=samples, prefill_fn=simulate_haima_chiplet, env=env,
-        step_fn=_haima_decode_step)
+        step_fn=_haima_decode_step, batch=batch)
 
 
 def simulate_generation_transpim(w: Workload, n_chiplets: int,
                                  prompt_len: int, gen_len: int, *,
                                  calib: Calib = CALIB,
-                                 samples: int = 4) -> GenResult:
+                                 samples: int = 4, batch: int = 1) -> GenResult:
     env = _transpim_env(n_chiplets, calib, chiplet=True)
     return _baseline_generation(
         "TransPIM_chiplet", w, n_chiplets, prompt_len, gen_len, calib=calib,
         samples=samples, prefill_fn=simulate_transpim_chiplet, env=env,
-        step_fn=_transpim_decode_step)
+        step_fn=_transpim_decode_step, batch=batch)
 
 
 # ---------------------------------------------------------------------------

@@ -6,17 +6,23 @@ chiplet architectures.  This module closes the loop:
 
 1. **measure** — ``mix_from_stats`` turns ``ServingEngine.stats()`` into a
    :class:`EpisodeMix`: the batch mix of (prompt_len, gen_len) episodes the
-   engine actually served, plus its chunked-prefill schedule;
+   engine actually served, plus its chunked-prefill schedule, its
+   measured per-step active-slot histogram and its decode-stall bound;
 2. **replay** — ``cosim_mix`` replays that mix through
    ``simulate_generation`` for every architecture, on the *full* model
    config (the engine typically serves a ``reduce_config`` shrink of it),
-   reporting TTFT, decode tok/s and energy/token per architecture;
+   with decode batched at the measured slot-pool occupancy
+   (``EpisodeMix.effective_batch``), reporting TTFT, decode tok/s and
+   energy/token per architecture — directly comparable to the engine's
+   continuous-batching tok/s, not a single stream;
 3. **design** — ``generation_phases`` expands the mix into a decode-heavy
    phase list whose repeats weight prefill vs decode by their measured
-   token counts, and ``generation_objective`` feeds it to the existing
-   MOO solvers (`core/moo`) — so NoI placement/link search optimises for
-   the traffic a *generation* workload actually produces (KV-cache reads
-   dominating), not a single fixed-length forward pass.
+   token counts — decode batch-amortised, prefill split at the measured
+   chunked-prefill interleave granularity — and ``generation_objective``
+   feeds it to the existing MOO solvers (`core/moo`) — so NoI
+   placement/link search optimises for the traffic a *generation*
+   workload actually produces (KV-cache reads dominating), not a single
+   fixed-length forward pass.
 
 The single-pass calibration contract is untouched: everything here is
 built from ``prefill_phases`` / ``decode_step_phases`` on top of the
@@ -51,6 +57,10 @@ class EpisodeMix:
     episodes: list[Episode]
     prefill_chunk: int = 0        # engine chunked-prefill budget (tokens)
     max_batch: int = 0            # engine slot-pool size
+    # {n_active_slots: decode iterations at that occupancy} — the measured
+    # slot-pool utilisation (ServingEngine.stats()["active_slots_hist"])
+    active_hist: dict = dataclasses.field(default_factory=dict)
+    max_stall_tokens: int = 0     # max prefill tokens between decode steps
 
     @property
     def requests(self) -> int:
@@ -64,26 +74,59 @@ class EpisodeMix:
     def decode_tokens(self) -> int:
         return sum(max(e.gen_len - 1, 0) * e.count for e in self.episodes)
 
+    @property
+    def mean_active_slots(self) -> float:
+        """Decode-iteration-weighted mean slot-pool occupancy (0 when no
+        histogram was recorded).  Zero-active iterations (a chunked decode
+        scan outliving its slots) count toward the denominator — the mean
+        is exactly the tokens the engine got per decode iteration paid."""
+        total = sum(self.active_hist.values())
+        if not total:
+            return 0.0
+        return sum(int(k) * c for k, c in self.active_hist.items()) / total
+
+    @property
+    def effective_batch(self) -> int:
+        """The decode batch the Plane-B replay should run at: the measured
+        mean occupancy when a histogram was recorded, else the slot-pool
+        size (an upper bound), else single-stream."""
+        m = self.mean_active_slots
+        if m > 0:
+            return max(1, round(m))
+        return max(1, self.max_batch)
+
 
 def mix_from_stats(stats: dict) -> EpisodeMix:
     """Build the episode mix from ``ServingEngine.stats()``.
 
     Requires the per-request ``prompt_lens``/``gen_lens`` lists the engine
-    records for finished requests; identical (prompt, gen) pairs collapse
-    into one weighted episode."""
+    records for finished requests and a positive ``max_batch`` slot-pool
+    size; identical (prompt, gen) pairs collapse into one weighted
+    episode."""
     if not stats.get("finished"):
         raise ValueError("engine stats carry no finished requests")
     plens = stats.get("prompt_lens")
     glens = stats.get("gen_lens")
     if not plens or not glens or len(plens) != len(glens):
         raise ValueError("stats missing per-request prompt_lens/gen_lens")
+    max_batch = int(stats.get("max_batch", 0))
+    if max_batch <= 0:
+        # a 0-slot pool cannot have served the finished requests — the
+        # stats are inconsistent/truncated, not a degenerate-but-valid mix
+        raise ValueError(
+            "stats carry no slot-pool size (max_batch <= 0); the engine "
+            "that served this mix must report its pool via stats()")
     counts: dict[tuple[int, int], int] = {}
     for p, g in zip(plens, glens):
         counts[(int(p), int(g))] = counts.get((int(p), int(g)), 0) + 1
     episodes = [Episode(p, g, c) for (p, g), c in sorted(counts.items())]
+    hist = {int(k): int(v)
+            for k, v in (stats.get("active_slots_hist") or {}).items()}
     return EpisodeMix(episodes,
                       prefill_chunk=int(stats.get("prefill_chunk", 0)),
-                      max_batch=int(stats.get("max_batch", 0)))
+                      max_batch=max_batch,
+                      active_hist=hist,
+                      max_stall_tokens=int(stats.get("max_stall_tokens", 0)))
 
 
 def _resolve(cfg) -> ModelConfig:
@@ -101,13 +144,23 @@ def workload_for(cfg, episode: Episode) -> Workload:
 
 def cosim_mix(cfg, mix: EpisodeMix, n_chiplets: int,
               archs: Sequence[str] = ARCHS, *,
-              calib: Calib = CALIB) -> dict:
+              calib: Calib = CALIB, batch: Optional[int] = None) -> dict:
     """Replay a measured episode mix through every architecture.
 
+    ``batch`` is the decode batch each episode's steps run at; it defaults
+    to the mix's measured ``effective_batch`` (mean active slots from the
+    engine's histogram, falling back to the slot-pool size), so the
+    replayed Plane-B throughput models the continuous-batching regime the
+    engine actually drove — pass ``batch=1`` for the single-stream view.
+
     Returns ``{arch: {ttft_s, decode_step_s, tokens_per_s,
-    energy_per_token_j, prefill_bytes, decode_bytes, decode_traffic_frac}}``
-    with request-count-weighted means (throughput weighted by tokens)."""
+    energy_per_token_j, prefill_bytes, decode_bytes, decode_traffic_frac,
+    batch}}`` with request-count-weighted means; ``tokens_per_s`` counts
+    all ``batch`` concurrent streams (episodes overlap in the pool, so the
+    wall-clock per episode shrinks by the batch)."""
     cfg = _resolve(cfg)
+    if batch is None:
+        batch = mix.effective_batch
     out: dict[str, dict] = {}
     for arch in archs:
         ttft = step = energy = toks = lat = pre_b = dec_b = 0.0
@@ -115,7 +168,7 @@ def cosim_mix(cfg, mix: EpisodeMix, n_chiplets: int,
         for ep in mix.episodes:
             w = workload_for(cfg, ep)
             g = simulate_generation(w, n_chiplets, ep.prompt_len, ep.gen_len,
-                                    arch=arch, calib=calib)
+                                    arch=arch, calib=calib, batch=batch)
             n += ep.count
             ttft += g.ttft_s * ep.count
             step += g.decode_step_s * ep.count
@@ -127,23 +180,26 @@ def cosim_mix(cfg, mix: EpisodeMix, n_chiplets: int,
         out[arch] = {
             "ttft_s": ttft / n,
             "decode_step_s": step / n,
-            "tokens_per_s": toks / max(lat, 1e-30),
+            "tokens_per_s": toks * batch / max(lat, 1e-30),
             "energy_per_token_j": energy / max(toks, 1),
             "prefill_bytes": pre_b,
             "decode_bytes": dec_b,
             "decode_traffic_frac": dec_b / max(pre_b + dec_b, 1e-30),
+            "batch": batch,
         }
     return out
 
 
 def cosim_from_engine(engine, cfg=None, n_chiplets: int = 64,
                       archs: Sequence[str] = ARCHS, *,
-                      calib: Calib = CALIB) -> dict:
+                      calib: Calib = CALIB,
+                      batch: Optional[int] = None) -> dict:
     """End-to-end bridge: measured engine run → Plane-B evaluation.
 
     ``cfg`` defaults to the engine's own (usually reduced) config; pass the
     full-size config to project the measured schedule onto the real model
-    dims."""
+    dims.  Decode runs batched at the engine's measured slot-pool
+    occupancy unless ``batch`` overrides it."""
     mix = mix_from_stats(engine.stats())
     cfg = _resolve(cfg) if cfg is not None else engine.cfg
     return {"mix": {"requests": mix.requests,
@@ -151,30 +207,73 @@ def cosim_from_engine(engine, cfg=None, n_chiplets: int = 64,
                     "decode_tokens": mix.decode_tokens,
                     "prefill_chunk": mix.prefill_chunk,
                     "max_batch": mix.max_batch,
+                    "max_stall_tokens": mix.max_stall_tokens,
+                    "mean_active_slots": mix.mean_active_slots,
+                    "effective_batch": mix.effective_batch,
+                    "active_slots_hist": dict(mix.active_hist),
                     "episodes": [dataclasses.asdict(e) for e in mix.episodes]},
-            "archs": cosim_mix(cfg, mix, n_chiplets, archs, calib=calib)}
+            "archs": cosim_mix(cfg, mix, n_chiplets, archs, calib=calib,
+                               batch=batch)}
 
 
 # ---------------------------------------------------------------------------
 # design: generation traffic → MOO/placement objective
 # ---------------------------------------------------------------------------
 
-def generation_phases(cfg, mix: EpisodeMix, *, samples: int = 1) -> list[Phase]:
+def _scale_phase(p: Phase, scale: float, repeat: int) -> Phase:
+    """Copy of ``p`` with every compute/traffic term scaled and the repeat
+    replaced (``scale=1.0`` is exact — multiplying by 1.0 changes no
+    float).  Iterates the dataclass fields so a term added to ``Phase``
+    later is scaled too instead of silently reset."""
+    scaled = {f.name: getattr(p, f.name) * scale
+              for f in dataclasses.fields(p)
+              if f.name not in ("name", "repeat")}
+    return dataclasses.replace(p, repeat=repeat, **scaled)
+
+
+def _interleave_chunks(mix: EpisodeMix, prompt_len: int) -> int:
+    """Chunked-prefill interleave factor for one episode: how many
+    bounded bursts its prompt ingest is split into.
+
+    The engine's chunked-prefill scheduler never stalls decode for more
+    than its measured ``max_stall_tokens`` burst (falling back to the
+    configured ``prefill_chunk`` budget), so a ``prompt_len`` ingest
+    reaches the fabric as ``ceil(prompt_len / bound)`` chunk executions
+    interleaved with decode steps — same total bytes, chunk-sized
+    per-execution link loads.  The NoI time-average (eqs 14-15) then
+    weights prefill at the granularity the interconnect actually sees."""
+    bound = mix.max_stall_tokens or mix.prefill_chunk
+    if bound <= 0 or prompt_len <= bound:
+        return 1
+    return -(-prompt_len // bound)
+
+
+def generation_phases(cfg, mix: EpisodeMix, *, samples: int = 1,
+                      batch: Optional[int] = None) -> list[Phase]:
     """Phase list of a whole generation episode mix, for NoI evaluation.
 
-    Prefill phases keep their per-layer repeats; decode phases (evaluated
-    at ``samples`` KV positions per episode) get their repeats scaled by
-    the number of decode steps they represent, so ``evaluate_noi``'s
-    repeat-weighted time-average (eqs 14-15) sees prefill and decode in
-    their measured proportions — decode-heavy mixes dominate the objective
-    exactly as they dominate the real fabric."""
+    Prefill phases keep their per-layer repeats, split into the mix's
+    chunked-prefill interleave granularity (``_interleave_chunks``: the
+    measured stall bound caps each burst, repeats scale up so total bytes
+    are unchanged).  Decode phases (evaluated at ``samples`` KV positions
+    per episode) get their repeats scaled by the number of decode steps
+    they represent and run at the mix's measured decode batch: each
+    timestamp is one token's 1/batch share of a batched step, so the
+    weight streams are batch-amortised exactly as the engine amortises
+    them.  ``evaluate_noi``'s repeat-weighted time-average (eqs 14-15)
+    then sees prefill and decode in their measured proportions —
+    decode-heavy mixes dominate the objective exactly as they dominate
+    the real fabric."""
     cfg = _resolve(cfg)
+    if batch is None:
+        batch = mix.effective_batch
     phases: list[Phase] = []
     for ep in mix.episodes:
         w = workload_for(cfg, ep)
+        n_chunks = _interleave_chunks(mix, ep.prompt_len)
         for p in prefill_phases(w):
-            q = dataclasses.replace(p, repeat=p.repeat * ep.count)
-            phases.append(q)
+            phases.append(_scale_phase(p, 1.0 / n_chunks,
+                                       p.repeat * n_chunks * ep.count))
         steps = max(ep.gen_len - 1, 0)
         if not steps:
             continue
@@ -184,21 +283,22 @@ def generation_phases(cfg, mix: EpisodeMix, *, samples: int = 1) -> list[Phase]:
         base, rem = divmod(steps, len(positions))
         for i, pos in enumerate(positions):
             per_pos = base + (1 if i < rem else 0)
-            for p in decode_step_phases(w, pos):
-                q = dataclasses.replace(
-                    p, repeat=p.repeat * per_pos * ep.count)
-                phases.append(q)
+            for p in decode_step_phases(w, pos, batch):
+                phases.append(_scale_phase(p, 1.0 / batch,
+                                           p.repeat * per_pos * ep.count))
     return phases
 
 
 def generation_objective(cfg, mix: EpisodeMix, n_chiplets: int,
                          *, samples: int = 1,
                          mesh_ev: Optional[NoIEval] = None,
+                         batch: Optional[int] = None,
                          ) -> tuple[Callable, NoIEval, list[Phase]]:
     """(objective_fn, mesh_ev, phases): the paper's 2-objective NoI metric
     (μ, σ normalised to the placement-unaware 2-D mesh) over the measured
-    generation traffic.  Drop-in for `core/moo` solvers."""
-    phases = generation_phases(cfg, mix, samples=samples)
+    generation traffic — batched decode, chunk-interleaved prefill.
+    Drop-in for `core/moo` solvers."""
+    phases = generation_phases(cfg, mix, samples=samples, batch=batch)
     mesh_ev = mesh_ev or mesh_baseline_eval(n_chiplets, phases)
 
     def objective(p):
@@ -208,22 +308,34 @@ def generation_objective(cfg, mix: EpisodeMix, n_chiplets: int,
     return objective, mesh_ev, phases
 
 
-def optimize_generation_noi(cfg, mix: EpisodeMix, n_chiplets: int, *,
-                            iterations: int = 3, ls_steps: int = 12,
-                            seed: int = 0, samples: int = 1):
-    """Decode-aware NoI design search: MOO-STAGE over the generation
-    traffic, seeded (like `examples/noi_design.py`) with a local search
-    from the dataflow-aware initial placement.  Returns
-    (MooStageResult, mesh_ev)."""
+def seeded_noi_search(objective: Callable, n_chiplets: int, *,
+                      iterations: int = 3, ls_steps: int = 12,
+                      seed: int = 0):
+    """MOO-STAGE over any (μ, σ) NoI objective, seeded (like
+    `examples/noi_design.py`) with a local search from the dataflow-aware
+    initial placement.  The one search recipe every NoI comparison runs,
+    so search budgets stay identical across objectives.  Returns the
+    MooStageResult."""
     import random
 
     from repro.core.moo import local_search, moo_stage
     from repro.core.placement import initial_placement
 
-    objective, mesh_ev, _ = generation_objective(cfg, mix, n_chiplets,
-                                                 samples=samples)
     res = moo_stage(n_chiplets, objective, (2.0, 2.0),
                     iterations=iterations, ls_steps=ls_steps, seed=seed)
     local_search(initial_placement(n_chiplets), objective, res.archive,
                  random.Random(seed), max_steps=ls_steps)
+    return res
+
+
+def optimize_generation_noi(cfg, mix: EpisodeMix, n_chiplets: int, *,
+                            iterations: int = 3, ls_steps: int = 12,
+                            seed: int = 0, samples: int = 1,
+                            batch: Optional[int] = None):
+    """Decode-aware NoI design search: `seeded_noi_search` over the
+    generation traffic.  Returns (MooStageResult, mesh_ev)."""
+    objective, mesh_ev, _ = generation_objective(cfg, mix, n_chiplets,
+                                                 samples=samples, batch=batch)
+    res = seeded_noi_search(objective, n_chiplets, iterations=iterations,
+                            ls_steps=ls_steps, seed=seed)
     return res, mesh_ev

@@ -99,7 +99,10 @@ def _energy(phases, times_by_phase, alloc, noi_ev, busy: dict) -> float:
     }
     for ph in phases:
         t = times_by_phase.get(ph.name, 0.0) * ph.repeat
-        for unit in busy.get(ph.name, ()):  # busy power
+        # sorted: busy sets are string sets, whose iteration order is
+        # hash-randomised per process — summing in a fixed order keeps the
+        # energy bit-identical across runs (the regression pins rely on it)
+        for unit in sorted(busy.get(ph.name, ())):  # busy power
             e += unit_power.get(unit, 0.0) * t
         e += (ph.dram_bytes * ph.repeat) * 8 * C.DRAM.energy_pj_per_bit * 1e-12
     e += alloc.get("DRAM", 0) * C.DRAM.idle_power_w * total_t  # DRAM background
@@ -195,29 +198,41 @@ class GenResult:
 
     The first token is sampled from the prefill logits (standard serving
     convention), so TTFT = prefill latency (+ KV-cache write-back) and the
-    remaining ``gen_len - 1`` tokens run the decode step."""
+    remaining ``gen_len - 1`` tokens run the decode step.
+
+    ``batch`` models the continuous-batching regime: ``batch`` concurrent
+    episodes of the same shape share every decode step (weights stream
+    once per step, KV reads sum over the slots).  ``decode_step_s`` is the
+    *batched* step latency; per-episode quantities (``latency_s``,
+    ``energy_j``, ``prefill_bytes``/``decode_bytes``) are one episode's
+    share, so they stay comparable across batch sizes, while
+    ``tokens_per_s``/``decode_tok_s`` report system throughput over all
+    ``batch`` streams."""
     arch: str
     workload: str
     n_chiplets: int
     prompt_len: int
     gen_len: int
     ttft_s: float
-    decode_step_s: float          # mean per-token decode latency
+    decode_step_s: float          # mean batched decode-step latency
     latency_s: float              # full episode wall time
-    energy_j: float               # full episode energy
+    energy_j: float               # per-episode energy (share of the batch)
     prefill_bytes: float          # fabric bytes injected during prefill
-    decode_bytes: float           # fabric bytes injected during decode
+    decode_bytes: float           # per-episode decode fabric bytes (share)
     prefill: Optional[SimResult] = None
     noi: Optional[NoIEval] = None  # decode-step NoI at the mid position
+    batch: int = 1                # concurrent episodes per decode step
 
     @property
     def tokens_per_s(self) -> float:
-        return self.gen_len / max(self.latency_s, 1e-30)
+        """System generation throughput: all ``batch`` streams together."""
+        return self.batch * self.gen_len / max(self.latency_s, 1e-30)
 
     @property
     def decode_tok_s(self) -> float:
-        """Steady-state decode throughput (ignoring TTFT)."""
-        return 1.0 / max(self.decode_step_s, 1e-30)
+        """Steady-state decode throughput (ignoring TTFT): the batched
+        step emits one token per active slot."""
+        return self.batch / max(self.decode_step_s, 1e-30)
 
     @property
     def energy_per_token_j(self) -> float:
@@ -244,13 +259,15 @@ _DECODE_BUSY = {"embed_dec": {"ReRAM"}, "kqv_dec": {"SM", "MC"},
 
 
 def _hi_decode_step(w: Workload, alloc: dict, placement: Placement,
-                    kv_pos: int, calib: Calib):
-    """(step_time_s, step_energy_j, NoIEval) of one 2.5D-HI decode step.
+                    kv_pos: int, calib: Calib, batch: int = 1):
+    """(step_time_s, step_energy_j, NoIEval) of one 2.5D-HI decode step
+    over ``batch`` active slots.
 
     Same execution model as the single pass (SM attention fed by MC/DRAM,
     FF on the ReRAM macro, layer-l MHA over layer-(l-1) FF pipelining) at
-    N=1, with the KV-cache read bounding the score phase."""
-    phases = decode_step_phases(w, kv_pos)
+    N=1 per slot, with the KV-cache reads bounding the score phase; the
+    weight streams are shared across the batch."""
+    phases = decode_step_phases(w, kv_pos, batch)
     noi_t, ev = _phase_noi_times(placement, phases)
     noi_by = {p.name: t for p, t in zip(phases, noi_t)}
     by = {p.name: p for p in phases}
@@ -295,19 +312,25 @@ def _hi_decode_step(w: Workload, alloc: dict, placement: Placement,
 def simulate_generation(w: Workload, n_chiplets: int, prompt_len: int,
                         gen_len: int, *, arch: str = "2.5D-HI",
                         placement: Optional[Placement] = None,
-                        calib: Calib = CALIB, samples: int = 4) -> GenResult:
+                        calib: Calib = CALIB, samples: int = 4,
+                        batch: int = 1) -> GenResult:
     """Full generation episode on any of the three architectures.
 
     TTFT is the calibrated single-pass latency over the prompt plus the
     explicit KV-cache write-back; decode is evaluated at ``samples`` KV
     positions across the episode and averaged (costs are linear in
-    position)."""
+    position).  ``batch`` runs the decode steps in the continuous-batching
+    regime: ``batch`` concurrent same-shape episodes share every step
+    (weights stream once per step); ``batch=1`` reproduces the
+    single-stream episode bit-identically."""
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
     if arch != "2.5D-HI":
         from repro.core import baselines as B  # local import (module cycle)
         fn = {"HAIMA_chiplet": B.simulate_generation_haima,
               "TransPIM_chiplet": B.simulate_generation_transpim}[arch]
         return fn(w, n_chiplets, prompt_len, gen_len, calib=calib,
-                  samples=samples)
+                  samples=samples, batch=batch)
 
     w = dataclasses.replace(w, seq_len=prompt_len)
     alloc = _alloc(n_chiplets)
@@ -327,21 +350,25 @@ def simulate_generation(w: Workload, n_chiplets: int, prompt_len: int,
     steps = max(gen_len - 1, 0)
     step_t, step_e, ev = [], [], None
     for pos in _decode_positions(prompt_len, gen_len, samples):
-        t, e, ev = _hi_decode_step(w, alloc, placement, pos, calib)
+        t, e, ev = _hi_decode_step(w, alloc, placement, pos, calib, batch)
         step_t.append(t)
         step_e.append(e)
     decode_step = sum(step_t) / len(step_t)
-    decode_energy = steps * sum(step_e) / len(step_e)
+    # per-episode shares: the batched step's energy/traffic serve `batch`
+    # concurrent streams (x / 1 is exact, so batch=1 is bit-identical)
+    decode_energy = steps * sum(step_e) / len(step_e) / batch
 
     mid = _decode_positions(prompt_len, gen_len, 1)[0]
-    decode_bytes = steps * total_traffic_bytes(decode_step_phases(w, mid))
+    decode_bytes = (steps * total_traffic_bytes(decode_step_phases(w, mid,
+                                                                   batch))
+                    / batch)
     return GenResult(
         arch="2.5D-HI", workload=w.name, n_chiplets=n_chiplets,
         prompt_len=prompt_len, gen_len=gen_len, ttft_s=ttft,
         decode_step_s=decode_step, latency_s=ttft + steps * decode_step,
         energy_j=prefill.energy_j + kv_energy + decode_energy,
         prefill_bytes=total_traffic_bytes(pre_phases),
-        decode_bytes=decode_bytes, prefill=prefill, noi=ev)
+        decode_bytes=decode_bytes, prefill=prefill, noi=ev, batch=batch)
 
 
 # ---------------------------------------------------------------------------

@@ -28,11 +28,23 @@ module derives full *generation* episodes:
   ``kv_frac``), cross-attention over the frozen encoder KV (enc-dec), FF
   and lm_head per token.  Decode phases repeat over the *decoder* stack
   only (``n_dec_layers``).
+
+The decode step is **batched**: ``decode_step_phases(w, kv_pos, batch=B)``
+models one engine iteration serving ``B`` active KV slots.  Weight
+streaming (W_KQV, the attention output projection, the cross projection)
+is paid **once per step** — the continuous-batching engine amortises it
+across the batch — while everything per-slot (activations, KV-cache reads
+at each slot's own position, KV row commits, FF/lm_head work) sums over
+the active slots.  ``kv_pos`` may be a single position (every slot at the
+same depth) or a sequence of per-slot positions; KV-read traffic is linear
+in the *sum* of slot positions.  ``batch=1`` is bit-identical to the
+unbatched step.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import numbers
 
 from repro.config import ModelConfig
 
@@ -181,60 +193,96 @@ def prefill_phases(w: Workload) -> list[Phase]:
     )]
 
 
-def decode_step_phases(w: Workload, kv_pos: int) -> list[Phase]:
-    """One autoregressive decode step with ``kv_pos`` tokens already cached.
+def _decode_batch_positions(kv_pos, batch: int) -> list[int]:
+    """Normalise ``decode_step_phases``'s (kv_pos, batch) arguments into the
+    per-slot position list.  An int position replicates over the batch; a
+    sequence gives each slot its own depth (its length must match
+    ``batch`` unless batch is the default 1, which it then overrides)."""
+    if isinstance(kv_pos, numbers.Number):   # incl. numpy scalars
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        return [int(kv_pos)] * batch
+    positions = [int(p) for p in kv_pos]
+    if not positions:
+        raise ValueError("kv_pos sequence is empty")
+    if batch not in (1, len(positions)):
+        raise ValueError(f"batch={batch} != len(kv_pos)={len(positions)}")
+    return positions
 
-    N=1 everywhere: weights are re-streamed per token (the memory-bound
-    regime), the score phase reads the whole cached K/V (linear in
-    ``kv_pos``, GQA-aware), the fresh K/V row is written back, and enc-dec
-    stacks re-read the frozen cross-KV of the ``w.seq_len``-token source.
-    All per-layer phases repeat over the decoder stack only."""
+
+def decode_weight_stream_bytes(w: Workload) -> float:
+    """DRAM weight-streaming bytes of one decode *step* — the component
+    paid once per step regardless of batch (W_KQV + attention output
+    projection per decoder layer, + the cross output projection for
+    enc-dec stacks).  Everything else in the step scales per slot."""
+    D = w.d_model
+    per_layer = (1 + 2 * w.kv_frac) * D * D * BYTES + D * D * BYTES
+    if w.enc_dec:
+        per_layer += D * D * BYTES
+    return per_layer * w.n_dec_layers
+
+
+def decode_step_phases(w: Workload, kv_pos, batch: int = 1) -> list[Phase]:
+    """One autoregressive decode step over ``batch`` active KV slots.
+
+    N=1 per slot: weights are re-streamed per *step* (the memory-bound
+    regime; the batch amortises them), the score phase reads each slot's
+    whole cached K/V (linear in the sum of slot positions, GQA-aware),
+    each slot's fresh K/V row is written back, and enc-dec stacks re-read
+    the frozen cross-KV of the ``w.seq_len``-token source per slot.  All
+    per-layer phases repeat over the decoder stack only.
+
+    ``kv_pos`` is a single position (all slots at the same depth) or a
+    sequence of per-slot positions.  ``batch=1`` reproduces the unbatched
+    step bit-identically."""
+    positions = _decode_batch_positions(kv_pos, batch)
+    B, sum_pos = len(positions), sum(positions)
     D, F, k = w.d_model, w.d_ff, w.n_dec_layers
     kv_frac = w.kv_frac
-    kv_read = kv_cache_bytes_per_layer(w, kv_pos)
+    kv_read = kv_cache_bytes_per_layer(w, sum_pos)   # Σ per-slot cache reads
     kv_write = kv_cache_bytes_per_layer(w, 1)
-    w_kqv = (1 + 2 * kv_frac) * D * D * BYTES
+    w_kqv = (1 + 2 * kv_frac) * D * D * BYTES        # streamed once per step
 
     phases = [Phase(
-        "embed_dec",                      # 1-token embedding lookup
-        reram_flops=2.0 * D,
-        reram_pipe_bytes=D * BYTES,
-        mc_reram_bytes=D * BYTES,
+        "embed_dec",                      # per-slot 1-token embedding lookup
+        reram_flops=B * 2.0 * D,
+        reram_pipe_bytes=B * D * BYTES,
+        mc_reram_bytes=B * D * BYTES,
     )]
     phases.append(Phase(
-        "kqv_dec",                        # per-token projections + KV commit
-        sm_flops=2.0 * D * D * (1 + 2 * kv_frac),
-        dram_bytes=w_kqv + D * BYTES + kv_write,
-        sm_mc_bytes=D * (1 + 2 * kv_frac) * BYTES + kv_write,
+        "kqv_dec",                        # per-slot projections + KV commit
+        sm_flops=B * 2.0 * D * D * (1 + 2 * kv_frac),
+        dram_bytes=w_kqv + B * D * BYTES + B * kv_write,
+        sm_mc_bytes=B * D * (1 + 2 * kv_frac) * BYTES + B * kv_write,
         repeat=k,
     ))
     phases.append(Phase(
-        "score_dec",                      # q·Kᵀ, softmax, ·V over the cache
-        sm_flops=2.0 * kv_pos * D * 2 + 2.0 * D * D,
+        "score_dec",                      # q·Kᵀ, softmax, ·V over each cache
+        sm_flops=2.0 * sum_pos * D * 2 + B * 2.0 * D * D,
         dram_bytes=D * D * BYTES + kv_read,
-        sm_mc_bytes=2 * D * BYTES,
+        sm_mc_bytes=B * 2 * D * BYTES,
         repeat=k,
     ))
     if w.enc_dec:
         enc_kv = kv_cache_bytes_per_layer(w, w.seq_len)
         phases.append(Phase(
             "cross_dec",                  # attend over the frozen cross-KV
-            sm_flops=2.0 * w.seq_len * D * 2 + 2.0 * D * D,
-            dram_bytes=D * D * BYTES + enc_kv,
-            sm_mc_bytes=2 * D * BYTES,
+            sm_flops=B * (2.0 * w.seq_len * D * 2 + 2.0 * D * D),
+            dram_bytes=D * D * BYTES + B * enc_kv,
+            sm_mc_bytes=B * 2 * D * BYTES,
             repeat=k,
         ))
     phases.append(Phase(
-        "ff_dec",
-        reram_flops=2.0 * D * F * 2,
-        mc_reram_bytes=2 * D * BYTES,
-        reram_pipe_bytes=F * BYTES,
+        "ff_dec",                         # ReRAM-stationary: all per-slot
+        reram_flops=B * 2.0 * D * F * 2,
+        mc_reram_bytes=B * 2 * D * BYTES,
+        reram_pipe_bytes=B * F * BYTES,
         repeat=k,
     ))
     phases.append(Phase(
         "lm_head_dec",                    # every generated token pays the head
-        reram_flops=2.0 * D * w.vocab,
-        mc_reram_bytes=(D + w.vocab) * BYTES,
+        reram_flops=B * 2.0 * D * w.vocab,
+        mc_reram_bytes=B * (D + w.vocab) * BYTES,
     ))
     return phases
 

@@ -130,6 +130,10 @@ class ServingEngine:
         self.prefill_calls = 0
         self.max_stall_tokens = 0         # max prefill tokens between decodes
         self._stall_tokens = 0
+        # per-decode-iteration active-slot histogram {n_active: count} — the
+        # measured slot-pool utilisation the Plane-B co-simulation batches
+        # its decode steps with (repro.core.cosim.mix_from_stats)
+        self.active_slot_hist: collections.Counter = collections.Counter()
 
         # packed-stream / chunk budget (also the padding quantum)
         self._chunk = min(ecfg.prefill_chunk or min(128, S), S)
@@ -421,6 +425,10 @@ class ServingEngine:
         self._stall_tokens = 0
         now = time.time()
         for it in range(arr.shape[0]):            # decode_chunk iterations
+            # zero-active iterations (slots all finished mid-chunk) are real
+            # device work — recording them keeps Σhist == decode_steps and
+            # lets the occupancy mean discount the dead tail of a chunk
+            self.active_slot_hist[int((arr[it, 0] >= 0).sum())] += 1
             for i, req in enumerate(self.slot_req):
                 if req is None or i in self._prefilling or arr[it, 0, i] < 0:
                     continue
@@ -443,6 +451,7 @@ class ServingEngine:
         live = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not live:
             return 0
+        self.active_slot_hist[len(live)] += 1
         tokens = jnp.asarray(self._last_token)
         pos = jnp.asarray(self._slot_pos)
         logits, self.cache = self._jit_decode(self.params, self.cache,
@@ -757,4 +766,7 @@ class ServingEngine:
             "gen_lens": [len(r.output) for r in done],
             "prefill_chunk": self._chunk,
             "max_batch": self.ecfg.max_batch,
+            # {n_active_slots: decode iterations at that occupancy} — the
+            # measured continuous-batching utilisation of the slot pool
+            "active_slots_hist": dict(sorted(self.active_slot_hist.items())),
         }

@@ -1,6 +1,7 @@
-"""Decode-aware co-simulation: generation traffic invariants, the
-simulate_generation execution model, the energy-accounting fixes, and the
-Plane-A → Plane-B bridge (`core/cosim`)."""
+"""Decode-aware co-simulation: generation traffic invariants (single-stream
+and batched), the simulate_generation execution model, the
+energy-accounting fixes, the Table-4 regression pins, and the Plane-A →
+Plane-B bridge (`core/cosim`)."""
 import dataclasses
 
 import numpy as np
@@ -13,10 +14,19 @@ from repro.core.cosim import (Episode, EpisodeMix, cosim_mix,
                               mix_from_stats)
 from repro.core.noi import evaluate_noi
 from repro.core.placement import initial_placement
-from repro.core.simulator import _energy, simulate_2p5d_hi, simulate_generation
+from repro.core.simulator import (_energy, simulate_2p5d_hi,
+                                  simulate_generation)
 from repro.core.traffic import (Phase, Workload, decode_step_phases,
-                                kv_cache_bytes_per_layer, prefill_phases,
-                                total_traffic_bytes, transformer_phases)
+                                decode_weight_stream_bytes,
+                                kv_cache_bytes_per_layer, phase_bytes,
+                                prefill_phases, total_traffic_bytes,
+                                transformer_phases)
+
+# the perf_cosim model zoo: MHA, GQA, MQA-ish, parallel-block and enc-dec
+ZOO = ("llama2-7b", "gpt-j", "gemma2-9b", "qwen2.5-3b",
+       "bart-large", "whisper-large-v3")
+
+ARCHS = ("2.5D-HI", "HAIMA_chiplet", "TransPIM_chiplet")
 
 
 def _w(arch, n):
@@ -232,6 +242,202 @@ def test_generation_phases_partition_decode_steps_exactly(gen_len, samples):
     assert kqv_repeats == (gen_len - 1) * per_layer
 
 
+# ---------------------------------------------------------------------------
+# batched-decode traffic invariants (property suite over the zoo)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ZOO)
+def test_batch1_phases_identical_to_unbatched(name):
+    w = _w(name, 96)
+    assert decode_step_phases(w, 192, batch=1) == decode_step_phases(w, 192)
+
+
+@pytest.mark.parametrize("name", ZOO)
+@pytest.mark.parametrize("B", [2, 4, 8])
+def test_batched_decode_bytes_strictly_sublinear(name, B):
+    """A batched step injects strictly less than B x the single-slot step
+    (the weight streams are paid once), but more than one slot's worth."""
+    w = _w(name, 96)
+    t1 = total_traffic_bytes(decode_step_phases(w, 192))
+    tB = total_traffic_bytes(decode_step_phases(w, 192, batch=B))
+    assert t1 < tB < B * t1
+
+
+@pytest.mark.parametrize("name", ZOO)
+def test_weight_stream_bytes_independent_of_batch(name):
+    """Total step bytes are affine in B with the weight stream as the
+    B-independent intercept: bytes(B) = weights + B * per_slot."""
+    w = _w(name, 96)
+    wt = decode_weight_stream_bytes(w)
+    t1 = total_traffic_bytes(decode_step_phases(w, 192))
+    per_slot = t1 - wt
+    assert 0 < wt < t1
+    for B in (2, 3, 8, 16):
+        tB = total_traffic_bytes(decode_step_phases(w, 192, batch=B))
+        assert tB == pytest.approx(wt + B * per_slot, rel=1e-12)
+
+
+@pytest.mark.parametrize("name", ZOO)
+def test_kv_read_linear_in_sum_of_slot_positions(name):
+    """Per-slot KV reads sum over the batch at each slot's own position:
+    any position vector with the same sum injects the same score-phase
+    bytes, and the KV component is kv_cache_bytes_per_layer of the sum."""
+    w = _w(name, 96)
+    het = {p.name: p for p in decode_step_phases(w, [64, 448, 128, 320])}
+    hom = {p.name: p for p in decode_step_phases(w, 240, batch=4)}
+    assert het["score_dec"].dram_bytes == pytest.approx(
+        hom["score_dec"].dram_bytes, rel=1e-12)
+    weights = w.d_model * w.d_model * 2            # output proj, B-free
+    assert het["score_dec"].dram_bytes - weights == pytest.approx(
+        kv_cache_bytes_per_layer(w, 64 + 448 + 128 + 320))
+
+
+@pytest.mark.parametrize("B", [1, 4])
+def test_head_sharing_traffic_order_preserved_under_batching(B):
+    """MQA <= GQA <= MHA decode traffic, at any batch; and the batched KV
+    read scales by exactly kv_frac."""
+    dims = dict(name="x", d_model=4096, n_layers=32, d_ff=11008,
+                vocab=32000, seq_len=256)
+    mha = Workload(n_heads=32, n_kv_heads=32, **dims)
+    gqa = Workload(n_heads=32, n_kv_heads=8, **dims)
+    mqa = Workload(n_heads=32, n_kv_heads=1, **dims)
+    t = {w.n_kv_heads: total_traffic_bytes(decode_step_phases(w, 512, B))
+         for w in (mha, gqa, mqa)}
+    assert t[1] < t[8] < t[32]
+    kv = {w.n_kv_heads:
+          {p.name: p for p in decode_step_phases(w, 512, B)}["score_dec"]
+          .dram_bytes - 4096 * 4096 * 2
+          for w in (mha, gqa, mqa)}
+    assert kv[8] == pytest.approx(kv[32] / 4)
+    assert kv[1] == pytest.approx(kv[32] / 32)
+
+
+def test_decode_step_phases_rejects_bad_batch():
+    w = _w("llama2-7b", 64)
+    with pytest.raises(ValueError):
+        decode_step_phases(w, 128, batch=0)
+    with pytest.raises(ValueError):
+        decode_step_phases(w, [128, 256], batch=3)   # len mismatch
+    with pytest.raises(ValueError):
+        decode_step_phases(w, [])
+
+
+# ---------------------------------------------------------------------------
+# batched generation execution model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_batched_generation_beats_single_stream(arch):
+    """The batched step is slower than a single-slot step but far cheaper
+    than B of them, so throughput rises and energy/token falls."""
+    w = _w("llama2-7b", 128)
+    g1 = simulate_generation(w, 64, 128, 32, arch=arch)
+    g8 = simulate_generation(w, 64, 128, 32, arch=arch, batch=8)
+    assert g1.decode_step_s <= g8.decode_step_s < 8 * g1.decode_step_s
+    assert g8.decode_tok_s > g1.decode_tok_s
+    assert g8.tokens_per_s > g1.tokens_per_s
+    assert g8.energy_per_token_j < g1.energy_per_token_j
+    assert g8.decode_bytes < g1.decode_bytes      # per-episode share
+
+
+def test_batched_generation_monotone_in_batch():
+    w = _w("gemma2-9b", 128)
+    tok_s = [simulate_generation(w, 64, 128, 32, batch=b).decode_tok_s
+             for b in (1, 2, 4, 8, 16)]
+    assert tok_s == sorted(tok_s)
+
+
+def test_simulate_generation_rejects_bad_batch():
+    w = _w("llama2-7b", 64)
+    for arch in ARCHS:
+        with pytest.raises(ValueError):
+            simulate_generation(w, 64, 64, 8, arch=arch, batch=0)
+
+
+# ---------------------------------------------------------------------------
+# regression pins: the batched-decode refactor must not move the
+# calibration surface (Table-4 anchors) nor the batch-1 generation model
+# ---------------------------------------------------------------------------
+
+# (latency_s, energy_j) captured at PR 3 (with the deterministic busy-unit
+# sum order); exact equality — these are the anchor rows every calibrated
+# scalar is fitted to
+_ANCHOR_PINS = {
+    ("2.5D-HI", "bert-base", 64, 36):
+        (0.04384849428577529, 3.5133460569159753),
+    ("2.5D-HI", "gpt-j", 64, 100):
+        (0.16308405967143874, 57.51770497936522),
+    ("HAIMA_chiplet", "bert-base", 64, 36):
+        (0.3399949068886732, 19.171506072810153),
+    ("HAIMA_chiplet", "gpt-j", 64, 100):
+        (0.9749948794837421, 151.82551320463253),
+    ("TransPIM_chiplet", "bert-base", 64, 36):
+        (0.20998853484005758, 10.754335052455287),
+    ("TransPIM_chiplet", "gpt-j", 64, 100):
+        (1.4349875283636135, 204.0803803899788),
+}
+
+_HI_RESIDUAL_PIN = 0.0345066439710499
+
+# (ttft_s, decode_step_s, latency_s, energy_j, prefill_bytes, decode_bytes)
+# of a llama2-7b 128+32 episode on 64 chiplets at PR 3 — batch=1 must
+# reproduce them bit-identically
+_GEN_PINS = {
+    "2.5D-HI": (0.6776960438702991, 0.025484357484632066, 1.467711125893893,
+                245.3625569472538, 4791943168.0, 135590258176.0),
+    "HAIMA_chiplet": (2.7716863308409136, 0.06900124827863019,
+                      4.910725027478449, 493.76655441191826,
+                      4657725440.0, 135590258176.0),
+    "TransPIM_chiplet": (4.512266350673472, 0.05245665898265166,
+                         6.138422779135674, 568.8961233489139,
+                         4657725440.0, 135590258176.0),
+}
+
+
+def test_table4_anchors_bit_identical():
+    from repro.core.baselines import (simulate_haima_chiplet,
+                                      simulate_transpim_chiplet)
+    fns = {"2.5D-HI": simulate_2p5d_hi,
+           "HAIMA_chiplet": simulate_haima_chiplet,
+           "TransPIM_chiplet": simulate_transpim_chiplet}
+    for (sys, arch, n, chips), (lat, energy) in _ANCHOR_PINS.items():
+        r = fns[sys](_w(arch, n), chips)
+        assert r.latency_s == lat, (sys, arch, r.latency_s, lat)
+        assert r.energy_j == energy, (sys, arch, r.energy_j, energy)
+
+
+def test_calibration_residual_bit_identical():
+    from repro.core.simulator import ANCHORS, CALIB, _hi_residual
+    workloads = {(a, n): _w(a, n)
+                 for rows in ANCHORS.values() for a, n, _, _ in rows}
+    assert _hi_residual(CALIB, workloads) == _HI_RESIDUAL_PIN
+
+
+def test_batch1_generation_reproduces_pr3_numbers():
+    w = _w("llama2-7b", 128)
+    for arch, pin in _GEN_PINS.items():
+        g = simulate_generation(w, 64, 128, 32, arch=arch, batch=1)
+        got = (g.ttft_s, g.decode_step_s, g.latency_s, g.energy_j,
+               g.prefill_bytes, g.decode_bytes)
+        assert got == pin, (arch, got, pin)
+
+
+def test_energy_busy_sum_order_is_sorted():
+    """The busy-unit sum iterates the set in sorted order — set iteration
+    order is hash-randomised per process and used to leak into the last
+    ulp of every energy figure, breaking bit-exact pins across runs."""
+    alloc = {"SM": 3, "MC": 2, "DRAM": 1, "ReRAM": 5}
+    phases = [Phase("a", repeat=7)]
+    times = {"a": 0.37}
+    e = _energy(phases, times, alloc, None, {"a": {"SM", "MC", "ReRAM"}})
+    t = 0.37 * 7
+    expected = 0.0
+    for p in (2 * C.MC.power_w, 5 * C.RERAM.power_w, 3 * C.SM.power_w):
+        expected += p * t                   # MC < ReRAM < SM (sorted)
+    expected += 1 * C.DRAM.idle_power_w * t
+    assert e == expected
+
+
 def test_engine_stats_feed_the_bridge():
     """End-to-end: a real (tiny) engine drain produces stats the cosim can
     consume."""
@@ -257,3 +463,207 @@ def test_engine_stats_feed_the_bridge():
     rec = cosim_from_engine(eng, cfg=get_config("qwen2.5-3b"), n_chiplets=36)
     assert rec["mix"]["requests"] == 2
     assert rec["archs"]["2.5D-HI"]["ttft_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# measured slot-pool utilisation → batched replay
+# ---------------------------------------------------------------------------
+
+def test_mix_from_stats_rejects_degenerate_slot_pool():
+    """max_batch=0 (or missing) stats used to build a degenerate mix; they
+    must raise instead — no engine can serve requests from a 0-slot pool."""
+    s = _fake_stats()
+    s["max_batch"] = 0
+    with pytest.raises(ValueError, match="max_batch"):
+        mix_from_stats(s)
+    s2 = _fake_stats()
+    del s2["max_batch"]
+    with pytest.raises(ValueError, match="max_batch"):
+        mix_from_stats(s2)
+
+
+def test_mix_effective_batch_from_histogram():
+    s = _fake_stats()
+    s["active_slots_hist"] = {4: 10, 2: 10}        # mean occupancy 3
+    s["max_stall_tokens"] = 24
+    mix = mix_from_stats(s)
+    assert mix.mean_active_slots == pytest.approx(3.0)
+    assert mix.effective_batch == 3
+    assert mix.max_stall_tokens == 24
+    # no histogram → slot-pool size as the upper bound
+    assert mix_from_stats(_fake_stats()).effective_batch == 4
+    # direct EpisodeMix construction without pool info → single stream
+    assert EpisodeMix([Episode(8, 4)]).effective_batch == 1
+
+
+def test_cosim_mix_batched_beats_single_stream_everywhere():
+    s = _fake_stats()
+    s["active_slots_hist"] = {4: 20}
+    mix = mix_from_stats(s)
+    batched = cosim_mix("qwen2.5-3b", mix, 36)       # measured batch = 4
+    single = cosim_mix("qwen2.5-3b", mix, 36, batch=1)
+    for arch in ARCHS:
+        assert batched[arch]["batch"] == 4
+        assert single[arch]["batch"] == 1
+        assert batched[arch]["tokens_per_s"] > single[arch]["tokens_per_s"]
+        assert (batched[arch]["energy_per_token_j"]
+                < single[arch]["energy_per_token_j"])
+        assert batched[arch]["ttft_s"] == single[arch]["ttft_s"]
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill interleave in the NoI objective
+# ---------------------------------------------------------------------------
+
+def test_interleave_preserves_total_traffic():
+    plain = EpisodeMix([Episode(256, 16, 2)], max_batch=1)
+    chunked = EpisodeMix([Episode(256, 16, 2)], prefill_chunk=64,
+                         max_batch=1, max_stall_tokens=64)
+    tp = total_traffic_bytes(generation_phases("qwen2.5-3b", plain))
+    tc = total_traffic_bytes(generation_phases("qwen2.5-3b", chunked))
+    assert tc == pytest.approx(tp, rel=1e-12)
+
+
+def test_interleave_bounds_per_execution_prefill_bursts():
+    """The measured stall bound splits prefill into ceil(P/bound) chunk
+    executions: per-execution bytes shrink by the interleave factor and
+    repeats scale up to compensate."""
+    plain = EpisodeMix([Episode(256, 16, 1)], max_batch=1)
+    chunked = EpisodeMix([Episode(256, 16, 1)], prefill_chunk=64,
+                         max_batch=1, max_stall_tokens=64)
+    pre_p = [p for p in generation_phases("qwen2.5-3b", plain)
+             if not p.name.endswith("_dec")]
+    pre_c = [p for p in generation_phases("qwen2.5-3b", chunked)
+             if not p.name.endswith("_dec")]
+    for a, b in zip(pre_p, pre_c):
+        assert phase_bytes(b) == pytest.approx(phase_bytes(a) / 4)
+        assert b.repeat == a.repeat * 4
+    # the stall bound wins over the configured chunk when tighter
+    stalled = EpisodeMix([Episode(256, 16, 1)], prefill_chunk=64,
+                         max_batch=1, max_stall_tokens=128)
+    pre_s = [p for p in generation_phases("qwen2.5-3b", stalled)
+             if not p.name.endswith("_dec")]
+    assert pre_s[0].repeat == pre_p[0].repeat * 2   # ceil(256/128)
+
+
+def test_generation_phases_batch_amortises_weight_streams():
+    """At batch B each decode timestamp is one token's 1/B share of a
+    batched step, so total decode traffic shrinks vs single-stream (the
+    weight streams amortise) while repeats stay token-exact."""
+    one = EpisodeMix([Episode(64, 33, 2)], max_batch=1)
+    bat = EpisodeMix([Episode(64, 33, 2)], max_batch=8,
+                     active_hist={8: 1})
+    w = _w("qwen2.5-3b", 64)
+    ph1 = generation_phases("qwen2.5-3b", one)
+    ph8 = generation_phases("qwen2.5-3b", bat)
+    k1 = sum(p.repeat for p in ph1 if p.name == "kqv_dec")
+    k8 = sum(p.repeat for p in ph8 if p.name == "kqv_dec")
+    assert k1 == k8 == 32 * w.n_dec_layers * 2      # token-exact repeats
+    dec1 = sum(total_traffic_bytes([p]) for p in ph1
+               if p.name.endswith("_dec"))
+    dec8 = sum(total_traffic_bytes([p]) for p in ph8
+               if p.name.endswith("_dec"))
+    assert dec8 < dec1
+
+
+def test_generation_objective_finite_with_batch_and_interleave():
+    mix = EpisodeMix([Episode(256, 32, 2)], prefill_chunk=64, max_batch=8,
+                     active_hist={8: 4, 6: 4}, max_stall_tokens=64)
+    objective, mesh_ev, phases = generation_objective("qwen2.5-3b", mix, 36)
+    assert np.isfinite(mesh_ev.mu) and mesh_ev.mu > 0
+    mu, sigma = objective(initial_placement(36))
+    assert np.isfinite(mu) and np.isfinite(sigma) and mu > 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: deep-queue engine drain → batched Plane-B replay
+# ---------------------------------------------------------------------------
+
+def test_engine_deep_queue_batched_bridge():
+    """A drained deep queue (3x the slot pool) must yield an active-slot
+    histogram with occupancy > 1, and its batched Plane-B replay must beat
+    the single-stream replay on every architecture while preserving the
+    architecture ranking."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    import numpy as np_
+
+    from repro.config import reduce_config
+    from repro.core.cosim import cosim_from_engine
+    from repro.models import transformer as T
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    cfg = reduce_config(get_config("qwen2.5-3b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(0),
+                           param_dtype=jnp.bfloat16)
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=4, kv_len=48, max_new_tokens=6, prefill_chunk=24))
+    rng = np_.random.default_rng(0)
+    for plen in (5, 9, 7, 5, 11, 9, 5, 7, 9, 5, 7, 9):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=plen))
+    eng.run_until_drained()
+
+    st = eng.stats()
+    hist = st["active_slots_hist"]
+    assert hist and all(1 <= k <= 4 for k in hist)
+    assert sum(hist.values()) == st["decode_steps"]
+
+    full = get_config("qwen2.5-3b")
+    rec = cosim_from_engine(eng, cfg=full, n_chiplets=36)
+    assert rec["mix"]["effective_batch"] > 1     # the pool actually batched
+    single = cosim_from_engine(eng, cfg=full, n_chiplets=36, batch=1)
+    b_tps, s_tps = {}, {}
+    for arch in ARCHS:
+        b_tps[arch] = rec["archs"][arch]["tokens_per_s"]
+        s_tps[arch] = single["archs"][arch]["tokens_per_s"]
+        assert b_tps[arch] >= s_tps[arch]
+    assert (sorted(ARCHS, key=b_tps.__getitem__)
+            == sorted(ARCHS, key=s_tps.__getitem__))
+
+
+def test_active_slot_hist_counts_dead_chunk_iterations():
+    """decode_chunk>1: scan iterations that outlive every slot (requests
+    finished mid-chunk) are real device work — they must be recorded at
+    occupancy 0 so Σhist == decode_steps and the occupancy mean discounts
+    the dead tail instead of inflating the effective batch."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    import numpy as np_
+
+    from repro.config import reduce_config
+    from repro.models import transformer as T
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    cfg = reduce_config(get_config("qwen2.5-3b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(0),
+                           param_dtype=jnp.bfloat16)
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=2, kv_len=32, max_new_tokens=6, decode_chunk=4))
+    rng = np_.random.default_rng(0)
+    for plen in (5, 7):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=plen))
+    eng.run_until_drained()
+    st = eng.stats()
+    hist = st["active_slots_hist"]
+    assert sum(hist.values()) == st["decode_steps"]
+    assert hist.get(0, 0) > 0            # the dead tail of the last chunk
+    mix = mix_from_stats(st)
+    # 5 productive iterations × 2 slots over 8 paid iterations
+    assert mix.mean_active_slots == pytest.approx(10 / 8)
+
+
+@pytest.mark.slow
+def test_noi_sweep_emits_fronts_for_all_cells():
+    """The benchmark's decode-aware Pareto sweep: every (size, model) cell
+    carries a non-empty front and the single-pass design never beats the
+    decode-aware one under generation traffic."""
+    from benchmarks.perf_cosim import run_noi_sweep
+
+    sweep = run_noi_sweep(("qwen2.5-3b", "bart-large"), (36, 64),
+                          prompt_len=128, gen_len=32, batch=4,
+                          iterations=1, ls_steps=6)
+    assert len(sweep["cells"]) == 4
+    for cell in sweep["cells"]:
+        assert cell["front"]
+        assert cell["gain_mu"] >= 1.0 - 1e-9
+        assert np.isfinite(cell["best_mu_norm"])
