@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow verify bench-serving bench-cosim bench-smoke report
+.PHONY: test test-slow verify bench-serving bench-cosim bench-quant bench-smoke report
 
 test:               ## tier-1 test suite (everything, slow included)
 	$(PY) -m pytest -x -q
@@ -15,9 +15,13 @@ bench-serving:      ## full serving decode+prefill benchmark -> experiments/BENC
 bench-cosim:        ## generation co-simulation sweep (zoo x architectures) -> experiments/BENCH_cosim.json
 	$(PY) -m benchmarks.perf_cosim
 
-bench-smoke:        ## tiny-config serving+cosim benchmarks; assert the JSON report schemas
+bench-quant:        ## quantised serving: parity/drift + Plane-B projection -> experiments/BENCH_quant.json
+	$(PY) -m benchmarks.perf_quant
+
+bench-smoke:        ## tiny-config serving+cosim+quant benchmarks; assert the JSON report schemas
 	$(PY) -m benchmarks.perf_serving --smoke
 	$(PY) -m benchmarks.perf_cosim --smoke
+	$(PY) -m benchmarks.perf_quant --smoke
 
 # slow-marked tests run in their own non-blocking CI job (test-slow)
 verify:             ## CI gate: fast tests + bench smokes (schema-checked)

@@ -22,7 +22,14 @@ Two further sections:
   chunk-interleaved prefill) across system sizes × zoo models, emitting
   the Pareto front per cell and comparing it against the design the same
   search budget finds under *single-pass* traffic (the pre-generation
-  objective), both evaluated under the generation traffic.
+  objective), both evaluated under the generation traffic;
+- **quant_sweep** — the precision plane: every zoo model's generation
+  episode at fp16 / int8 / int4 weight+KV precision
+  (``Workload(weight_bits=, kv_bits=)``), reporting the decode
+  traffic/step-latency reduction quantisation buys, plus a
+  quantised-vs-fp NoI comparison (design searched under the *quantised*
+  generation traffic vs the same budget's fp-traffic design, both scored
+  under the quantised traffic) for a subset of models.
 
     PYTHONPATH=src python -m benchmarks.perf_cosim [--smoke]
 
@@ -55,11 +62,20 @@ _SWEEP_KEYS = {"model", "chiplets", "front", "best_mu_norm",
                "best_sigma_norm", "single_pass_mu_norm",
                "single_pass_sigma_norm", "gain_mu", "same_design", "n_evals"}
 
+_QUANT_KEYS = {"model", "weight_bits", "kv_bits", "ttft_ms",
+               "decode_step_ms", "decode_gb", "weight_stream_gb",
+               "energy_per_token_mj", "decode_step_speedup_vs_fp",
+               "decode_traffic_reduction_vs_fp"}
+
+_QUANT_NOI_KEYS = {"front", "best_mu_norm", "best_sigma_norm",
+                   "fp_design_mu_norm", "fp_design_sigma_norm", "gain_mu",
+                   "same_design", "n_evals"}
+
 
 def check_schema(rec: dict) -> None:
     """Assert the BENCH_cosim.json record shape (CI bit-rot gate)."""
     for key in ("bench", "smoke", "chiplets", "prompt_len", "gen_len",
-                "batch", "models", "noi_sweep"):
+                "batch", "models", "noi_sweep", "quant_sweep"):
         assert key in rec, f"missing top-level key {key!r}"
     assert len(rec["models"]) >= 4 or rec["smoke"], "zoo must cover ≥4 models"
     saw_gqa = saw_encdec = False
@@ -81,6 +97,20 @@ def check_schema(rec: dict) -> None:
         models = {c["model"] for c in cells}
         assert len(sizes) >= 3, f"sweep must cover >=3 system sizes: {sizes}"
         assert len(models) >= 6, f"sweep must cover >=6 models: {models}"
+    qcells = rec["quant_sweep"]["cells"]
+    saw_noi = False
+    for cell in qcells:
+        missing = _QUANT_KEYS - set(cell)
+        assert not missing, f"quant_sweep cell missing {missing}"
+        if "noi" in cell:
+            saw_noi = True
+            missing = _QUANT_NOI_KEYS - set(cell["noi"])
+            assert not missing, f"quant_sweep noi cell missing {missing}"
+    assert saw_noi, "quant_sweep must include at least one NoI comparison"
+    grid = {(c["weight_bits"], c["kv_bits"]) for c in qcells}
+    assert (16, 16) in grid and (8, 8) in grid, f"quant grid too small: {grid}"
+    if not rec["smoke"]:
+        assert (4, 4) in grid, f"full quant grid must include int4: {grid}"
 
 
 def _row(g, g1) -> dict:
@@ -239,6 +269,106 @@ def run_noi_sweep(models, sizes, prompt_len: int, gen_len: int, *,
             "ls_steps": ls_steps, "cells": cells}
 
 
+def run_quant_sweep(models, chiplets: int, prompt_len: int, gen_len: int, *,
+                    batch: int = 8, bits_grid=((16, 16), (8, 8), (4, 4)),
+                    noi_models=None, requests: int = 4, iterations: int = 3,
+                    ls_steps: int = 12, seed: int = 0) -> dict:
+    """Precision sweep: each zoo model's generation episode re-simulated at
+    every (weight_bits, kv_bits) point — decode traffic and step latency
+    fall as the quantised bytes fall — plus, for ``noi_models``, a
+    quantised-vs-fp NoI design comparison: MOO-STAGE under the *quantised*
+    generation traffic vs the design the same budget finds under fp
+    traffic, both scored under the quantised objective (normalised to its
+    mesh baseline)."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.config import get_config
+    from repro.core.cosim import (Episode, EpisodeMix, generation_objective,
+                                  seeded_noi_search)
+    from repro.core.simulator import simulate_generation
+    from repro.core.traffic import Workload, decode_weight_stream_bytes
+
+    noi_models = set(noi_models if noi_models is not None else models[:2])
+    chunk = max(prompt_len // 4, 1)
+    steps = max(gen_len - 1, 1)
+    cells = []
+    for name in models:
+        cfg = get_config(name)
+        fp_cell = None
+        fp_search = None              # fp-traffic control: one search/model
+        for wb, kb in bits_grid:
+            w = Workload.from_config(cfg, seq_len=prompt_len,
+                                     weight_bits=wb, kv_bits=kb)
+            g = simulate_generation(w, chiplets, prompt_len, gen_len,
+                                    arch="2.5D-HI", batch=batch)
+            wstream = decode_weight_stream_bytes(w) * steps / batch
+            cell = {
+                "model": name, "weight_bits": wb, "kv_bits": kb,
+                "ttft_ms": g.ttft_s * 1e3,
+                "decode_step_ms": g.decode_step_s * 1e3,
+                "decode_gb": g.decode_bytes / 2**30,
+                "weight_stream_gb": wstream / 2**30,
+                "energy_per_token_mj": g.energy_per_token_j * 1e3,
+            }
+            if (wb, kb) == (16, 16):
+                fp_cell = cell
+            base = fp_cell or cell      # grid is fp-first by construction
+            cell["decode_step_speedup_vs_fp"] = \
+                base["decode_step_ms"] / max(cell["decode_step_ms"], 1e-30)
+            cell["decode_traffic_reduction_vs_fp"] = \
+                base["decode_gb"] / max(cell["decode_gb"], 1e-30)
+
+            if name in noi_models and (wb, kb) != (16, 16):
+                mix_q = EpisodeMix([Episode(prompt_len, gen_len, requests)],
+                                   prefill_chunk=chunk, max_batch=batch,
+                                   active_hist={batch: 1},
+                                   max_stall_tokens=chunk,
+                                   weight_bits=wb, kv_bits=kb)
+                q_obj, _, _ = generation_objective(name, mix_q, chiplets)
+                res = seeded_noi_search(q_obj, chiplets,
+                                        iterations=iterations,
+                                        ls_steps=ls_steps, seed=seed)
+                objs = np.asarray(res.archive.objs)
+                bi = int(np.argmin(objs[:, 0]))
+                best = res.archive.objs[bi]
+                best_design = res.archive.designs[bi]
+                if fp_search is None:
+                    # the fp-traffic control is identical for every bits
+                    # point of this model — search once, reuse the design
+                    mix_fp = dataclasses.replace(mix_q, weight_bits=16,
+                                                 kv_bits=16)
+                    fp_obj, _, _ = generation_objective(name, mix_fp,
+                                                        chiplets)
+                    fp_res = seeded_noi_search(fp_obj, chiplets,
+                                               iterations=iterations,
+                                               ls_steps=ls_steps, seed=seed)
+                    fp_objs = np.asarray(fp_res.archive.objs)
+                    fp_search = (
+                        fp_res.archive.designs[int(np.argmin(fp_objs[:, 0]))],
+                        fp_res.n_evals)
+                fp_design, fp_evals = fp_search
+                under_q = q_obj(fp_design)
+                cell["noi"] = {
+                    "front": sorted([float(m), float(s)]
+                                    for m, s in res.archive.objs),
+                    "best_mu_norm": float(best[0]),
+                    "best_sigma_norm": float(best[1]),
+                    "fp_design_mu_norm": float(under_q[0]),
+                    "fp_design_sigma_norm": float(under_q[1]),
+                    "gain_mu": float(under_q[0] / max(best[0], 1e-30)),
+                    "same_design": fp_design == best_design,
+                    "n_evals": res.n_evals + fp_evals,
+                }
+            cells.append(cell)
+    return {"models": list(models), "chiplets": chiplets, "batch": batch,
+            "prompt_len": prompt_len, "gen_len": gen_len,
+            "bits_grid": [list(b) for b in bits_grid],
+            "noi_models": sorted(noi_models), "requests": requests,
+            "iterations": iterations, "ls_steps": ls_steps, "cells": cells}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -277,6 +407,14 @@ def main():
             models, sizes, args.prompt_len, args.gen_len, batch=args.batch,
             iterations=1 if args.smoke else 3,
             ls_steps=4 if args.smoke else 12),
+        "quant_sweep": run_quant_sweep(
+            models, args.chiplets, args.prompt_len, args.gen_len,
+            batch=args.batch,
+            bits_grid=((16, 16), (8, 8)) if args.smoke
+            else ((16, 16), (8, 8), (4, 4)),
+            noi_models=models[:1] if args.smoke else models[:2],
+            iterations=1 if args.smoke else 3,
+            ls_steps=4 if args.smoke else 12),
     }
     if not args.smoke:
         rec["bridge"] = run_bridge(args.bridge_arch, args.chiplets)
@@ -303,6 +441,14 @@ def main():
            "gain_mu": c["gain_mu"]}
           for c in rec["noi_sweep"]["cells"]],
          "cosim: decode-aware NoI Pareto sweep vs single-pass designs")
+    emit([{"model": c["model"], "bits": f"w{c['weight_bits']}kv{c['kv_bits']}",
+           "decode_ms": c["decode_step_ms"],
+           "decode_gb": c["decode_gb"],
+           "traffic_reduction": c["decode_traffic_reduction_vs_fp"],
+           "step_speedup": c["decode_step_speedup_vs_fp"],
+           "noi_gain_mu": c.get("noi", {}).get("gain_mu", "")}
+          for c in rec["quant_sweep"]["cells"]],
+         "cosim: quantised-vs-fp precision sweep")
 
     os.makedirs(EXPERIMENTS, exist_ok=True)
     with open(args.out, "w") as f:

@@ -1,0 +1,292 @@
+"""Quantised serving benchmark: Plane-A throughput, token parity and logit
+drift of the int8/int4 weight + quantised-KV paths, plus the Plane-B
+projection of the traffic they remove.
+
+Variants (all through the same fused ``ServingEngine`` on the reduced
+config, greedy decode over identical prompt sets):
+
+- ``fp``     — ``weight_bits=kv_bits=0``: the native path (bit-identical to
+               the pre-quantisation engine);
+- ``w8``     — per-channel int8 weight-only quantisation;
+- ``kv8``    — int8 quantised slot-pool KV cache (per-(token, head) scales,
+               quantise-on-commit / dequantise-on-read);
+- ``w8kv8``  — both;
+- ``w4kv4``  — packed int4 weights + int4 KV (the drift extreme).
+
+Reported per variant: engine tokens/s, exact-sequence and prefix token
+parity vs the fp drain, prefill/decode logit drift (max |Δ| on a fixed
+batch), and — for ``w8`` — parity against the *fake-quant oracle* (an fp
+engine running dequantise(quantise(W)) weights), which must be exact on
+the ref path: there the weight path changes the values once, offline, not
+the arithmetic.  (On TPU the fused kernel accumulates in f32 while the fp
+oracle matmuls in bf16, so the schema gate only enforces exactness off-TPU.)
+
+The Plane-B section projects each precision point onto the full-size model
+through the co-simulation traffic model (``Workload(weight_bits=,
+kv_bits=)``): decode fabric bytes and batched decode-step latency at 64
+chiplets — the measured byte reduction propagating into decode-ms-per-token
+(the deeper NoI sweep lives in ``benchmarks.perf_cosim``'s quant_sweep).
+
+    PYTHONPATH=src python -m benchmarks.perf_quant [--smoke]
+
+Results: ``experiments/BENCH_quant.json`` (``BENCH_quant_smoke.json`` with
+``--smoke`` so CI never clobbers the recorded full run); rendered by
+``benchmarks/report.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+VARIANTS = {
+    "fp": (0, 0),
+    "w8": (8, 0),
+    "kv8": (0, 8),
+    "w8kv8": (8, 8),
+    "w4kv4": (4, 4),
+}
+
+_VARIANT_KEYS = {"weight_bits", "kv_bits", "tokens", "tokens_per_s",
+                 "step_ms", "exact_parity", "prefix_parity"}
+_DRIFT_KEYS = {"weight_bits", "kv_bits", "prefill_max_abs", "decode_max_abs"}
+_PLANEB_KEYS = {"weight_bits", "kv_bits", "decode_gb", "weight_stream_gb",
+                "decode_step_ms", "decode_traffic_reduction_vs_fp"}
+
+
+def check_schema(rec: dict) -> None:
+    """Assert the BENCH_quant.json record shape (CI bit-rot gate)."""
+    for key in ("bench", "arch", "backend", "smoke", "results", "drift",
+                "planeb", "fakequant_parity_w8"):
+        assert key in rec, f"missing top-level key {key!r}"
+    for name in VARIANTS:
+        row = rec["results"][name]
+        missing = _VARIANT_KEYS - set(row)
+        assert not missing, f"variant {name!r} missing {missing}"
+        drow = rec["drift"][name]
+        missing = _DRIFT_KEYS - set(drow)
+        assert not missing, f"drift {name!r} missing {missing}"
+    assert rec["results"]["fp"]["exact_parity"] == 1.0, "fp must match itself"
+    if rec["backend"] != "tpu":
+        # on the ref path the w8 engine computes x @ dequant(W) — literally
+        # the oracle's weights, so parity is exact by construction.  On TPU
+        # the fused Pallas kernel accumulates in f32 while the fp oracle
+        # matmuls in bf16, so near-tie tokens may legitimately differ.
+        assert rec["fakequant_parity_w8"] == 1.0, \
+            "w8 engine must exactly match the fake-quant fp oracle"
+    for row in rec["planeb"]:
+        missing = _PLANEB_KEYS - set(row)
+        assert not missing, f"planeb row missing {missing}"
+
+
+def _prompts(cfg, requests: int, prompt_len: int):
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, cfg.vocab_size, size=prompt_len)
+            for _ in range(requests)]
+
+
+def _drain(cfg, params, prompts, *, weight_bits: int, kv_bits: int,
+           impl: str, max_batch: int, kv_len: int, max_new_tokens: int,
+           repeat: int = 3):
+    """Drain the prompt set; returns (outputs per request, best timing)."""
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=max_batch, kv_len=kv_len, max_new_tokens=max_new_tokens,
+        impl=impl, weight_bits=weight_bits, kv_bits=kv_bits))
+
+    def once():
+        n0, s0 = len(eng.finished), eng.decode_steps
+        for p in prompts:
+            eng.submit(p)
+        t0 = time.perf_counter()
+        eng.run_until_drained()
+        dt = time.perf_counter() - t0
+        done = sorted(eng.finished[n0:], key=lambda r: r.uid)
+        toks = sum(len(r.output) for r in done)
+        return [tuple(r.output) for r in done], toks, eng.decode_steps - s0, dt
+
+    outputs, *_ = once()               # warm-up drain: compiles + the record
+    best = None
+    for _ in range(repeat):
+        _, toks, steps, dt = once()
+        if best is None or toks / dt > best[0] / best[2]:
+            best = (toks, steps, dt)
+    return outputs, best
+
+
+def _parity(ref, out) -> tuple[float, float]:
+    import numpy as np
+
+    exact = float(np.mean([a == b for a, b in zip(ref, out)]))
+    prefix = float(np.mean([
+        sum(x == y for x, y in zip(a, b)) / max(len(a), 1)
+        for a, b in zip(ref, out)]))
+    return exact, prefix
+
+
+def measure_drift(cfg, params, *, weight_bits: int, kv_bits: int,
+                  kv_len: int, prompt_len: int, batch: int = 4) -> dict:
+    """Max |Δlogit| of the quantised path vs fp, on prefill and on one
+    decode step from the (quantised) prefill cache."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import transformer as T
+    from repro.quant.core import quantize_params
+
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                    size=(batch, prompt_len)), jnp.int32)
+    qparams = quantize_params(params, weight_bits) if weight_bits else params
+
+    lf, cf = T.prefill(params, cfg, {"tokens": toks}, kv_cap=kv_len)
+    lq, cq = T.prefill(qparams, cfg, {"tokens": toks}, kv_cap=kv_len,
+                       kv_bits=kv_bits)
+    nxt = jnp.argmax(lf, -1).astype(jnp.int32)
+    pos = jnp.full((batch,), prompt_len, jnp.int32)
+    df, _ = T.decode_step(params, cfg, cf, nxt, pos)
+    dq, _ = T.decode_step(qparams, cfg, cq, nxt, pos)
+    f32 = lambda x: x.astype(jnp.float32)  # noqa: E731
+    return {
+        "weight_bits": weight_bits, "kv_bits": kv_bits,
+        "prefill_max_abs": float(jnp.abs(f32(lf) - f32(lq)).max()),
+        "decode_max_abs": float(jnp.abs(f32(df) - f32(dq)).max()),
+    }
+
+
+def planeb_projection(arch: str, chiplets: int, prompt_len: int,
+                      gen_len: int, batch: int) -> list[dict]:
+    """Full-size Plane-B projection of each precision point."""
+    from repro.config import get_config
+    from repro.core.simulator import simulate_generation
+    from repro.core.traffic import Workload, decode_weight_stream_bytes
+
+    steps = max(gen_len - 1, 1)
+    rows, fp_gb = [], None
+    for wb, kb in ((16, 16), (8, 8), (4, 4)):
+        w = Workload.from_config(get_config(arch), seq_len=prompt_len,
+                                 weight_bits=wb, kv_bits=kb)
+        g = simulate_generation(w, chiplets, prompt_len, gen_len,
+                                arch="2.5D-HI", batch=batch)
+        gb = g.decode_bytes / 2**30
+        fp_gb = gb if fp_gb is None else fp_gb
+        rows.append({
+            "weight_bits": wb, "kv_bits": kb, "decode_gb": gb,
+            "weight_stream_gb":
+                decode_weight_stream_bytes(w) * steps / batch / 2**30,
+            "decode_step_ms": g.decode_step_s * 1e3,
+            "decode_traffic_reduction_vs_fp": fp_gb / max(gb, 1e-30),
+        })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI (seconds, still writes JSON)")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--kv-len", type=int, default=64)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--impl", default="ref",
+                    help="attention impl for the drains (flash = Pallas)")
+    ap.add_argument("--chiplets", type=int, default=64)
+    ap.add_argument("--planeb-prompt-len", type=int, default=512)
+    ap.add_argument("--planeb-gen-len", type=int, default=128)
+    ap.add_argument("--planeb-batch", type=int, default=8)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = os.path.join(
+            EXPERIMENTS,
+            "BENCH_quant_smoke.json" if args.smoke else "BENCH_quant.json")
+    if args.smoke:
+        args.max_batch, args.kv_len = 2, 64
+        args.max_new_tokens, args.prompt_len, args.requests = 6, 8, 3
+        args.planeb_prompt_len, args.planeb_gen_len = 64, 16
+        args.planeb_batch = 4
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import emit
+    from repro.config import get_config, reduce_config
+    from repro.models import transformer as T
+    from repro.quant.core import fake_quantize_params
+
+    cfg = reduce_config(get_config(args.arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(0),
+                           param_dtype=jnp.float32)
+    prompts = _prompts(cfg, args.requests, args.prompt_len)
+    shape = dict(impl=args.impl, max_batch=args.max_batch,
+                 kv_len=args.kv_len, max_new_tokens=args.max_new_tokens,
+                 repeat=2 if args.smoke else 3)
+
+    results, drift = {}, {}
+    fp_out = None
+    for name, (wb, kb) in VARIANTS.items():
+        out, (toks, steps, dt) = _drain(cfg, params, prompts,
+                                        weight_bits=wb, kv_bits=kb, **shape)
+        fp_out = out if name == "fp" else fp_out
+        exact, prefix = _parity(fp_out, out)
+        results[name] = {
+            "weight_bits": wb, "kv_bits": kb, "tokens": toks,
+            "tokens_per_s": toks / max(dt, 1e-9),
+            "step_ms": dt / max(steps, 1) * 1e3,
+            "exact_parity": exact, "prefix_parity": prefix,
+        }
+        drift[name] = measure_drift(cfg, params, weight_bits=wb, kv_bits=kb,
+                                    kv_len=args.kv_len,
+                                    prompt_len=args.prompt_len)
+
+    # fake-quant oracle: an fp engine on dequantise(quantise(W)) must match
+    # the w8 engine token-for-token — the weight path changes values, not
+    # arithmetic (any mismatch is a serving-plumbing bug, not drift)
+    fq_out, _ = _drain(cfg, fake_quantize_params(params, 8), prompts,
+                       weight_bits=0, kv_bits=0, **shape)
+    w8_out, _ = _drain(cfg, params, prompts, weight_bits=8, kv_bits=0,
+                       **shape)
+    fq_exact, _ = _parity(fq_out, w8_out)
+
+    rec = {
+        "bench": "quant",
+        "arch": args.arch,
+        "backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+        "impl": args.impl,
+        "max_batch": args.max_batch, "kv_len": args.kv_len,
+        "max_new_tokens": args.max_new_tokens,
+        "prompt_len": args.prompt_len, "requests": args.requests,
+        "results": results,
+        "drift": drift,
+        "fakequant_parity_w8": fq_exact,
+        "planeb": planeb_projection(args.arch, args.chiplets,
+                                    args.planeb_prompt_len,
+                                    args.planeb_gen_len, args.planeb_batch),
+        "planeb_shape": {"chiplets": args.chiplets,
+                         "prompt_len": args.planeb_prompt_len,
+                         "gen_len": args.planeb_gen_len,
+                         "batch": args.planeb_batch},
+    }
+    check_schema(rec)
+    os.makedirs(EXPERIMENTS, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+
+    emit([{"variant": k, **v} for k, v in results.items()], "quant_serving")
+    emit([{"variant": k, **v} for k, v in drift.items()], "quant_drift")
+    emit(rec["planeb"], "quant_planeb_projection")
+    print(f"fake-quant oracle parity (w8): {fq_exact:.2f} -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

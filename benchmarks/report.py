@@ -2,21 +2,46 @@
 experiments/dryrun/*.json.
 
     PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+
+A malformed or partially-written results file (an interrupted benchmark
+run, a truncated CI artifact) is skipped with a warning on stderr — the
+report still renders every healthy section.
 """
 import glob
 import json
 import os
+import sys
 
 from repro.config import ASSIGNED_ARCHS, SHAPES
 
 DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 
 
+def _warn(msg: str) -> None:
+    print(f"# WARNING: {msg}", file=sys.stderr)
+
+
+def _load_json(path: str):
+    """Parse one results JSON; None (with a warning) when the file is
+    malformed / truncated instead of aborting the whole report."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        _warn(f"skipping {os.path.normpath(path)}: {e}")
+        return None
+
+
 def load():
     recs = {}
     for f in glob.glob(os.path.join(DRYRUN, "*.json")):
-        r = json.load(open(f))
-        recs[(r["arch"], r["shape"], r["mesh"])] = r
+        r = _load_json(f)
+        if r is None:
+            continue
+        try:
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+        except (KeyError, TypeError) as e:
+            _warn(f"skipping {os.path.normpath(f)}: missing key {e}")
     return recs
 
 
@@ -96,7 +121,9 @@ def serving_table() -> str:
     path = os.path.normpath(os.path.join(DRYRUN, "..", "BENCH_serving.json"))
     if not os.path.exists(path):
         return "(no BENCH_serving.json — run `python -m benchmarks.perf_serving`)"
-    r = json.load(open(path))
+    r = _load_json(path)
+    if r is None:
+        return "(BENCH_serving.json is malformed — re-run `python -m benchmarks.perf_serving`)"
     out = [f"config: {r['arch']} (reduced) · backend={r['backend']} · "
            f"slots={r['max_batch']} · kv_len={r['kv_len']} · "
            f"prompt={r['prompt_len']} · max_new={r['max_new_tokens']} · "
@@ -143,7 +170,9 @@ def cosim_table() -> str:
     path = os.path.normpath(os.path.join(DRYRUN, "..", "BENCH_cosim.json"))
     if not os.path.exists(path):
         return "(no BENCH_cosim.json — run `python -m benchmarks.perf_cosim`)"
-    r = json.load(open(path))
+    r = _load_json(path)
+    if r is None:
+        return "(BENCH_cosim.json is malformed — re-run `python -m benchmarks.perf_cosim`)"
     out = [f"chiplets={r['chiplets']} · prompt={r['prompt_len']} · "
            f"gen={r['gen_len']} · batch={r.get('batch', 1)}"
            + (" · SMOKE" if r.get("smoke") else ""),
@@ -192,6 +221,26 @@ def cosim_table() -> str:
                     "same-seed searches converged to the identical "
                     "placement — a 1.00× gain there means the searches "
                     "coincided, not that decode-awareness is free"]
+    qs = r.get("quant_sweep")
+    if qs:
+        out += ["",
+                "#### Quantised-vs-fp precision sweep "
+                f"(batch={qs['batch']}, NoI on {', '.join(qs['noi_models'])})",
+                "",
+                "| model | bits | decode ms/step | decode GiB | traffic ÷ | "
+                "step × | NoI μ (quant-designed / fp-designed) |",
+                "|---|---|---|---|---|---|---|"]
+        for c in qs["cells"]:
+            noi = c.get("noi")
+            noi_s = (f"{noi['best_mu_norm']:.3f} / "
+                     f"{noi['fp_design_mu_norm']:.3f}"
+                     + (" (=)" if noi.get("same_design") else "")
+                     ) if noi else "—"
+            out.append(
+                f"| {c['model']} | w{c['weight_bits']}kv{c['kv_bits']} | "
+                f"{c['decode_step_ms']:.2f} | {c['decode_gb']:.2f} | "
+                f"{c['decode_traffic_reduction_vs_fp']:.2f}× | "
+                f"{c['decode_step_speedup_vs_fp']:.2f}× | {noi_s} |")
     br = r.get("bridge")
     if br:
         mix = br["mix"]
@@ -212,17 +261,77 @@ def cosim_table() -> str:
     return "\n".join(out)
 
 
+def quant_table() -> str:
+    """Render experiments/BENCH_quant.json (benchmarks.perf_quant)."""
+    path = os.path.normpath(os.path.join(DRYRUN, "..", "BENCH_quant.json"))
+    if not os.path.exists(path):
+        return "(no BENCH_quant.json — run `python -m benchmarks.perf_quant`)"
+    r = _load_json(path)
+    if r is None:
+        return "(BENCH_quant.json is malformed — re-run `python -m benchmarks.perf_quant`)"
+    out = [f"config: {r['arch']} (reduced) · backend={r['backend']} · "
+           f"impl={r.get('impl', 'ref')} · slots={r['max_batch']} · "
+           f"kv_len={r['kv_len']} · prompt={r['prompt_len']} · "
+           f"max_new={r['max_new_tokens']} · requests={r['requests']}"
+           + (" · SMOKE" if r.get("smoke") else ""),
+           "",
+           "| variant | bits (w/kv) | tok/s | step ms | exact parity | "
+           "prefix parity | prefill max|Δ| | decode max|Δ| |",
+           "|---|---|---|---|---|---|---|---|"]
+    for name, row in r["results"].items():
+        d = r["drift"][name]
+        out.append(
+            f"| {name} | {row['weight_bits'] or 'fp'}/"
+            f"{row['kv_bits'] or 'fp'} | {row['tokens_per_s']:.0f} | "
+            f"{row['step_ms']:.3f} | {row['exact_parity']:.2f} | "
+            f"{row['prefix_parity']:.2f} | {d['prefill_max_abs']:.3g} | "
+            f"{d['decode_max_abs']:.3g} |")
+    out += ["",
+            f"fake-quant oracle parity (w8 vs fp engine on "
+            f"dequant(quant(W))): **{r['fakequant_parity_w8']:.2f}** "
+            "(must be 1.00 — the weight path changes values, not arithmetic)"]
+    ps = r.get("planeb_shape", {})
+    out += ["",
+            f"#### Plane-B projection ({r['arch']} full dims, "
+            f"{ps.get('chiplets')} chiplets, prompt={ps.get('prompt_len')}, "
+            f"gen={ps.get('gen_len')}, batch={ps.get('batch')})",
+            "",
+            "| bits (w/kv) | decode GiB | weight-stream GiB | "
+            "decode ms/step | traffic ÷ vs fp |",
+            "|---|---|---|---|---|"]
+    for row in r.get("planeb", []):
+        out.append(
+            f"| {row['weight_bits']}/{row['kv_bits']} | "
+            f"{row['decode_gb']:.2f} | {row['weight_stream_gb']:.2f} | "
+            f"{row['decode_step_ms']:.2f} | "
+            f"{row['decode_traffic_reduction_vs_fp']:.2f}× |")
+    return "\n".join(out)
+
+
+def _render(fn, *args) -> str:
+    """One report section; a record that parses but is missing keys (an
+    older schema, a half-migrated run) degrades to a warning line instead
+    of killing every section after it."""
+    try:
+        return fn(*args)
+    except (KeyError, TypeError, AttributeError) as e:
+        _warn(f"section {fn.__name__} failed to render: {e!r}")
+        return f"(section unavailable — malformed record: {e!r})"
+
+
 def main():
     recs = load()
     print("### Dry-run matrix (40 cells × 2 meshes)\n")
-    print(summary(recs) + "\n")
-    print(dryrun_table(recs) + "\n")
+    print(_render(summary, recs) + "\n")
+    print(_render(dryrun_table, recs) + "\n")
     print("### Roofline (single-pod, per §Roofline)\n")
-    print(roofline_table(recs) + "\n")
+    print(_render(roofline_table, recs) + "\n")
     print("### Serving decode fast path (benchmarks.perf_serving)\n")
-    print(serving_table() + "\n")
+    print(_render(serving_table) + "\n")
     print("### Generation co-simulation (benchmarks.perf_cosim)\n")
-    print(cosim_table())
+    print(_render(cosim_table) + "\n")
+    print("### Quantised serving (benchmarks.perf_quant)\n")
+    print(_render(quant_table))
 
 
 if __name__ == "__main__":

@@ -61,6 +61,8 @@ class EpisodeMix:
     # slot-pool utilisation (ServingEngine.stats()["active_slots_hist"])
     active_hist: dict = dataclasses.field(default_factory=dict)
     max_stall_tokens: int = 0     # max prefill tokens between decode steps
+    weight_bits: int = 16         # measured serving precision (16 = fp) —
+    kv_bits: int = 16             #   scales the Plane-B weight/KV byte terms
 
     @property
     def requests(self) -> int:
@@ -126,16 +128,23 @@ def mix_from_stats(stats: dict) -> EpisodeMix:
                       prefill_chunk=int(stats.get("prefill_chunk", 0)),
                       max_batch=max_batch,
                       active_hist=hist,
-                      max_stall_tokens=int(stats.get("max_stall_tokens", 0)))
+                      max_stall_tokens=int(stats.get("max_stall_tokens", 0)),
+                      weight_bits=int(stats.get("weight_bits", 16)),
+                      kv_bits=int(stats.get("kv_bits", 16)))
 
 
 def _resolve(cfg) -> ModelConfig:
     return get_config(cfg) if isinstance(cfg, str) else cfg
 
 
-def workload_for(cfg, episode: Episode) -> Workload:
-    """Plane-B workload for one episode of a (full-size) model config."""
-    return Workload.from_config(_resolve(cfg), seq_len=episode.prompt_len)
+def workload_for(cfg, episode: Episode,
+                 mix: Optional[EpisodeMix] = None) -> Workload:
+    """Plane-B workload for one episode of a (full-size) model config; a
+    ``mix`` carries the measured serving precision into the byte terms."""
+    return Workload.from_config(
+        _resolve(cfg), seq_len=episode.prompt_len,
+        weight_bits=mix.weight_bits if mix else 16,
+        kv_bits=mix.kv_bits if mix else 16)
 
 
 # ---------------------------------------------------------------------------
@@ -166,7 +175,7 @@ def cosim_mix(cfg, mix: EpisodeMix, n_chiplets: int,
         ttft = step = energy = toks = lat = pre_b = dec_b = 0.0
         n = 0
         for ep in mix.episodes:
-            w = workload_for(cfg, ep)
+            w = workload_for(cfg, ep, mix)
             g = simulate_generation(w, n_chiplets, ep.prompt_len, ep.gen_len,
                                     arch=arch, calib=calib, batch=batch)
             n += ep.count
@@ -207,6 +216,8 @@ def cosim_from_engine(engine, cfg=None, n_chiplets: int = 64,
                     "decode_tokens": mix.decode_tokens,
                     "prefill_chunk": mix.prefill_chunk,
                     "max_batch": mix.max_batch,
+                    "weight_bits": mix.weight_bits,
+                    "kv_bits": mix.kv_bits,
                     "max_stall_tokens": mix.max_stall_tokens,
                     "mean_active_slots": mix.mean_active_slots,
                     "effective_batch": mix.effective_batch,
@@ -269,7 +280,7 @@ def generation_phases(cfg, mix: EpisodeMix, *, samples: int = 1,
         batch = mix.effective_batch
     phases: list[Phase] = []
     for ep in mix.episodes:
-        w = workload_for(cfg, ep)
+        w = workload_for(cfg, ep, mix)
         n_chunks = _interleave_chunks(mix, ep.prompt_len)
         for p in prefill_phases(w):
             phases.append(_scale_phase(p, 1.0 / n_chunks,

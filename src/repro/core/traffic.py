@@ -39,6 +39,17 @@ the active slots.  ``kv_pos`` may be a single position (every slot at the
 same depth) or a sequence of per-slot positions; KV-read traffic is linear
 in the *sum* of slot positions.  ``batch=1`` is bit-identical to the
 unbatched step.
+
+**Precision plane**: a workload carries ``weight_bits`` / ``kv_bits``
+(default 16 — the paper's fp16 assumption, ``BYTES``).  Weight-streaming
+terms scale with ``weight_bits`` and KV-cache terms with ``kv_bits``, so
+the Plane-A quantisation plane (``repro.quant``: int8 / packed-int4
+weights, quantised slot-pool KV) propagates into what *bytes* move on the
+fabric, not just when they move.  Quantised terms add the f32 scale
+overhead the Plane-A layout actually stores (one scale per output channel
+for weights, one per (token, head) KV row); at 16 bits every term is
+bit-identical to the pre-quantisation model — the Table-4 calibration
+contract is untouched.
 """
 from __future__ import annotations
 
@@ -48,7 +59,10 @@ import numbers
 
 from repro.config import ModelConfig
 
-BYTES = 2  # fp16 operands, consistent with the paper's 16-bit assumption
+BYTES = 2  # fp16 *activation* operands (the paper's 16-bit assumption);
+#            weight / KV-cache terms use Workload.weight_bits / kv_bits
+
+SCALE_BYTES = 4  # f32 quantisation scales (repro.quant stores f32 planes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +78,8 @@ class Workload:
     enc_dec: bool = False
     parallel_mha_ff: bool = False        # GPT-J (paper eq. 9)
     n_enc_layers: int = 0                # encoder share of n_layers (enc-dec)
+    weight_bits: int = 16                # streamed-weight precision (16 = fp)
+    kv_bits: int = 16                    # KV-cache precision (16 = fp)
 
     def __post_init__(self):
         # direct construction with enc_dec=True but no declared encoder
@@ -71,6 +87,9 @@ class Workload:
         # silently treating every layer as a decoder layer
         if self.enc_dec and self.n_enc_layers == 0:
             object.__setattr__(self, "n_enc_layers", self.n_layers // 2)
+        for bits in (self.weight_bits, self.kv_bits):
+            if bits not in (4, 8, 16):
+                raise ValueError(f"precision must be 4, 8 or 16 bits, got {bits}")
 
     @property
     def n_dec_layers(self) -> int:
@@ -82,8 +101,19 @@ class Workload:
         """K/V share vs MHA (GQA/MQA collapse the cached heads)."""
         return self.n_kv_heads / self.n_heads
 
+    def weight_dram_bytes(self, k_dim: int, n_dim: int) -> float:
+        """DRAM bytes to stream one (k_dim, n_dim) weight matrix at this
+        workload's weight precision.  Quantised weights add the f32
+        per-output-channel scale plane (``repro.quant`` layout); at 16 bits
+        the term is bit-identical to ``k_dim * n_dim * BYTES``."""
+        base = k_dim * n_dim * (self.weight_bits / 8)
+        if self.weight_bits < 16:
+            base += n_dim * SCALE_BYTES
+        return base
+
     @classmethod
-    def from_config(cls, cfg: ModelConfig, seq_len: int) -> "Workload":
+    def from_config(cls, cfg: ModelConfig, seq_len: int, *,
+                    weight_bits: int = 16, kv_bits: int = 16) -> "Workload":
         return cls(
             name=cfg.name, d_model=cfg.d_model,
             n_layers=cfg.n_layers + cfg.n_encoder_layers,
@@ -91,7 +121,8 @@ class Workload:
             d_ff=cfg.d_ff or 4 * cfg.d_model, vocab=cfg.vocab_size,
             seq_len=seq_len, enc_dec=cfg.n_encoder_layers > 0,
             parallel_mha_ff=cfg.parallel_block,
-            n_enc_layers=cfg.n_encoder_layers)
+            n_enc_layers=cfg.n_encoder_layers,
+            weight_bits=weight_bits, kv_bits=kv_bits)
 
 
 @dataclasses.dataclass
@@ -121,7 +152,7 @@ def transformer_phases(w: Workload) -> list[Phase]:
     )]
 
     # ② load W_K,Q,V through MCs + ③ KQV compute on SMs (eqs 2-3)
-    w_kqv = (1 + 2 * kv_frac) * D * D * BYTES          # MQA shrinks K/V loads
+    w_kqv = w.weight_dram_bytes(D, (1 + 2 * kv_frac) * D)  # MQA shrinks K/V
     kqv = Phase(
         "kqv",
         sm_flops=2.0 * N * D * D * (1 + 2 * kv_frac),
@@ -134,7 +165,7 @@ def transformer_phases(w: Workload) -> list[Phase]:
         "score",
         sm_flops=2.0 * N * N * D * 2 + 2.0 * N * D * D,
         sm_mc_bytes=2 * N * D * BYTES,
-        dram_bytes=D * D * BYTES,
+        dram_bytes=w.weight_dram_bytes(D, D),
         repeat=w.n_layers,
     )
     # ⑤ feed-forward on the ReRAM macro (two FC layers, weight-stationary)
@@ -154,7 +185,7 @@ def transformer_phases(w: Workload) -> list[Phase]:
             "cross",
             sm_flops=2.0 * N * N * D + 2.0 * N * D * D * (1 + 2 * kv_frac) / 2,
             sm_mc_bytes=2 * N * D * BYTES,
-            dram_bytes=D * D * BYTES,
+            dram_bytes=w.weight_dram_bytes(D, D),
             repeat=w.n_dec_layers,
         )
         phases.append(cross)
@@ -171,8 +202,13 @@ def transformer_phases(w: Workload) -> list[Phase]:
 def kv_cache_bytes_per_layer(w: Workload, kv_len: int) -> float:
     """K + V cache rows for ``kv_len`` positions of one (decoder) layer —
     the quantity streamed DRAM→MC→SM at every decode step and written back
-    during prefill.  GQA/MQA shrink it by ``kv_frac``."""
-    return 2.0 * kv_len * w.d_model * w.kv_frac * BYTES
+    during prefill.  GQA/MQA shrink it by ``kv_frac``; ``w.kv_bits``
+    shrinks the element bytes (quantised rows add the per-(token, head)
+    f32 scale the Plane-A pool stores; 16 bits is bit-identical to fp)."""
+    base = 2.0 * kv_len * w.d_model * w.kv_frac * (w.kv_bits / 8)
+    if w.kv_bits < 16:
+        base += 2.0 * kv_len * w.n_kv_heads * SCALE_BYTES
+    return base
 
 
 def prefill_phases(w: Workload) -> list[Phase]:
@@ -216,9 +252,10 @@ def decode_weight_stream_bytes(w: Workload) -> float:
     projection per decoder layer, + the cross output projection for
     enc-dec stacks).  Everything else in the step scales per slot."""
     D = w.d_model
-    per_layer = (1 + 2 * w.kv_frac) * D * D * BYTES + D * D * BYTES
+    per_layer = (w.weight_dram_bytes(D, (1 + 2 * w.kv_frac) * D)
+                 + w.weight_dram_bytes(D, D))
     if w.enc_dec:
-        per_layer += D * D * BYTES
+        per_layer += w.weight_dram_bytes(D, D)
     return per_layer * w.n_dec_layers
 
 
@@ -241,7 +278,7 @@ def decode_step_phases(w: Workload, kv_pos, batch: int = 1) -> list[Phase]:
     kv_frac = w.kv_frac
     kv_read = kv_cache_bytes_per_layer(w, sum_pos)   # Σ per-slot cache reads
     kv_write = kv_cache_bytes_per_layer(w, 1)
-    w_kqv = (1 + 2 * kv_frac) * D * D * BYTES        # streamed once per step
+    w_kqv = w.weight_dram_bytes(D, (1 + 2 * kv_frac) * D)  # once per step
 
     phases = [Phase(
         "embed_dec",                      # per-slot 1-token embedding lookup
@@ -259,7 +296,7 @@ def decode_step_phases(w: Workload, kv_pos, batch: int = 1) -> list[Phase]:
     phases.append(Phase(
         "score_dec",                      # q·Kᵀ, softmax, ·V over each cache
         sm_flops=2.0 * sum_pos * D * 2 + B * 2.0 * D * D,
-        dram_bytes=D * D * BYTES + kv_read,
+        dram_bytes=w.weight_dram_bytes(D, D) + kv_read,
         sm_mc_bytes=B * 2 * D * BYTES,
         repeat=k,
     ))
@@ -268,7 +305,7 @@ def decode_step_phases(w: Workload, kv_pos, batch: int = 1) -> list[Phase]:
         phases.append(Phase(
             "cross_dec",                  # attend over the frozen cross-KV
             sm_flops=B * (2.0 * w.seq_len * D * 2 + 2.0 * D * D),
-            dram_bytes=D * D * BYTES + B * enc_kv,
+            dram_bytes=w.weight_dram_bytes(D, D) + B * enc_kv,
             sm_mc_bytes=B * 2 * D * BYTES,
             repeat=k,
         ))

@@ -36,6 +36,38 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.flash_attention.common import NEG_INF, block_size, vmem
+from repro.quant.core import unpack_int4
+
+
+def _decode_mask(qpos_ref, kvpos_ref, window: int):
+    """(1, bk) valid+causal(+window) mask from explicit positions."""
+    qp = qpos_ref[0, 0]                               # scalar int32
+    kp = kvpos_ref[...]                               # (1, bk)
+    mask = (kp >= 0) & (kp <= qp)                     # valid + causal
+    if window:
+        mask &= qp - kp < window
+    return mask
+
+
+def _online_update(q, k, v, mask, m_scr, l_scr, acc_scr, *,
+                   scale: float, softcap: float):
+    """One K/V block of the online-softmax sweep (shared by the fp and
+    quantised-KV decode kernels; operands already dequantised f32)."""
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (rep, bk)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask, s, NEG_INF)                   # (1,bk) -> (rep,bk)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
 
 
 def _decode_kernel(
@@ -60,11 +92,7 @@ def _decode_kernel(
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    qp = qpos_ref[0, 0]                               # scalar int32
-    kp = kvpos_ref[...]                               # (1, bk)
-    mask = (kp >= 0) & (kp <= qp)                     # valid + causal
-    if window:
-        mask &= qp - kp < window
+    mask = _decode_mask(qpos_ref, kvpos_ref, window)
 
     # whole block masked (empty slot / outside the window) -> skip the MXU
     @pl.when(jnp.any(mask))
@@ -72,22 +100,8 @@ def _decode_kernel(
         q = q_ref[0, 0].astype(jnp.float32)           # (rep, hd)
         k = k_ref[0, 0].astype(jnp.float32)           # (bk, hd)
         v = v_ref[0, 0].astype(jnp.float32)           # (bk, hdv)
-
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale   # (rep, bk)
-        if softcap:
-            s = softcap * jnp.tanh(s / softcap)
-        s = jnp.where(mask, s, NEG_INF)               # (1,bk) -> (rep,bk)
-
-        m_prev = m_scr[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)
-        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
-        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-        m_scr[...] = m_new
+        _online_update(q, k, v, mask, m_scr, l_scr, acc_scr,
+                       scale=scale, softcap=softcap)
 
     @pl.when(ik == nk - 1)
     def _finalize():
@@ -151,5 +165,137 @@ def flash_decode_fwd(
         ],
         interpret=interpret,
     )(qf, kt, vt, qp, kp)
+
+    return out.reshape(B, 1, Hq, hdv)
+
+
+# ---------------------------------------------------------------------------
+# quantised-KV variant
+# ---------------------------------------------------------------------------
+
+def _decode_quant_kernel(
+    q_ref,                        # (1, 1, rep, hd)
+    kq_ref,                       # (1, 1, bk, hd')  int8 codes (hd' = hd/pack)
+    ks_ref,                       # (1, 1, bk, 1)    f32 per-(entry, head)
+    vq_ref,                       # (1, 1, bk, hdv')
+    vs_ref,                       # (1, 1, bk, 1)
+    qpos_ref,                     # (1, 1)
+    kvpos_ref,                    # (1, bk)
+    o_ref,                        # (1, 1, rep, hdv)
+    m_scr, l_scr, acc_scr,
+    *,
+    scale: float,
+    window: int,
+    softcap: float,
+    kv_bits: int,
+):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    mask = _decode_mask(qpos_ref, kvpos_ref, window)
+
+    @pl.when(jnp.any(mask))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)           # (rep, hd)
+        kq = kq_ref[0, 0]                             # (bk, hd') int8
+        vq = vq_ref[0, 0]
+        if kv_bits == 4:
+            # adjacent-pair nibble unpack along the head dim — the packing
+            # contract of repro.quant.core (single source of truth)
+            kq = unpack_int4(kq, axis=-1)
+            vq = unpack_int4(vq, axis=-1)
+        # in-VMEM dequant: the pool streams HBM→VMEM at 1 or 0.5 B/element
+        k = kq.astype(jnp.float32) * ks_ref[0, 0].astype(jnp.float32)
+        v = vq.astype(jnp.float32) * vs_ref[0, 0].astype(jnp.float32)
+        _online_update(q, k, v, mask, m_scr, l_scr, acc_scr,
+                       scale=scale, softcap=softcap)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)               # empty slot -> zeros
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode_quant_fwd(
+    q: jax.Array,        # (B, 1, Hq, hd)
+    k_q: jax.Array,      # (B, Skv, Hkv, hd')  int8 codes (hd' = hd or hd/2)
+    k_s: jax.Array,      # (B, Skv, Hkv) f32 per-(entry, head) scales
+    v_q: jax.Array,      # (B, Skv, Hkv, hdv')
+    v_s: jax.Array,      # (B, Skv, Hkv)
+    *,
+    kv_bits: int,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode attention over a *quantised* slot pool: same grid, masking and
+    online-softmax sweep as :func:`flash_decode_fwd`, but the K/V blocks
+    arrive as int8 codes (packed two-per-byte for ``kv_bits=4``) with
+    per-(entry, head) scales and are dequantised in VMEM — an fp copy of
+    the cache never exists outside the per-block scratch."""
+    if kv_bits not in (4, 8):
+        raise ValueError(f"kv_bits must be 4 or 8, got {kv_bits}")
+    pack = 2 if kv_bits == 4 else 1
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, hdq = k_q.shape
+    hdv = v_q.shape[-1] * pack
+    if Sq != 1:
+        raise ValueError(f"decode kernel needs Sq == 1, got {Sq}")
+    if hdq * pack != hd:
+        raise ValueError(f"codes head dim {hdq} != {hd} at {kv_bits} bits")
+    rep = Hq // Hkv
+    if rep * Hkv != Hq:
+        raise ValueError(f"Hq ({Hq}) must be a multiple of Hkv ({Hkv})")
+    scale = scale if scale is not None else hd ** -0.5
+    bk = block_size(block_k, Skv)
+    if Skv % bk:
+        raise ValueError(f"block size ({bk}) must divide Skv ({Skv})")
+
+    qf = q[:, 0].reshape(B, Hkv, rep, hd)
+    kqt = k_q.transpose(0, 2, 1, 3)               # (B, Hkv, Skv, hd')
+    vqt = v_q.transpose(0, 2, 1, 3)
+    kst = k_s.transpose(0, 2, 1)[..., None].astype(jnp.float32)
+    vst = v_s.transpose(0, 2, 1)[..., None].astype(jnp.float32)
+    qp = q_pos.astype(jnp.int32).reshape(B, 1)
+    kp = kv_pos.astype(jnp.int32)
+
+    grid = (B, Hkv, Skv // bk)
+    kern = functools.partial(
+        _decode_quant_kernel, scale=scale, window=window, softcap=softcap,
+        kv_bits=kv_bits)
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hdq), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, 1), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, v_q.shape[-1]),
+                         lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, 1), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, ik: (b, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, ik: (b, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hdv), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hdv), q.dtype),
+        scratch_shapes=[
+            vmem((rep, 1)),
+            vmem((rep, 1)),
+            vmem((rep, hdv)),
+        ],
+        interpret=interpret,
+    )(qf, kqt, kst, vqt, vst, qp, kp)
 
     return out.reshape(B, 1, Hq, hdv)

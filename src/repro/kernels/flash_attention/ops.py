@@ -63,19 +63,27 @@ def _decode_ok(q, k, causal, q_pos, kv_pos):
 
 def attention(
     q: jax.Array,            # (B, Sq, Hq, hd)
-    k: jax.Array,            # (B, Skv, Hkv, hd)
+    k: jax.Array,            # (B, Skv, Hkv, hd)   (int8 codes when k_scale=)
     v: jax.Array,            # (B, Skv, Hkv, hdv)
     *,
     q_pos: Optional[jax.Array] = None,
     kv_pos: Optional[jax.Array] = None,
     kv_valid: Optional[jax.Array] = None,
     segments: Optional[jax.Array] = None,   # (B, S) packed prompt ids, -1 pad
+    k_scale: Optional[jax.Array] = None,    # (B, Skv, Hkv) quantised-KV scales
+    v_scale: Optional[jax.Array] = None,
+    kv_bits: int = 0,                       # 8 | 4 when k_scale/v_scale given
     causal: bool = True,
     window: int = 0,
     softcap: float = 0.0,
     scale: Optional[float] = None,
     impl: str = "auto",
 ) -> jax.Array:
+    """``k_scale``/``v_scale`` switch K/V to the quantised-KV convention:
+    ``k``/``v`` carry int8 codes (packed two-per-byte along the head dim for
+    ``kv_bits=4``) with per-(entry, head) scales.  The decode-shaped Pallas
+    route runs :func:`..decode.flash_decode_quant_fwd` (in-VMEM dequant);
+    every other route dequantises up front and proceeds as fp."""
     if impl not in ("ref", "auto", "flash", "pallas", "pallas_interpret"):
         raise ValueError(f"unknown attention impl {impl!r}")
     on_tpu = jax.default_backend() == "tpu"
@@ -83,6 +91,20 @@ def attention(
         impl = "pallas" if on_tpu else "ref"
     if impl == "flash":
         impl = "pallas" if on_tpu else "pallas_interpret"
+
+    if k_scale is not None:
+        if kv_bits not in (4, 8):
+            raise ValueError(f"quantised KV needs kv_bits 4 or 8, got {kv_bits}")
+        if impl in ("pallas", "pallas_interpret") and \
+                _decode_ok(q, k, causal, q_pos, kv_pos):
+            kp = kv_pos if kv_valid is None else jnp.where(kv_valid, kv_pos, -1)
+            return _decode.flash_decode_quant_fwd(
+                q, k, k_scale, v, v_scale, kv_bits=kv_bits, q_pos=q_pos,
+                kv_pos=kp, window=window, softcap=softcap, scale=scale,
+                interpret=impl == "pallas_interpret")
+        from repro.quant.core import dequantize_kv
+        k = dequantize_kv(k, k_scale, kv_bits).astype(q.dtype)
+        v = dequantize_kv(v, v_scale, kv_bits).astype(q.dtype)
 
     if impl in ("pallas", "pallas_interpret"):
         interpret = impl == "pallas_interpret"

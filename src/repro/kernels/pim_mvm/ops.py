@@ -1,37 +1,20 @@
-"""jit'd dispatch wrapper + quantiser for the PIM-MVM kernel.
+"""jit'd dispatch wrapper for the PIM-MVM kernel.
 
-``quantize_weights`` is the "programming the crossbars" step: done once,
-offline, per static weight matrix (the paper's weight-stationary claim);
-``pim_mvm`` is the streaming execute step.
+``quantize_weights`` — the "programming the crossbars" step: done once,
+offline, per static weight matrix (the paper's weight-stationary claim) —
+lives in :mod:`repro.quant.core` (the repo's single source of truth for
+scales/rounding) and is re-exported here; ``pim_mvm`` is the streaming
+execute step.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.pim_mvm import kernel as _kernel
 from repro.kernels.pim_mvm.ref import pim_mvm_ref
+from repro.quant.core import quantize_weights  # noqa: F401  (re-export)
 
 XBAR = _kernel.XBAR
-
-
-def quantize_weights(w: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """(K, N) float -> (int8 values, (K/128, N/128) f32 per-tile scales).
-
-    Symmetric per-crossbar-tile quantisation: each 128×128 tile gets one
-    scale = max|w|/127 — the granularity a bit-sliced crossbar imposes
-    (all cells in a crossbar share the DAC/ADC range).
-    """
-    K, N = w.shape
-    if K % XBAR or N % XBAR:
-        raise ValueError(f"weights {(K, N)} must tile {XBAR}x{XBAR} crossbars")
-    t = w.astype(jnp.float32).reshape(K // XBAR, XBAR, N // XBAR, XBAR)
-    t = t.transpose(0, 2, 1, 3)                      # (Kt, Nt, 128, 128)
-    scales = jnp.max(jnp.abs(t), axis=(2, 3)) / 127.0
-    scales = jnp.maximum(scales, 1e-12)
-    q = jnp.round(t / scales[:, :, None, None]).astype(jnp.int8)
-    q = q.transpose(0, 2, 1, 3).reshape(K, N)
-    return q, scales
 
 
 def pim_mvm(x, wq, scales, *, impl: str = "auto", **blocks):

@@ -27,6 +27,10 @@ def main():
                     help="device decode iterations per host sync")
     ap.add_argument("--host-loop", action="store_true",
                     help="use the legacy host-looped step (fused=False)")
+    ap.add_argument("--weight-bits", type=int, default=0, choices=[0, 4, 8],
+                    help="weight-only quantisation (0 = native fp)")
+    ap.add_argument("--kv-bits", type=int, default=0, choices=[0, 4, 8],
+                    help="quantised slot-pool KV cache (0 = fp pool)")
     args = ap.parse_args()
 
     if args.devices:
@@ -53,7 +57,8 @@ def main():
         max_batch=args.max_batch, kv_len=args.kv_len,
         max_new_tokens=args.max_new_tokens, temperature=args.temperature,
         seed=args.seed, impl=args.impl, fused=not args.host_loop,
-        decode_chunk=args.decode_chunk))
+        decode_chunk=args.decode_chunk,
+        weight_bits=args.weight_bits, kv_bits=args.kv_bits))
 
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
@@ -63,7 +68,9 @@ def main():
 
     engine.run_until_drained()
     stats = engine.stats()
-    print(f"arch={cfg.name} requests={stats['finished']} "
+    bits = (f"w{args.weight_bits or 'fp'}/kv{args.kv_bits or 'fp'} "
+            if (args.weight_bits or args.kv_bits) else "")
+    print(f"arch={cfg.name} {bits}requests={stats['finished']} "
           f"tokens={stats['tokens']} "
           f"throughput={stats['tokens_per_s']:.1f} tok/s "
           f"ttft={stats['mean_ttft_s']*1e3:.0f}ms "

@@ -31,6 +31,9 @@ from repro.kernels.flash_attention.common import NEG_INF
 from repro.kernels.flash_attention.ops import attention as flash_attention
 from repro.models.modules import apply_rope, dense_init, rmsnorm
 from repro.parallel import constrain
+from repro.quant.core import (dequantize_kv, kv_cache_bits, quantize_kv,
+                              quantize_kv_cache)
+from repro.quant.ops import qdense
 
 
 # ---------------------------------------------------------------------------
@@ -81,7 +84,13 @@ def init_mla(key, cfg, *, dtype=jnp.float32):
 # KV caches
 # ---------------------------------------------------------------------------
 
-def init_kv_cache(cfg, kind: str, batch: int, kv_len: int, dtype, n_cross: int = 0):
+def init_kv_cache(cfg, kind: str, batch: int, kv_len: int, dtype,
+                  n_cross: int = 0, kv_bits: int = 0):
+    """``kv_bits`` (0 | 8 | 4): 0 keeps the fp pool; 8/4 allocate the
+    *quantised* slot pool — int8 code planes (packed two-per-byte along the
+    head dim for int4) plus per-(entry, head) f32 scales, quantised on
+    commit and dequantised on read.  Quantisation covers the self-attention
+    k/v pools; MLA latent and cross caches stay fp (documented)."""
     Hkv, hd, hdv = cfg.n_kv_heads, cfg.head_dim, cfg.v_head_dim
     if cfg.is_mla and kind != "cross":
         return {
@@ -95,6 +104,19 @@ def init_kv_cache(cfg, kind: str, batch: int, kv_len: int, dtype, n_cross: int =
             "v": jnp.zeros((batch, n_cross, Hkv, hdv), dtype),
         }
     cap = kv_len if kind == "global" else min(cfg.window, kv_len)
+    if kv_bits in (4, 8):
+        pack = 2 if kv_bits == 4 else 1
+        if hd % pack or hdv % pack:
+            raise ValueError(f"int4 KV needs even head dims, got {hd}/{hdv}")
+        return {
+            "k_q": jnp.zeros((batch, cap, Hkv, hd // pack), jnp.int8),
+            "k_s": jnp.zeros((batch, cap, Hkv), jnp.float32),
+            "v_q": jnp.zeros((batch, cap, Hkv, hdv // pack), jnp.int8),
+            "v_s": jnp.zeros((batch, cap, Hkv), jnp.float32),
+            "pos": jnp.full((batch, cap), -1, jnp.int32),
+        }
+    if kv_bits:
+        raise ValueError(f"kv_bits must be 0, 4 or 8, got {kv_bits}")
     return {
         "k": jnp.zeros((batch, cap, Hkv, hd), dtype),
         "v": jnp.zeros((batch, cap, Hkv, hdv), dtype),
@@ -157,25 +179,40 @@ def _pad_pos(pos, cap):
     return jnp.concatenate([pos, jnp.full((B, cap - S), -1, jnp.int32)], axis=1)
 
 
-def _ring_write(cache, new_k, new_v, pos):
+def _ring_write(cache, new_leaves: dict, pos):
     """Write S tokens at per-(row, token) ``pos`` into the cache (ring for
-    local, direct for global).  ``pos < 0`` entries are dropped — dead pool
-    slots and chunk pads never touch the cache.  Within one call only the
-    last ``cap`` positions of a row survive the ring, so those are the only
-    ones written (keeps scatter indices unique per row)."""
-    cap = cache["k"].shape[1]
+    local, direct for global).  ``new_leaves`` maps cache leaf names to the
+    (B, S, ...) values to commit — ``{"k", "v"}`` for fp pools, the
+    code/scale planes for quantised ones — so one scatter covers both
+    layouts.  ``pos < 0`` entries are dropped — dead pool slots and chunk
+    pads never touch the cache.  Within one call only the last ``cap``
+    positions of a row survive the ring, so those are the only ones written
+    (keeps scatter indices unique per row)."""
+    cap = cache["pos"].shape[1]
     B, S = pos.shape
     row_max = jnp.max(jnp.where(pos >= 0, pos, -1), axis=1, keepdims=True)
     valid = (pos >= 0) & (pos > row_max - cap)
     slot = jnp.where(valid, pos % cap, cap)          # cap = out of bounds
     bidx = jnp.arange(B)[:, None]
-    return {
-        "k": cache["k"].at[bidx, slot].set(
-            new_k.astype(cache["k"].dtype), mode="drop"),
-        "v": cache["v"].at[bidx, slot].set(
-            new_v.astype(cache["v"].dtype), mode="drop"),
-        "pos": cache["pos"].at[bidx, slot].set(pos, mode="drop"),
-    }
+    new = {name: cache[name].at[bidx, slot].set(
+        leaf.astype(cache[name].dtype), mode="drop")
+        for name, leaf in new_leaves.items()}
+    new["pos"] = cache["pos"].at[bidx, slot].set(pos, mode="drop")
+    return new
+
+
+def _commit_kv(cache, new_k, new_v, pos):
+    """Commit fresh K/V rows into the slot pool: fp pools write the rows
+    as-is; quantised pools quantise on commit (one symmetric scale per
+    (token, head) row, int8 codes, packed for int4) so an fp copy of the
+    cache never exists between steps."""
+    if "k_q" in cache:
+        bits = kv_cache_bits(cache, new_k.shape[-1])
+        k_q, k_s = quantize_kv(new_k, bits)
+        v_q, v_s = quantize_kv(new_v, bits)
+        return _ring_write(cache, {"k_q": k_q, "k_s": k_s,
+                                   "v_q": v_q, "v_s": v_s}, pos)
+    return _ring_write(cache, {"k": new_k, "v": new_v}, pos)
 
 
 # ---------------------------------------------------------------------------
@@ -197,6 +234,7 @@ def apply_attention(
     kv_cap: int = 0,         # prefill: cache capacity to allocate (>= S)
     length=None,             # prefill: true prompt length of a padded stream
     segments=None,           # prefill: (B, S) packed prompt ids, -1 = pad
+    kv_bits: int = 0,        # prefill: 8/4 returns a quantised cache
 ):
     B, S, D = x.shape
     Hq, Hkv, hd, hdv = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.v_head_dim
@@ -205,7 +243,7 @@ def apply_attention(
     window = cfg.window if kind == "local" else 0
     theta = cfg.rope_theta_local if (kind == "local" and cfg.rope_theta_local) else cfg.rope_theta
 
-    q = x @ constrain(p["wq"].astype(dt), "weight_full")
+    q = qdense(x, p["wq"], dt, "weight_full")
     if "bq" in p:
         q = q + p["bq"].astype(dt)
     q = q.reshape(B, S, Hq, hd)
@@ -229,8 +267,8 @@ def apply_attention(
                                   kv_pos=kv_pos, kv_valid=None)
         else:
             src = cross_src.astype(dt)
-            k = src @ p["wk"].astype(dt)
-            v = src @ p["wv"].astype(dt)
+            k = qdense(src, p["wk"], dt)
+            v = qdense(src, p["wv"], dt)
             if "bk" in p:
                 k = k + p["bk"].astype(dt)
                 v = v + p["bv"].astype(dt)
@@ -240,11 +278,11 @@ def apply_attention(
             q = constrain(q, "act_heads")
             out = flash_attention(q, k, v, causal=False,
                                   softcap=cfg.attn_softcap, impl=impl)
-        out = out.reshape(B, S, Hq * hdv) @ p["wo"].astype(dt)
+        out = qdense(out.reshape(B, S, Hq * hdv), p["wo"], dt)
         return out, new_cache
 
-    k = x @ constrain(p["wk"].astype(dt), "weight_full")
-    v = x @ constrain(p["wv"].astype(dt), "weight_full")
+    k = qdense(x, p["wk"], dt, "weight_full")
+    v = qdense(x, p["wv"], dt, "weight_full")
     if "bk" in p:
         k = k + p["bk"].astype(dt)
         v = v + p["bv"].astype(dt)
@@ -282,25 +320,45 @@ def apply_attention(
                     new_cache = {"k": _pad_cache(k, cap),
                                  "v": _pad_cache(v, cap),
                                  "pos": _pad_pos(pos, cap)}
+            if kv_bits:
+                # quantise the freshly-built cache so it matches the
+                # engine's quantised slot pool (empty entries stay zeros)
+                new_cache = quantize_kv_cache(new_cache, kv_bits)
     else:  # decode (S == 1 — Pallas decode kernel) / chunk (S-token write)
-        new_cache = _ring_write(cache, k, v, pos)
+        quant = "k_q" in cache
+        bits = kv_cache_bits(cache, hd) if quant else 0
+        new_cache = _commit_kv(cache, k, v, pos)
+        qkw = {}
         if mode == "chunk":
             # attend to the PRE-write cache plus the in-stream chunk: the
             # chunk write may evict ring entries that early chunk queries
             # still need (their window reaches back before the chunk), and
-            # cache positions are all < the chunk's, so no duplicates
-            kc = jnp.concatenate([cache["k"].astype(k.dtype), k], axis=1)
-            vc = jnp.concatenate([cache["v"].astype(v.dtype), v], axis=1)
+            # cache positions are all < the chunk's, so no duplicates.
+            # A quantised cache is dequantised for the read (the committed
+            # pool stays int8; the in-stream chunk attends at fp)
+            if quant:
+                ck = dequantize_kv(cache["k_q"], cache["k_s"], bits)
+                cv = dequantize_kv(cache["v_q"], cache["v_s"], bits)
+            else:
+                ck, cv = cache["k"], cache["v"]
+            kc = jnp.concatenate([ck.astype(k.dtype), k], axis=1)
+            vc = jnp.concatenate([cv.astype(v.dtype), v], axis=1)
             kv_pos = jnp.concatenate([cache["pos"], pos], axis=1)
+        elif quant:
+            # dequantise-on-read decode: codes + scales go straight to the
+            # kernel route (in-VMEM dequant); the fp cache never exists
+            kc, vc, kv_pos = new_cache["k_q"], new_cache["v_q"], new_cache["pos"]
+            qkw = dict(k_scale=new_cache["k_s"], v_scale=new_cache["v_s"],
+                       kv_bits=bits)
         else:
             kc, vc, kv_pos = new_cache["k"], new_cache["v"], new_cache["pos"]
         out = flash_attention(
             q, kc, vc,
             q_pos=pos, kv_pos=kv_pos, kv_valid=kv_pos >= 0,
-            causal=causal, window=window, softcap=cfg.attn_softcap, impl=impl)
+            causal=causal, window=window, softcap=cfg.attn_softcap,
+            impl=impl, **qkw)
 
-    out = out.reshape(B, S, Hq * hdv) @ constrain(p["wo"].astype(dt),
-                                                  "weight_full")
+    out = qdense(out.reshape(B, S, Hq * hdv), p["wo"], dt, "weight_full")
     return out, new_cache
 
 
@@ -396,5 +454,5 @@ def apply_mla(p, x, *, cfg, mode, pos, cache=None, impl="auto", kv_cap: int = 0,
         ctx = jnp.einsum("bhqk,bkr->bqhr", w, ckv_all)
         out = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv)
 
-    out = out.reshape(B, S, H * dv) @ p["wo"].astype(dt)
+    out = qdense(out.reshape(B, S, H * dv), p["wo"], dt)
     return out, new_cache

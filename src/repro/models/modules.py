@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.parallel import constrain
+from repro.quant.ops import qdense
 
 # ---------------------------------------------------------------------------
 # init helpers
@@ -124,14 +125,14 @@ def apply_mlp(p, x, cfg):
     act = activation(cfg.act)
     dt = x.dtype
     if cfg.glu:
-        h = act(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+        h = act(qdense(x, p["w_gate"], dt)) * qdense(x, p["w_up"], dt)
     else:
-        h = x @ p["w_up"].astype(dt)
+        h = qdense(x, p["w_up"], dt)
         if "b_up" in p:
             h = h + p["b_up"].astype(dt)
         h = act(h)
     h = constrain(h, "act_ff")
-    y = h @ p["w_down"].astype(dt)
+    y = qdense(h, p["w_down"], dt)
     if "b_down" in p:
         y = y + p["b_down"].astype(dt)
     return y

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from repro.models.modules import dense_init
 from repro.models.ssm import causal_conv
 from repro.parallel import constrain
+from repro.quant.ops import qdense
 
 _C = 8.0  # RG-LRU temperature (Griffin paper)
 
@@ -68,7 +69,7 @@ def apply_rglru(p, x, *, cfg, mode, cache=None, length=None):
     B, S, D = x.shape
     dt = x.dtype
 
-    g = jax.nn.gelu(x @ p["w_gate"].astype(dt), approximate=True)
+    g = jax.nn.gelu(qdense(x, p["w_gate"], dt), approximate=True)
     u = x @ p["w_branch"].astype(dt)
     conv_state = cache["conv"] if cache is not None and mode == "decode" else None
     u, new_conv = causal_conv(u, p["conv_w"], p["conv_b"], conv_state,

@@ -20,6 +20,7 @@ from repro.models import modules as M
 from repro.models.attention import (
     apply_attention, apply_mla, init_attention, init_mla, init_kv_cache)
 from repro.models.moe import apply_moe, init_moe, router_aux_loss
+from repro.quant.ops import qdense
 from repro.models.rglru import apply_rglru, init_rglru, init_rglru_cache
 from repro.models.ssm import apply_mamba, init_mamba, init_ssm_cache
 from repro.parallel import constrain
@@ -154,7 +155,8 @@ def init_params(cfg: ModelConfig, key, *, param_dtype=jnp.float32):
 # ---------------------------------------------------------------------------
 
 def _apply_layer(p, x, *, cfg, kind, use_moe, mode, pos, cache, cross_src,
-                 impl, causal, kv_cap=0, length=None, segments=None):
+                 impl, causal, kv_cap=0, length=None, segments=None,
+                 kv_bits=0):
     aux = jnp.zeros((), jnp.float32)
     new_cache = None
     if kind == "ssm":
@@ -187,7 +189,8 @@ def _apply_layer(p, x, *, cfg, kind, use_moe, mode, pos, cache, cross_src,
         c_self = cache["attn"] if cache is not None else None
         out, c = apply_attention(p["attn"], h, cfg=cfg, kind=kind, mode=mode,
                                  pos=pos, cache=c_self, impl=impl, causal=causal,
-                                 kv_cap=kv_cap, length=length, segments=segments)
+                                 kv_cap=kv_cap, length=length, segments=segments,
+                                 kv_bits=kv_bits)
         x = constrain(x + out + M.apply_mlp(p["mlp"], h, cfg), "residual")
         return x, ({"attn": c} if mode != "train" else None), aux
 
@@ -200,7 +203,8 @@ def _apply_layer(p, x, *, cfg, kind, use_moe, mode, pos, cache, cross_src,
         c_self = cache["attn"] if cache is not None else None
         out, c = apply_attention(p["attn"], h, cfg=cfg, kind=kind, mode=mode,
                                  pos=pos, cache=c_self, impl=impl, causal=causal,
-                                 kv_cap=kv_cap, length=length, segments=segments)
+                                 kv_cap=kv_cap, length=length, segments=segments,
+                                 kv_bits=kv_bits)
     if cfg.post_norm:
         out = M.apply_norm(p["ln1_post"], out)
     x = constrain(x + out, "residual")
@@ -239,7 +243,8 @@ def _apply_layer(p, x, *, cfg, kind, use_moe, mode, pos, cache, cross_src,
 # ---------------------------------------------------------------------------
 
 def _apply_block(p_blk, x, cache_blk, *, cfg, spec, mode, pos, cross_src,
-                 impl, causal, kv_cap=0, length=None, segments=None):
+                 impl, causal, kv_cap=0, length=None, segments=None,
+                 kv_bits=0):
     new_cache = {}
     aux_total = jnp.zeros((), jnp.float32)
     for ui, (kind, use_moe) in enumerate(spec.units):
@@ -247,7 +252,7 @@ def _apply_block(p_blk, x, cache_blk, *, cfg, spec, mode, pos, cross_src,
         x, c_out, aux = _apply_layer(
             p_blk[f"u{ui}"], x, cfg=cfg, kind=kind, use_moe=use_moe, mode=mode,
             pos=pos, cache=c_in, cross_src=cross_src, impl=impl, causal=causal,
-            kv_cap=kv_cap, length=length, segments=segments)
+            kv_cap=kv_cap, length=length, segments=segments, kv_bits=kv_bits)
         new_cache[f"u{ui}"] = c_out
         aux_total = aux_total + aux
     return x, (new_cache if mode != "train" else None), aux_total
@@ -256,7 +261,7 @@ def _apply_block(p_blk, x, cache_blk, *, cfg, spec, mode, pos, cross_src,
 def run_stack(stack_params, x, *, cfg, groups, mode, pos, caches=None,
               cross_src=None, impl="auto", causal=True, remat=False,
               remat_policy: Optional[str] = None, kv_cap=0,
-              length=None, segments=None,
+              length=None, segments=None, kv_bits=0,
               decode_unroll: int = 8):
     """``decode_unroll``: decode-mode groups with at most this many repeats
     run as an unrolled Python loop instead of ``lax.scan``.  Scan passes the
@@ -281,7 +286,8 @@ def run_stack(stack_params, x, *, cfg, groups, mode, pos, caches=None,
                 x, c_out, _ = _apply_block(
                     p_blk, x, c_blk, cfg=cfg, spec=spec, mode=mode, pos=pos,
                     cross_src=cross_src, impl=impl, causal=causal,
-                    kv_cap=kv_cap, length=length, segments=segments)
+                    kv_cap=kv_cap, length=length, segments=segments,
+                    kv_bits=kv_bits)
                 new_gc = jax.tree_util.tree_map(
                     lambda pool, one, r=r: pool.at[r].set(one.astype(pool.dtype)),
                     new_gc, c_out)
@@ -294,7 +300,7 @@ def run_stack(stack_params, x, *, cfg, groups, mode, pos, caches=None,
             x, c_out, aux = _apply_block(
                 p_blk, x, c_blk, cfg=cfg, spec=spec, mode=mode, pos=pos,
                 cross_src=cross_src, impl=impl, causal=causal, kv_cap=kv_cap,
-                length=length, segments=segments)
+                length=length, segments=segments, kv_bits=kv_bits)
             return x, (c_out, aux)
 
         if remat:
@@ -336,7 +342,7 @@ def unembed(params, cfg, h):
         w = params["embed"]["tok"]
         logits = jnp.einsum("bsd,vd->bsv", h, w.astype(h.dtype))
     else:
-        logits = h @ params["lm_head"].astype(h.dtype)
+        logits = qdense(h, params["lm_head"], h.dtype)
     if cfg.final_softcap:
         logits = cfg.final_softcap * jnp.tanh(
             logits.astype(jnp.float32) / cfg.final_softcap).astype(logits.dtype)
@@ -414,7 +420,8 @@ def loss_fn(params, cfg: ModelConfig, batch, *, impl="auto",
 
 
 def prefill(params, cfg: ModelConfig, batch, *, impl="auto",
-            compute_dtype=jnp.bfloat16, kv_cap: int = 0, length=None):
+            compute_dtype=jnp.bfloat16, kv_cap: int = 0, length=None,
+            kv_bits: int = 0):
     """Returns (last-token logits (B, V), cache).
 
     ``length`` (optional traced scalar): true prompt length when ``tokens``
@@ -434,7 +441,7 @@ def prefill(params, cfg: ModelConfig, batch, *, impl="auto",
     h, caches, _ = run_stack(params["stack"], h, cfg=cfg, groups=build_groups(cfg),
                              mode="prefill", pos=pos, cross_src=cross_src,
                              impl=impl, causal=True, kv_cap=kv_cap,
-                             length=length)
+                             length=length, kv_bits=kv_bits)
     h = M.apply_norm(params["final_norm"], h)
     if length is None:
         last = h[:, -1:]
@@ -445,7 +452,8 @@ def prefill(params, cfg: ModelConfig, batch, *, impl="auto",
 
 
 def prefill_packed(params, cfg: ModelConfig, tokens, positions, segments,
-                   gather_idx, *, impl="auto", compute_dtype=jnp.bfloat16):
+                   gather_idx, *, impl="auto", compute_dtype=jnp.bfloat16,
+                   kv_bits: int = 0):
     """Packed ragged prefill: several prompts in one ``(1, C)`` stream.
 
     ``positions`` are within-prompt positions (used for RoPE / absolute
@@ -466,7 +474,7 @@ def prefill_packed(params, cfg: ModelConfig, tokens, positions, segments,
     h, caches, _ = run_stack(params["stack"], h, cfg=cfg,
                              groups=build_groups(cfg), mode="prefill",
                              pos=positions, impl=impl, causal=True,
-                             segments=segments)
+                             segments=segments, kv_bits=kv_bits)
     h = M.apply_norm(params["final_norm"], h)
     last = h[0][gather_idx][:, None]                    # (n_seg, 1, D)
     logits = unembed(params, cfg, last)[:, 0]
@@ -512,7 +520,7 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, impl="auto",
 # cache init (dry-run decode inputs + serving engine)
 # ---------------------------------------------------------------------------
 
-def _init_layer_cache(cfg, kind, batch, kv_len, dtype):
+def _init_layer_cache(cfg, kind, batch, kv_len, dtype, kv_bits=0):
     if kind == "ssm":
         return init_ssm_cache(cfg, batch, dtype)
     if kind == "recurrent":
@@ -520,19 +528,22 @@ def _init_layer_cache(cfg, kind, batch, kv_len, dtype):
     n_cross = cfg.n_frontend_tokens
     if kind == "cross":
         return init_kv_cache(cfg, "cross", batch, kv_len, dtype, n_cross=n_cross)
-    c = {"attn": init_kv_cache(cfg, kind, batch, kv_len, dtype)}
+    c = {"attn": init_kv_cache(cfg, kind, batch, kv_len, dtype,
+                               kv_bits=kv_bits)}
     if cfg.cross_attn_decoder:
         c["cross"] = init_kv_cache(cfg, "cross", batch, kv_len, dtype, n_cross=n_cross)
         return c
     return c
 
 
-def init_cache(cfg: ModelConfig, batch: int, kv_len: int, *, dtype=jnp.bfloat16):
+def init_cache(cfg: ModelConfig, batch: int, kv_len: int, *,
+               dtype=jnp.bfloat16, kv_bits: int = 0):
     groups = build_groups(cfg)
     caches = []
     for spec in groups:
         def one(kind=None):
-            return {f"u{ui}": _init_layer_cache(cfg, kd, batch, kv_len, dtype)
+            return {f"u{ui}": _init_layer_cache(cfg, kd, batch, kv_len, dtype,
+                                                kv_bits=kv_bits)
                     for ui, (kd, _) in enumerate(spec.units)}
         blk = one()
         stacked = jax.tree_util.tree_map(

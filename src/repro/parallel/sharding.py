@@ -313,18 +313,22 @@ def cache_shardings(cache_shapes, ctx: PlanContext):
     def spec(kp, leaf):
         name = str(getattr(kp[-1], "key", ""))
         dims = leaf.shape  # (R, B, ...)
-        if name in ("k", "v"):                 # (R, B, S, Hkv, hd)
+        if name in ("k", "v", "k_q", "v_q", "k_s", "v_s"):
+            # (R, B, S, Hkv, hd) — quantised pools: code planes (hd packed)
+            # and per-(entry, head) scale planes (R, B, S, Hkv) shard the
+            # same leading axes, so codes and scales stay co-located
             S, H = dims[2], dims[3]
+            tail = (None,) * (len(dims) - 4)
             if dp is None:
                 # batch unshardable: spread the sequence
                 seq_ax = ("data", "model") if _div(S, mesh, ("data", "model")) \
                     else _maybe(S, mesh, "data")
                 h_ax = _maybe(H, mesh, "model") if not (
                     isinstance(seq_ax, tuple)) else None
-                return P(None, None, seq_ax, h_ax, None)
+                return P(None, None, seq_ax, h_ax, *tail)
             h_ax = _maybe(H, mesh, "model")
             seq_ax = "model" if h_ax is None and _div(S, mesh, "model") else None
-            return P(None, dp, seq_ax, h_ax, None)
+            return P(None, dp, seq_ax, h_ax, *tail)
         if name in ("ckv", "kr"):              # (R, B, S, r)
             S = dims[2]
             if dp is None:

@@ -78,6 +78,13 @@ class EngineConfig:
     #   >1 runs a lax.scan of decode→sample on device (multi-step
     #   scheduling): host sync cost is amortised over the chunk, at the
     #   price of admitting new requests only at chunk boundaries
+    weight_bits: int = 0          # 0 = native fp; 8/4 = weight-only
+    #   quantisation (per-channel int8 / packed int4, repro.quant) of the
+    #   dense projections — the fp path is bit-identical to weight_bits=0
+    weight_group: int = 0         # rows of K per scale group (0 = per-channel)
+    kv_bits: int = 0              # 0 = fp pool; 8/4 = quantised slot-pool KV
+    #   cache (per-(token, head) scales, quantise-on-commit / dequantise-
+    #   on-read; the jitted step never materialises an fp cache)
 
 
 @dataclasses.dataclass
@@ -112,8 +119,17 @@ class ServingEngine:
         # would be one shared mutable EngineConfig across all engines.
         self.cfg, self.params = cfg, params
         self.ecfg = ecfg = ecfg if ecfg is not None else EngineConfig()
+        if ecfg.weight_bits not in (0, 4, 8):
+            raise ValueError(f"weight_bits must be 0, 4 or 8, got {ecfg.weight_bits}")
+        if ecfg.kv_bits not in (0, 4, 8):
+            raise ValueError(f"kv_bits must be 0, 4 or 8, got {ecfg.kv_bits}")
+        if ecfg.weight_bits:
+            from repro.quant.core import quantize_params
+            self.params = quantize_params(params, ecfg.weight_bits,
+                                          group=ecfg.weight_group)
         B, S = ecfg.max_batch, ecfg.kv_len
-        self.cache = T.init_cache(cfg, B, S, dtype=jnp.bfloat16)
+        self.cache = T.init_cache(cfg, B, S, dtype=jnp.bfloat16,
+                                  kv_bits=ecfg.kv_bits)
         self.slot_req: list[Optional[Request]] = [None] * B
         # indexed FIFO admission queue: popleft is O(1) however deep the
         # backlog (the old list.pop(0) rescan was O(n) per admission)
@@ -260,7 +276,8 @@ class ServingEngine:
         with activate_plan(self._plan):
             logits, pcache = T.prefill(params, self.cfg, {"tokens": tokens},
                                        impl=self.ecfg.impl,
-                                       kv_cap=self.ecfg.kv_len, length=length)
+                                       kv_cap=self.ecfg.kv_len, length=length,
+                                       kv_bits=self.ecfg.kv_bits)
             nxt, key = self._sample_dev(logits, state["key"])
             tok = nxt[0]
             cache = self._insert_fn(cache, pcache, slot, length)
@@ -302,7 +319,7 @@ class ServingEngine:
         with activate_plan(self._prefill_plan):
             logits, pcache = T.prefill_packed(
                 params, self.cfg, tokens, positions, seg, gather_idx,
-                impl=self.ecfg.impl)
+                impl=self.ecfg.impl, kv_bits=self.ecfg.kv_bits)
         with activate_plan(self._plan):
             nxt, key = self._sample_dev(logits, state["key"])
             cache = self._packed_insert(cache, pcache["stack"], seg,
@@ -385,7 +402,7 @@ class ServingEngine:
         # single-request prefill padded to a bucketed length (static shape)
         logits, cache = T.prefill(params, self.cfg, {"tokens": tokens},
                                   impl=self.ecfg.impl, kv_cap=self.ecfg.kv_len,
-                                  length=length)
+                                  length=length, kv_bits=self.ecfg.kv_bits)
         return logits, cache
 
     # -- public API -------------------------------------------------------------
@@ -766,6 +783,11 @@ class ServingEngine:
             "gen_lens": [len(r.output) for r in done],
             "prefill_chunk": self._chunk,
             "max_batch": self.ecfg.max_batch,
+            # measured serving precision (16 = native fp16-class), consumed
+            # by the Plane-B bridge so quantisation propagates into the
+            # traffic model (repro.core.cosim.mix_from_stats)
+            "weight_bits": self.ecfg.weight_bits or 16,
+            "kv_bits": self.ecfg.kv_bits or 16,
             # {n_active_slots: decode iterations at that occupancy} — the
             # measured continuous-batching utilisation of the slot pool
             "active_slots_hist": dict(sorted(self.active_slot_hist.items())),
