@@ -1,0 +1,390 @@
+"""Resilience benchmark: graceful degradation under fabric faults and
+engine overload.
+
+Three sections:
+
+- **zoo_faults** — every zoo model's generation episode re-simulated on
+  2.5D-HI under k ∈ {0, 1, 2} failed NoI links (k=1 exhaustive, k=2 a
+  deterministic capped enumeration): mean/worst TTFT and decode-step
+  inflation over the surviving scenarios plus the count of scenarios the
+  fabric could not route at all (``DisconnectedFabric``).
+- **noi_fault_search** — the tentpole comparison: for each model, the NoI
+  design MOO-STAGE finds under the *fault-oblivious* generation objective
+  vs the *fault-aware* one (``core.cosim.resilience_objective``: expected
+  + worst-case μ over a seeded k-failure scenario set, disconnection
+  inadmissible).  Both designs are then scored under the same exhaustive
+  k=1 (and capped k=2) failure sweeps — the fault-aware design should
+  carry a lower worst-case degradation and never disconnect at k=1.
+- **engine_overload** — Plane A goodput under a burst far over capacity
+  with tight per-request deadlines, with and without bounded-queue
+  shedding (``EngineConfig(max_queue=)``): shedding turns queue-rot
+  (admitted too late, evicted mid-decode, compute wasted) into instant
+  retriable REJECTs, sustaining higher goodput from the same slot pool.
+
+    PYTHONPATH=src python -m benchmarks.perf_resilience [--smoke]
+
+Results: ``experiments/BENCH_resilience.json``
+(``BENCH_resilience_smoke.json`` with ``--smoke``); rendered by
+``benchmarks/report.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+ZOO = ("llama2-7b", "gpt-j", "gemma2-9b", "qwen2.5-3b",
+       "bart-large", "whisper-large-v3")
+
+_ZOO_KEYS = {"model", "k", "n_scenarios", "n_disconnected", "ttft_ms_mean",
+             "ttft_ms_worst", "decode_step_ms_mean", "decode_step_ms_worst",
+             "ttft_inflation_worst", "decode_inflation_worst"}
+
+_SEARCH_KEYS = {"model", "chiplets", "oblivious", "aware", "gain_worst_k1",
+                "aware_survives_k1", "same_design", "n_evals"}
+
+_SCORE_KEYS = {"nominal_t", "worst_t_k1", "degradation_k1",
+               "n_disconnected_k1", "degradation_k2", "n_disconnected_k2",
+               "links"}
+
+_OVERLOAD_KEYS = {"policy", "submitted", "done", "rejected",
+                  "failed_deadline", "goodput_tok_s", "wall_s",
+                  "done_tokens"}
+
+
+def check_schema(rec: dict) -> None:
+    """Assert the BENCH_resilience.json record shape (CI bit-rot gate)."""
+    for key in ("bench", "smoke", "chiplets", "prompt_len", "gen_len",
+                "batch", "zoo_faults", "noi_fault_search",
+                "engine_overload"):
+        assert key in rec, f"missing top-level key {key!r}"
+    zf = rec["zoo_faults"]["cells"]
+    assert zf, "zoo_faults must not be empty"
+    ks = set()
+    for cell in zf:
+        missing = _ZOO_KEYS - set(cell)
+        assert not missing, f"zoo_faults cell missing {missing}"
+        ks.add(cell["k"])
+    assert {0, 1, 2} <= ks, f"zoo_faults must sweep k in {{0,1,2}}: {ks}"
+    cells = rec["noi_fault_search"]["cells"]
+    assert cells, "noi_fault_search must not be empty"
+    for cell in cells:
+        missing = _SEARCH_KEYS - set(cell)
+        assert not missing, f"noi_fault_search cell missing {missing}"
+        for side in ("oblivious", "aware"):
+            smissing = _SCORE_KEYS - set(cell[side])
+            assert not smissing, f"{side} score missing {smissing}"
+    if not rec["smoke"]:
+        assert len(cells) >= 3, "full sweep must cover >=3 models"
+        improved = [c for c in cells
+                    if c["gain_worst_k1"] is None or c["gain_worst_k1"] > 1.0]
+        assert len(improved) >= 3, (
+            "fault-aware search must reduce worst-case k=1 degradation "
+            f"on >=3 models (got {len(improved)})")
+    ov = rec["engine_overload"]["rows"]
+    assert {r["policy"] for r in ov} == {"no_shed", "shed"}
+    for row in ov:
+        missing = _OVERLOAD_KEYS - set(row)
+        assert not missing, f"engine_overload row missing {missing}"
+    if not rec["smoke"]:
+        by = {r["policy"]: r for r in ov}
+        assert by["shed"]["goodput_tok_s"] >= by["no_shed"]["goodput_tok_s"], \
+            "shedding must sustain >= goodput under overload"
+
+
+# ---------------------------------------------------------------------------
+# zoo sweep: generation latency under k link failures
+# ---------------------------------------------------------------------------
+
+def run_zoo_faults(models, chiplets: int, prompt_len: int, gen_len: int,
+                   batch: int, *, max_scenarios: int = 24) -> dict:
+    from repro.config import get_config
+    from repro.core.faults import DisconnectedFabric, all_link_scenarios
+    from repro.core.placement import initial_placement
+    from repro.core.simulator import simulate_generation
+    from repro.core.traffic import Workload
+
+    p = initial_placement(chiplets)
+    sweeps = {0: [None],
+              1: all_link_scenarios(p, k=1, max_scenarios=max_scenarios),
+              2: all_link_scenarios(p, k=2, max_scenarios=max_scenarios)}
+    cells = []
+    for name in models:
+        w = Workload.from_config(get_config(name), seq_len=prompt_len)
+        nominal = None
+        for k, scenarios in sweeps.items():
+            ttfts, steps, n_disc = [], [], 0
+            for sc in scenarios:
+                try:
+                    g = simulate_generation(w, chiplets, prompt_len,
+                                            gen_len, arch="2.5D-HI",
+                                            placement=p, batch=batch,
+                                            scenario=sc)
+                except DisconnectedFabric:
+                    n_disc += 1
+                    continue
+                ttfts.append(g.ttft_s * 1e3)
+                steps.append(g.decode_step_s * 1e3)
+            if k == 0:
+                nominal = (ttfts[0], steps[0])
+            cells.append({
+                "model": name, "k": k,
+                "n_scenarios": len(scenarios),
+                "n_disconnected": n_disc,
+                "ttft_ms_mean": sum(ttfts) / len(ttfts) if ttfts else None,
+                "ttft_ms_worst": max(ttfts) if ttfts else None,
+                "decode_step_ms_mean":
+                    sum(steps) / len(steps) if steps else None,
+                "decode_step_ms_worst": max(steps) if steps else None,
+                "ttft_inflation_worst":
+                    max(ttfts) / nominal[0] if ttfts else None,
+                "decode_inflation_worst":
+                    max(steps) / nominal[1] if steps else None,
+            })
+    return {"chiplets": chiplets, "max_scenarios": max_scenarios,
+            "cells": cells}
+
+
+# ---------------------------------------------------------------------------
+# NoI search: fault-oblivious vs fault-aware designs under failure sweeps
+# ---------------------------------------------------------------------------
+
+def _score_under_faults(design, phases, *, k2_cap: int) -> dict:
+    """Fabric-service-time degradation of one placement under exhaustive
+    k=1 and capped k=2 link-failure sweeps.  Disconnection is reported as
+    a flag + count (JSON-safe), never an inf latency."""
+    from repro.core.cosim import degradation_under_faults, fabric_time
+    from repro.core.faults import all_link_scenarios
+
+    out = {"links": len(design.links),
+           "nominal_t": fabric_time(design, phases)}
+    for k, cap in ((1, 0), (2, k2_cap)):
+        rep = degradation_under_faults(
+            design, phases, all_link_scenarios(design, k=k,
+                                               max_scenarios=cap))
+        disc = rep["n_disconnected"]
+        if k == 1:
+            out["worst_t_k1"] = None if disc else rep["worst_t"]
+        out[f"degradation_k{k}"] = (None if disc else
+                                    rep["worst_t"]
+                                    / max(out["nominal_t"], 1e-30))
+        out[f"n_disconnected_k{k}"] = disc
+    return out
+
+
+def run_noi_fault_search(models, chiplets: int, prompt_len: int,
+                         gen_len: int, *, batch: int = 8, requests: int = 4,
+                         iterations: int = 3, ls_steps: int = 12,
+                         n_scenarios: int = 8, k2_cap: int = 40,
+                         seed: int = 0) -> dict:
+    import numpy as np
+
+    from repro.core.cosim import (Episode, EpisodeMix, fabric_time,
+                                  generation_objective,
+                                  resilience_objective, seeded_noi_search)
+    from repro.core.faults import FaultModel
+
+    chunk = max(prompt_len // 4, 1)
+    cells = []
+    for name in models:
+        mix = EpisodeMix([Episode(prompt_len, gen_len, requests)],
+                         prefill_chunk=chunk, max_batch=batch,
+                         active_hist={batch: 1}, max_stall_tokens=chunk)
+        # fault-oblivious designer: paper objective, then picks the design
+        # with the best *nominal* fabric service time — never looks at
+        # what a failure does to it
+        obl_obj, _, phases = generation_objective(name, mix, chiplets)
+        obl = seeded_noi_search(obl_obj, chiplets, iterations=iterations,
+                                ls_steps=ls_steps, seed=seed)
+        obl_design = min(obl.archive.designs,
+                         key=lambda d: fabric_time(d, phases))
+
+        # fault-aware designer: minimises worst-case service time over the
+        # seeded k-failure set, picks the design with the best worst case.
+        # Wear-weighted sampling (endurance_weighted) draws hot links —
+        # the ones whose failure actually moves the bottleneck — so the
+        # sampled worst case tracks the exhaustive one
+        aw_obj, _, _ = resilience_objective(
+            name, mix, chiplets, fault_model=FaultModel(k_links=1,
+                                                        seed=seed),
+            n_scenarios=n_scenarios, endurance_weighted=True)
+        aw = seeded_noi_search(aw_obj, chiplets, iterations=iterations,
+                               ls_steps=ls_steps, seed=seed)
+        aobjs = np.asarray(aw.archive.objs)
+        aw_design = aw.archive.designs[int(np.argmin(aobjs[:, 1]))]
+
+        obl_score = _score_under_faults(obl_design, phases, k2_cap=k2_cap)
+        aw_score = _score_under_faults(aw_design, phases, k2_cap=k2_cap)
+        # worst-case k=1 service-time ratio oblivious/aware: > 1 means the
+        # fault-aware design ends up *faster* under its worst single-link
+        # failure; None = the oblivious design disconnects at k=1 while
+        # the aware one survives (infinite gain)
+        gain = None
+        if obl_score["worst_t_k1"] is not None \
+                and aw_score["worst_t_k1"] is not None:
+            gain = obl_score["worst_t_k1"] / aw_score["worst_t_k1"]
+        elif aw_score["worst_t_k1"] is None:
+            gain = 0.0                # aware design itself disconnects
+        cells.append({
+            "model": name, "chiplets": chiplets,
+            "oblivious": obl_score, "aware": aw_score,
+            "gain_worst_k1": gain,
+            "aware_survives_k1": aw_score["n_disconnected_k1"] == 0,
+            "same_design": obl_design == aw_design,
+            "n_evals": obl.n_evals + aw.n_evals,
+        })
+    return {"chiplets": chiplets, "batch": batch, "requests": requests,
+            "iterations": iterations, "ls_steps": ls_steps,
+            "n_scenarios": n_scenarios, "k2_cap": k2_cap, "seed": seed,
+            "cells": cells}
+
+
+# ---------------------------------------------------------------------------
+# engine overload: goodput with vs without bounded-queue shedding
+# ---------------------------------------------------------------------------
+
+def run_engine_overload(*, arch: str = "qwen2.5-3b", burst: int = 12,
+                        max_batch: int = 2, max_new_tokens: int = 16,
+                        deadline_ms: float = 0.0,
+                        max_queue: int = 2) -> dict:
+    """Drain one over-capacity burst twice: unbounded queue (late
+    admissions rot past their deadline mid-decode, wasting slot time) vs
+    bounded-queue shedding (excess load fails fast as retriable REJECTED).
+    Goodput counts only tokens of requests that finished DONE."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.config import get_config, reduce_config
+    from repro.models import transformer as T
+    from repro.serving.engine import DONE, EngineConfig, ServingEngine
+
+    cfg = reduce_config(get_config(arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(0),
+                           param_dtype=jnp.bfloat16)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8)
+               for _ in range(burst)]
+
+    def drain(max_queue_, deadline_ms_):
+        from repro.serving.engine import EngineStallError
+        eng = ServingEngine(cfg, params, EngineConfig(
+            max_batch=max_batch, kv_len=64, max_new_tokens=max_new_tokens,
+            deadline_ms=deadline_ms_, max_queue=max_queue_))
+        # warm the compiled prefill/decode paths so the timed burst
+        # measures steady-state service, not XLA compilation (the warmup
+        # request may itself miss a tight deadline mid-compile — fine)
+        eng.submit(prompts[0].copy())
+        eng.run_until_drained()
+        t0 = time.perf_counter()
+        reqs = [eng.submit(p.copy()) for p in prompts]
+        try:
+            eng.run_until_drained()
+        except EngineStallError:
+            pass                       # stranded requests are terminal too
+        wall = time.perf_counter() - t0
+        done_tokens = sum(len(r.output) for r in reqs if r.status == DONE)
+        assert all(r.terminal for r in reqs)
+        return {
+            "policy": "shed" if max_queue_ else "no_shed",
+            "submitted": burst,
+            "done": sum(1 for r in reqs if r.status == DONE),
+            "rejected": sum(1 for r in reqs if r.status == "rejected"),
+            "failed_deadline": sum(1 for r in reqs
+                                   if r.status == "failed_deadline"),
+            "done_tokens": done_tokens,
+            "wall_s": wall,
+            "goodput_tok_s": done_tokens / max(wall, 1e-9),
+        }
+
+    # calibrate the deadline to the measured warm per-request service time
+    # so the benchmark stresses the queue, not the host machine: the
+    # deadline admits roughly what the slot pool + bounded queue can serve
+    if deadline_ms <= 0.0:
+        warm = drain(0, 0.0)
+        per_req = warm["wall_s"] / burst * 1e3
+        deadline_ms = per_req * (max_batch + max_queue) * 1.25
+    rows = [drain(0, deadline_ms), drain(max_queue, deadline_ms)]
+    return {"arch": arch, "burst": burst, "max_batch": max_batch,
+            "max_new_tokens": max_new_tokens, "deadline_ms": deadline_ms,
+            "max_queue": max_queue, "backend": jax.default_backend(),
+            "rows": rows}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (seconds, still writes JSON)")
+    ap.add_argument("--chiplets", type=int, default=36,
+                    choices=(36, 64, 100))
+    ap.add_argument("--prompt-len", type=int, default=512)
+    ap.add_argument("--gen-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = os.path.join(
+            EXPERIMENTS, "BENCH_resilience_smoke.json" if args.smoke
+            else "BENCH_resilience.json")
+
+    models = ("gemma2-9b", "bart-large") if args.smoke else ZOO
+    if args.smoke:
+        args.prompt_len, args.gen_len, args.batch = 64, 16, 4
+
+    from benchmarks.common import emit
+
+    rec = {
+        "bench": "perf_resilience",
+        "smoke": args.smoke,
+        "chiplets": args.chiplets,
+        "prompt_len": args.prompt_len,
+        "gen_len": args.gen_len,
+        "batch": args.batch,
+        "zoo_faults": run_zoo_faults(
+            models, args.chiplets, args.prompt_len, args.gen_len,
+            args.batch, max_scenarios=6 if args.smoke else 64),
+        "noi_fault_search": run_noi_fault_search(
+            models, args.chiplets, args.prompt_len, args.gen_len,
+            batch=args.batch,
+            iterations=1 if args.smoke else 3,
+            ls_steps=4 if args.smoke else 12,
+            n_scenarios=4 if args.smoke else 16,
+            k2_cap=10 if args.smoke else 40),
+        "engine_overload": run_engine_overload(
+            burst=6 if args.smoke else 12,
+            max_new_tokens=8 if args.smoke else 16),
+    }
+    check_schema(rec)
+
+    emit([{"model": c["model"], "k": c["k"],
+           "scenarios": c["n_scenarios"],
+           "disconnected": c["n_disconnected"],
+           "ttft_worst_ms": c["ttft_ms_worst"] or "",
+           "decode_worst_ms": c["decode_step_ms_worst"] or "",
+           "decode_inflation": c["decode_inflation_worst"] or ""}
+          for c in rec["zoo_faults"]["cells"]],
+         f"resilience: generation under k link failures "
+         f"({args.chiplets} chiplets)")
+    emit([{"model": c["model"],
+           "obl_deg_k1": c["oblivious"]["degradation_k1"] or "disc",
+           "obl_disc_k1": c["oblivious"]["n_disconnected_k1"],
+           "aware_deg_k1": c["aware"]["degradation_k1"] or "disc",
+           "aware_disc_k1": c["aware"]["n_disconnected_k1"],
+           "gain_worst_k1": "inf" if c["gain_worst_k1"] is None
+                            else c["gain_worst_k1"]}
+          for c in rec["noi_fault_search"]["cells"]],
+         "resilience: fault-oblivious vs fault-aware NoI designs (k=1)")
+    emit(rec["engine_overload"]["rows"],
+         "resilience: engine overload goodput (shed vs no-shed)")
+
+    os.makedirs(EXPERIMENTS, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"# wrote {os.path.normpath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -308,6 +308,89 @@ def quant_table() -> str:
     return "\n".join(out)
 
 
+def resilience_table() -> str:
+    """Render experiments/BENCH_resilience.json (benchmarks.perf_resilience)."""
+    path = os.path.normpath(os.path.join(DRYRUN, "..",
+                                         "BENCH_resilience.json"))
+    if not os.path.exists(path):
+        return ("(no BENCH_resilience.json — run "
+                "`python -m benchmarks.perf_resilience`)")
+    r = _load_json(path)
+    if r is None:
+        return ("(BENCH_resilience.json is malformed — re-run "
+                "`python -m benchmarks.perf_resilience`)")
+    out = [f"chiplets={r['chiplets']} · prompt={r['prompt_len']} · "
+           f"gen={r['gen_len']} · batch={r.get('batch', 1)}"
+           + (" · SMOKE" if r.get("smoke") else "")]
+
+    zf = (r.get("zoo_faults") or {}).get("cells") or []
+    if zf:
+        out += ["",
+                "| model | k links down | scenarios | disconnected | "
+                "worst TTFT ms | worst decode ms | worst decode × |",
+                "|---|---|---|---|---|---|---|"]
+        for c in zf:
+            infl = c.get("decode_inflation_worst")
+            out.append(
+                f"| {c['model']} | {c['k']} | {c['n_scenarios']} | "
+                f"{c['n_disconnected']} | "
+                f"{_opt(c.get('ttft_ms_worst'), '{:.0f}')} | "
+                f"{_opt(c.get('decode_step_ms_worst'), '{:.2f}')} | "
+                f"{_opt(infl, '{:.2f}×')} |")
+    else:
+        out += ["", "(zoo_faults section missing from the record)"]
+
+    cells = (r.get("noi_fault_search") or {}).get("cells") or []
+    if cells:
+        out += ["",
+                "#### Fault-aware vs fault-oblivious NoI designs "
+                "(worst-case degradation under every single-link failure)",
+                "",
+                "| model | oblivious worst k=1 | (disc) | aware worst k=1 "
+                "| (disc) | gain | aware survives k=1 |",
+                "|---|---|---|---|---|---|---|"]
+        for c in cells:
+            o, a = c.get("oblivious", {}), c.get("aware", {})
+            gain = c.get("gain_worst_k1")
+            out.append(
+                f"| {c['model']} | "
+                f"{_opt(o.get('degradation_k1'), '{:.3f}×')} | "
+                f"{o.get('n_disconnected_k1', '?')} | "
+                f"{_opt(a.get('degradation_k1'), '{:.3f}×')} | "
+                f"{a.get('n_disconnected_k1', '?')} | "
+                f"{'∞' if gain is None else f'{gain:.2f}×'} | "
+                f"{'yes' if c.get('aware_survives_k1') else 'NO'} |")
+    else:
+        out += ["", "(noi_fault_search section missing from the record)"]
+
+    ov = (r.get("engine_overload") or {}).get("rows") or []
+    if ov:
+        meta = r.get("engine_overload", {})
+        out += ["",
+                f"#### Engine overload (burst={meta.get('burst')} on "
+                f"{meta.get('max_batch')} slots · "
+                f"deadline={_opt(meta.get('deadline_ms'), '{:.0f}')} ms · "
+                f"queue cap={meta.get('max_queue')})",
+                "",
+                "| policy | done | rejected | missed deadline | "
+                "goodput tok/s |",
+                "|---|---|---|---|---|"]
+        for row in ov:
+            out.append(
+                f"| {row['policy']} | {row['done']}/{row['submitted']} | "
+                f"{row['rejected']} | {row['failed_deadline']} | "
+                f"{row['goodput_tok_s']:.0f} |")
+    else:
+        out += ["", "(engine_overload section missing from the record)"]
+    return "\n".join(out)
+
+
+def _opt(v, fmt: str) -> str:
+    """Format an optional number ('—' for the None a disconnected or
+    unroutable sweep records)."""
+    return "—" if v is None else fmt.format(v)
+
+
 def _render(fn, *args) -> str:
     """One report section; a record that parses but is missing keys (an
     older schema, a half-migrated run) degrades to a warning line instead
@@ -331,7 +414,10 @@ def main():
     print("### Generation co-simulation (benchmarks.perf_cosim)\n")
     print(_render(cosim_table) + "\n")
     print("### Quantised serving (benchmarks.perf_quant)\n")
-    print(_render(quant_table))
+    print(_render(quant_table) + "\n")
+    print("### Resilience under faults and overload "
+          "(benchmarks.perf_resilience)\n")
+    print(_render(resilience_table))
 
 
 if __name__ == "__main__":

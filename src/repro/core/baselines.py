@@ -114,7 +114,7 @@ def _haima_env(n_chiplets: int, calib: Calib, chiplet: bool) -> dict:
 
 def simulate_haima_chiplet(w: Workload, n_chiplets: int, *,
                            calib: Calib = CALIB,
-                           chiplet: bool = True) -> SimResult:
+                           chiplet: bool = True, scenario=None) -> SimResult:
     env = _haima_env(n_chiplets, calib, chiplet)
     n_dram, pl = env["n_dram"], env["pl"]
 
@@ -134,7 +134,7 @@ def simulate_haima_chiplet(w: Workload, n_chiplets: int, *,
             # token vectors leave the banks for the compute plane (2.5D-HI
             # keeps this on the contiguous ReRAM macro instead)
             p.sm_mc_bytes += w.seq_len * w.d_model * BYTES
-    noi_t_list, ev = _phase_noi_times_baseline(pl, phases)
+    noi_t_list, ev = _phase_noi_times_baseline(pl, phases, scenario)
     noi_by = {p.name: t for p, t in zip(phases, noi_t_list)}
 
     pim_rate0, sram_rate0 = env["pim_rate0"], env["sram_rate0"]
@@ -213,7 +213,8 @@ def _transpim_env(n_chiplets: int, calib: Calib, chiplet: bool) -> dict:
 
 def simulate_transpim_chiplet(w: Workload, n_chiplets: int, *,
                               calib: Calib = CALIB,
-                              chiplet: bool = True) -> SimResult:
+                              chiplet: bool = True,
+                              scenario=None) -> SimResult:
     env = _transpim_env(n_chiplets, calib, chiplet)
     n_acu, n_dram, pl = env["n_acu"], env["n_dram"], env["pl"]
 
@@ -230,7 +231,7 @@ def simulate_transpim_chiplet(w: Workload, n_chiplets: int, *,
             p.sm_mc_bytes += acu_spill
         if p.name == "embed":
             p.sm_mc_bytes += w.seq_len * w.d_model * BYTES
-    noi_t_list, ev = _phase_noi_times_baseline(pl, phases)
+    noi_t_list, ev = _phase_noi_times_baseline(pl, phases, scenario)
     noi_by = {p.name: t for p, t in zip(phases, noi_t_list)}
 
     pim_rate0 = env["pim_rate0"]
@@ -276,18 +277,26 @@ def simulate_transpim_chiplet(w: Workload, n_chiplets: int, *,
                      per_kernel, ev)
 
 
-def _phase_noi_times_baseline(pl, phases):
+def _phase_noi_times_baseline(pl, phases, scenario=None):
     """Baseline NoI evaluation with role aliasing: the traffic model speaks
     SM/MC/DRAM/ReRAM; in the baselines the compute plane is SRAM (HAIMA) or
     the ACUs (TransPIM) and the DRAM-PIM banks are both memory and compute —
     a subset of banks act as the 'MC' heads the many-to-few traffic hits."""
+    from repro.core.faults import DisconnectedFabric
+
     roles = pl.roles()
     aliased = dict(roles)
     aliased["SM"] = roles.get("SRAM", []) + roles.get("ACU", [])
     drams = roles.get("DRAM", [])
     aliased["MC"] = drams[: max(len(drams) // 8, 1)]
-    ev = evaluate_noi(pl, phases, roles_override=aliased)
-    times = [noi_phase_time(u) for u in ev.per_phase_link_bytes] or [0.0] * len(phases)
+    ev = evaluate_noi(pl, phases, roles_override=aliased, scenario=scenario)
+    if ev.disconnected:
+        raise DisconnectedFabric(
+            f"fault scenario {getattr(scenario, 'label', scenario)!r} leaves "
+            f"the baseline fabric unable to route required traffic")
+    times = ([noi_phase_time(u, ev.link_bw_scale)
+              for u in ev.per_phase_link_bytes]
+             or [0.0] * len(phases))
     return times, ev
 
 
@@ -305,7 +314,7 @@ def _phase_noi_times_baseline(pl, phases):
 # paid per generated token, per layer.
 
 def _haima_decode_step(w: Workload, env: dict, kv_pos: int, calib: Calib,
-                       batch: int = 1):
+                       batch: int = 1, scenario=None):
     phases = decode_step_phases(w, kv_pos, batch)
     # per-slot 1×P score rows, ×2 ways; the host round-trip latency itself
     # is paid once per step — the batch amortises it
@@ -317,7 +326,7 @@ def _haima_decode_step(w: Workload, env: dict, kv_pos: int, calib: Calib,
             # cached K/V itself crosses the DRAM↔SRAM boundary via dram_bytes
         if p.name == "embed_dec":
             p.sm_mc_bytes += batch * w.d_model * BYTES
-    noi_t, ev = _phase_noi_times_baseline(env["pl"], phases)
+    noi_t, ev = _phase_noi_times_baseline(env["pl"], phases, scenario)
     noi_by = {p.name: t for p, t in zip(phases, noi_t)}
     by = {p.name: p for p in phases}
 
@@ -350,7 +359,7 @@ def _haima_decode_step(w: Workload, env: dict, kv_pos: int, calib: Calib,
 
 
 def _transpim_decode_step(w: Workload, env: dict, kv_pos: int, calib: Calib,
-                          batch: int = 1):
+                          batch: int = 1, scenario=None):
     phases = decode_step_phases(w, kv_pos, batch)
     # per-slot token-state broadcast and score-row spill; the per-kernel
     # ACU hand-off latency is paid once per step (batch-amortised)
@@ -363,7 +372,7 @@ def _transpim_decode_step(w: Workload, env: dict, kv_pos: int, calib: Calib,
             p.sm_mc_bytes += acu_spill
         if p.name == "embed_dec":
             p.sm_mc_bytes += batch * w.d_model * BYTES
-    noi_t, ev = _phase_noi_times_baseline(env["pl"], phases)
+    noi_t, ev = _phase_noi_times_baseline(env["pl"], phases, scenario)
     noi_by = {p.name: t for p, t in zip(phases, noi_t)}
     by = {p.name: p for p in phases}
 
@@ -395,11 +404,12 @@ def _transpim_decode_step(w: Workload, env: dict, kv_pos: int, calib: Calib,
 def _baseline_generation(arch: str, w: Workload, n_chiplets: int,
                          prompt_len: int, gen_len: int, *, calib: Calib,
                          samples: int, prefill_fn, env: dict,
-                         step_fn, batch: int = 1) -> GenResult:
+                         step_fn, batch: int = 1,
+                         scenario=None) -> GenResult:
     if batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
     w = dataclasses.replace(w, seq_len=prompt_len)
-    prefill = prefill_fn(w, n_chiplets, calib=calib)
+    prefill = prefill_fn(w, n_chiplets, calib=calib, scenario=scenario)
     # intra-bank KV commit: bank-bandwidth time + DRAM access energy
     kv_bytes = kv_cache_bytes_per_layer(w, prompt_len) * max(w.n_dec_layers, 1)
     t_kv = kv_bytes / (env["n_dram"] * C.DRAM.bw)
@@ -409,7 +419,7 @@ def _baseline_generation(arch: str, w: Workload, n_chiplets: int,
     steps = max(gen_len - 1, 0)
     step_t, step_e, ev = [], [], None
     for pos in _decode_positions(prompt_len, gen_len, samples):
-        t, e, ev = step_fn(w, env, pos, calib, batch)
+        t, e, ev = step_fn(w, env, pos, calib, batch, scenario)
         step_t.append(t)
         step_e.append(e)
     decode_step = sum(step_t) / len(step_t)
@@ -432,23 +442,25 @@ def _baseline_generation(arch: str, w: Workload, n_chiplets: int,
 
 def simulate_generation_haima(w: Workload, n_chiplets: int, prompt_len: int,
                               gen_len: int, *, calib: Calib = CALIB,
-                              samples: int = 4, batch: int = 1) -> GenResult:
+                              samples: int = 4, batch: int = 1,
+                              scenario=None) -> GenResult:
     env = _haima_env(n_chiplets, calib, chiplet=True)
     return _baseline_generation(
         "HAIMA_chiplet", w, n_chiplets, prompt_len, gen_len, calib=calib,
         samples=samples, prefill_fn=simulate_haima_chiplet, env=env,
-        step_fn=_haima_decode_step, batch=batch)
+        step_fn=_haima_decode_step, batch=batch, scenario=scenario)
 
 
 def simulate_generation_transpim(w: Workload, n_chiplets: int,
                                  prompt_len: int, gen_len: int, *,
                                  calib: Calib = CALIB,
-                                 samples: int = 4, batch: int = 1) -> GenResult:
+                                 samples: int = 4, batch: int = 1,
+                                 scenario=None) -> GenResult:
     env = _transpim_env(n_chiplets, calib, chiplet=True)
     return _baseline_generation(
         "TransPIM_chiplet", w, n_chiplets, prompt_len, gen_len, calib=calib,
         samples=samples, prefill_fn=simulate_transpim_chiplet, env=env,
-        step_fn=_transpim_decode_step, batch=batch)
+        step_fn=_transpim_decode_step, batch=batch, scenario=scenario)
 
 
 # ---------------------------------------------------------------------------

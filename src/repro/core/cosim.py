@@ -34,7 +34,8 @@ import dataclasses
 from typing import Callable, Optional, Sequence
 
 from repro.config import ModelConfig, get_config
-from repro.core.noi import NoIEval, evaluate_noi, mesh_baseline_eval
+from repro.core.noi import (NoIEval, evaluate_noi, mesh_baseline_eval,
+                            noi_phase_time)
 from repro.core.simulator import (CALIB, Calib, _decode_positions,
                                   simulate_generation)
 from repro.core.traffic import (Phase, Workload, decode_step_phases,
@@ -317,6 +318,111 @@ def generation_objective(cfg, mix: EpisodeMix, n_chiplets: int,
         return (ev.mu / mesh_ev.mu, ev.sigma / mesh_ev.sigma)
 
     return objective, mesh_ev, phases
+
+
+# ---------------------------------------------------------------------------
+# resilience: fault-tolerance-aware NoI objective (worst-case degradation)
+# ---------------------------------------------------------------------------
+
+def scenario_mu(p, phases: list[Phase], scenario=None,
+                mesh_mu: float = 1.0) -> float:
+    """μ of a placement under one fault scenario, normalised by the mesh
+    baseline; inf when the degraded fabric cannot route (an explicit
+    sentinel the MOO archive rejects — never NaN)."""
+    ev = evaluate_noi(p, phases, scenario=scenario)
+    if ev.disconnected:
+        return float("inf")
+    return ev.mu / mesh_mu
+
+
+def fabric_time(p, phases: list[Phase], scenario=None) -> float:
+    """Repeat-weighted NoI service time of a phase list: Σ repeat ×
+    bottleneck-link serialisation (``noi_phase_time`` — the max-loaded
+    link is what the simulators\' phase latencies build on, so this is
+    the fabric-side latency proxy, where μ is a fabric-health mean that
+    one link failure barely moves).  inf when the scenario disconnects a
+    required flow — never NaN."""
+    ev = evaluate_noi(p, phases, scenario=scenario)
+    if ev.disconnected:
+        return float("inf")
+    return float(sum(ph.repeat * noi_phase_time(u, ev.link_bw_scale)
+                     for ph, u in zip(phases, ev.per_phase_link_bytes)))
+
+
+def degradation_under_faults(p, phases: list[Phase], scenarios) -> dict:
+    """Score a placement\'s fabric service time over a fault-scenario list.
+
+    Returns ``{nominal_t, expected_t, worst_t, worst_label,
+    n_disconnected, n_scenarios}`` (seconds, unnormalised).  Disconnecting
+    scenarios make ``expected_t``/``worst_t`` inf and are counted —
+    callers decide whether a disconnectable design is admissible."""
+    nominal_t = fabric_time(p, phases)
+    ts, n_disc, worst_label = [], 0, ""
+    worst = -float("inf")
+    for sc in scenarios:
+        t = fabric_time(p, phases, sc)
+        ts.append(t)
+        if t == float("inf"):
+            n_disc += 1
+        if t > worst:
+            worst = t
+            worst_label = getattr(sc, "label", "")
+    if not ts:
+        ts, worst = [nominal_t], nominal_t
+    return {"nominal_t": nominal_t,
+            "expected_t": float(sum(ts) / len(ts)),
+            "worst_t": float(worst),
+            "worst_label": worst_label,
+            "n_disconnected": n_disc,
+            "n_scenarios": len(scenarios)}
+
+
+def resilience_objective(cfg, mix: EpisodeMix, n_chiplets: int, *,
+                         fault_model=None, n_scenarios: int = 8,
+                         samples: int = 1,
+                         batch: Optional[int] = None,
+                         endurance_weighted: bool = False,
+                         ) -> tuple[Callable, float, list[Phase]]:
+    """(objective_fn, seed_time, phases): fault-tolerance-aware NoI metric.
+
+    The two objectives trade *expected* against *worst-case* fabric
+    service time over a deterministic per-design k-failure scenario set
+    (nominal is always scenario 0, so fault-free latency keeps pulling
+    the expected term): ``(mean T_norm, max T_norm)``, both normalised by
+    the dataflow-aware seed placement\'s nominal time (``seed_time``).
+    Service time — not μ — is the degradation metric because the
+    simulators\' phase latencies serialise on the *bottleneck* link: a
+    failure that dumps a hot link\'s traffic onto one surviving path
+    inflates it sharply, while the μ mean barely moves.  A design any
+    sampled scenario disconnects scores inf and is rejected by the MOO
+    archive — surviving the k-failure set is a hard constraint, the
+    residual slowdown is what the search trades against nominal speed.
+
+    ``fault_model`` defaults to single-link failures
+    (``FaultModel(k_links=1)``); ``endurance_weighted`` biases which links
+    fail by the wear the measured traffic accumulates
+    (``faults.endurance_link_weights`` — ReRAM-incident links fail more).
+    Scenario sampling is a pure function of (link set, model seed), so
+    re-evaluating a placement is reproducible and archive-stable."""
+    from repro.core.faults import FaultModel, endurance_link_weights
+    from repro.core.placement import initial_placement
+
+    fault_model = fault_model or FaultModel(k_links=1)
+    phases = generation_phases(cfg, mix, samples=samples, batch=batch)
+    seed_time = fabric_time(initial_placement(n_chiplets), phases)
+
+    def objective(p):
+        weights = (endurance_link_weights(p, phases)
+                   if endurance_weighted else None)
+        scenarios = fault_model.sample_scenarios(p, n_scenarios,
+                                                 link_weights=weights)
+        ts = [fabric_time(p, phases)] + [fabric_time(p, phases, sc)
+                                         for sc in scenarios]
+        if any(t == float("inf") for t in ts):
+            return (float("inf"), float("inf"))
+        return (sum(ts) / len(ts) / seed_time, max(ts) / seed_time)
+
+    return objective, seed_time, phases
 
 
 def seeded_noi_search(objective: Callable, n_chiplets: int, *,

@@ -22,6 +22,7 @@ import math
 from typing import Optional
 
 from repro.core import chiplets as C
+from repro.core.faults import DisconnectedFabric
 from repro.core.noi import NoIEval, evaluate_noi, noi_energy, noi_phase_time
 from repro.core.placement import Placement, initial_placement
 from repro.core.traffic import (Phase, Workload, decode_step_phases,
@@ -68,11 +69,16 @@ def _alloc(n_chiplets: int) -> dict:
     return dict(C.SYSTEM_ALLOC[n_chiplets])
 
 
-def _phase_noi_times(placement: Placement, phases: list[Phase]) -> tuple[list[float], NoIEval]:
-    ev = evaluate_noi(placement, phases)
+def _phase_noi_times(placement: Placement, phases: list[Phase],
+                     scenario=None) -> tuple[list[float], NoIEval]:
+    ev = evaluate_noi(placement, phases, scenario=scenario)
+    if ev.disconnected:
+        raise DisconnectedFabric(
+            f"fault scenario {getattr(scenario, 'label', scenario)!r} leaves "
+            f"the fabric unable to route required traffic")
     times = []
     for u in ev.per_phase_link_bytes:
-        times.append(noi_phase_time(u))
+        times.append(noi_phase_time(u, ev.link_bw_scale))
     if not times:
         times = [0.0] * len(phases)
     return times, ev
@@ -117,12 +123,12 @@ def _energy(phases, times_by_phase, alloc, noi_ev, busy: dict) -> float:
 
 def simulate_2p5d_hi(w: Workload, n_chiplets: int, *,
                      placement: Optional[Placement] = None,
-                     calib: Calib = CALIB) -> SimResult:
+                     calib: Calib = CALIB, scenario=None) -> SimResult:
     alloc = _alloc(n_chiplets)
     placement = placement or initial_placement(n_chiplets)
     phases = transformer_phases(w)
     by_name = {p.name: p for p in phases}
-    noi_t, ev = _phase_noi_times(placement, phases)
+    noi_t, ev = _phase_noi_times(placement, phases, scenario)
     noi_by = {p.name: t for p, t in zip(phases, noi_t)}
 
     dram_bw = alloc["DRAM"] * C.DRAM.bw
@@ -259,7 +265,8 @@ _DECODE_BUSY = {"embed_dec": {"ReRAM"}, "kqv_dec": {"SM", "MC"},
 
 
 def _hi_decode_step(w: Workload, alloc: dict, placement: Placement,
-                    kv_pos: int, calib: Calib, batch: int = 1):
+                    kv_pos: int, calib: Calib, batch: int = 1,
+                    scenario=None):
     """(step_time_s, step_energy_j, NoIEval) of one 2.5D-HI decode step
     over ``batch`` active slots.
 
@@ -268,7 +275,7 @@ def _hi_decode_step(w: Workload, alloc: dict, placement: Placement,
     N=1 per slot, with the KV-cache reads bounding the score phase; the
     weight streams are shared across the batch."""
     phases = decode_step_phases(w, kv_pos, batch)
-    noi_t, ev = _phase_noi_times(placement, phases)
+    noi_t, ev = _phase_noi_times(placement, phases, scenario)
     noi_by = {p.name: t for p, t in zip(phases, noi_t)}
     by = {p.name: p for p in phases}
     dram_bw = alloc["DRAM"] * C.DRAM.bw
@@ -313,7 +320,7 @@ def simulate_generation(w: Workload, n_chiplets: int, prompt_len: int,
                         gen_len: int, *, arch: str = "2.5D-HI",
                         placement: Optional[Placement] = None,
                         calib: Calib = CALIB, samples: int = 4,
-                        batch: int = 1) -> GenResult:
+                        batch: int = 1, scenario=None) -> GenResult:
     """Full generation episode on any of the three architectures.
 
     TTFT is the calibrated single-pass latency over the prompt plus the
@@ -322,7 +329,10 @@ def simulate_generation(w: Workload, n_chiplets: int, prompt_len: int,
     position).  ``batch`` runs the decode steps in the continuous-batching
     regime: ``batch`` concurrent same-shape episodes share every step
     (weights stream once per step); ``batch=1`` reproduces the
-    single-stream episode bit-identically."""
+    single-stream episode bit-identically.  ``scenario`` (a
+    ``core.faults.FaultScenario``) degrades the NoI for the whole episode;
+    raises ``DisconnectedFabric`` when the surviving fabric cannot route
+    the required traffic."""
     if batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
     if arch != "2.5D-HI":
@@ -330,18 +340,19 @@ def simulate_generation(w: Workload, n_chiplets: int, prompt_len: int,
         fn = {"HAIMA_chiplet": B.simulate_generation_haima,
               "TransPIM_chiplet": B.simulate_generation_transpim}[arch]
         return fn(w, n_chiplets, prompt_len, gen_len, calib=calib,
-                  samples=samples, batch=batch)
+                  samples=samples, batch=batch, scenario=scenario)
 
     w = dataclasses.replace(w, seq_len=prompt_len)
     alloc = _alloc(n_chiplets)
     placement = placement or initial_placement(n_chiplets)
-    prefill = simulate_2p5d_hi(w, n_chiplets, placement=placement, calib=calib)
+    prefill = simulate_2p5d_hi(w, n_chiplets, placement=placement,
+                               calib=calib, scenario=scenario)
 
     # KV write-back rides on top of the calibrated single pass: per-layer
     # commit of the prompt's K/V (or the cross-KV projection) to DRAM
     pre_phases = prefill_phases(w)
     kv_phase = pre_phases[-1]
-    kv_noi, kv_ev = _phase_noi_times(placement, [kv_phase])
+    kv_noi, kv_ev = _phase_noi_times(placement, [kv_phase], scenario)
     t_kv = max(kv_phase.dram_bytes / (alloc["DRAM"] * C.DRAM.bw), kv_noi[0])
     kv_energy = _energy([kv_phase], {"kv_write": t_kv}, alloc, kv_ev,
                         {"kv_write": {"MC"}})
@@ -350,7 +361,8 @@ def simulate_generation(w: Workload, n_chiplets: int, prompt_len: int,
     steps = max(gen_len - 1, 0)
     step_t, step_e, ev = [], [], None
     for pos in _decode_positions(prompt_len, gen_len, samples):
-        t, e, ev = _hi_decode_step(w, alloc, placement, pos, calib, batch)
+        t, e, ev = _hi_decode_step(w, alloc, placement, pos, calib, batch,
+                                   scenario)
         step_t.append(t)
         step_e.append(e)
     decode_step = sum(step_t) / len(step_t)

@@ -21,9 +21,20 @@ in JAX with static shapes).  Each engine iteration runs three phases:
 3. **decode** — one jitted, cache-donated step over the full slot pool:
    decode → sample (greedy and temperature, PRNG threaded on device) →
    position/budget/EOS bookkeeping; the only device→host traffic per
-   iteration is one packed ``(K, 2, max_batch)`` int32 of
-   ``(next_token, done)``.  Mid-prefill and dead slots carry ``pos = -1``
-   so their decode writes are dropped, never corrupting a half-filled row.
+   iteration is one packed ``(K, 3, max_batch)`` int32 of
+   ``(next_token, done, anomaly)``.  Mid-prefill and dead slots carry
+   ``pos = -1`` so their decode writes are dropped, never corrupting a
+   half-filled row.
+
+Hardening (defaults off → bit-identical to the plain engine): per-request
+deadlines (``deadline_ms`` — expired requests are evicted and marked
+``FAILED_DEADLINE``), bounded-queue overload shedding (``max_queue`` —
+excess submits return with the retriable ``REJECTED`` status), NaN/inf
+logit quarantine (an anomalous slot is frozen and retried
+``anomaly_retries`` times before only that request fails — the batch
+survives), and explicit ``run_until_drained`` failure semantics
+(``EngineStallError`` + ``FAILED_MAX_ITERS``, never a silent partial
+drain).  Every submitted request ends in a terminal state.
 
 Every prefill shape is static: the packed stream is always ``(1, C)``, the
 continuation always ``(max_batch, C)``, and non-packable architectures
@@ -85,6 +96,37 @@ class EngineConfig:
     kv_bits: int = 0              # 0 = fp pool; 8/4 = quantised slot-pool KV
     #   cache (per-(token, head) scales, quantise-on-commit / dequantise-
     #   on-read; the jitted step never materialises an fp cache)
+    deadline_ms: float = 0.0      # per-request TTL from submit (0 = none):
+    #   expired requests are evicted (queued or mid-decode) and marked
+    #   FAILED_DEADLINE instead of decoding forever
+    max_queue: int = 0            # bounded-queue admission (0 = unbounded):
+    #   submits beyond the bound are shed with the retriable REJECTED
+    #   status instead of growing the backlog without bound
+    anomaly_retries: int = 1      # NaN/inf-logit quarantine: a slot whose
+    #   logits go non-finite is frozen (no token, no pos/budget advance)
+    #   and retried this many times before only that request is failed —
+    #   the rest of the batch keeps decoding
+
+
+class EngineStallError(RuntimeError):
+    """``run_until_drained`` exhausted ``max_iters`` with requests still in
+    flight.  Every stranded request has been marked ``FAILED_MAX_ITERS``
+    (terminal) before this is raised — nothing is silently dropped."""
+
+
+# Request terminal states (Request.status).  A submitted request always
+# ends in exactly one of the terminal states below — queue/slot limbo is
+# never silent.
+QUEUED = "queued"
+ACTIVE = "active"
+DONE = "done"
+FAILED_DEADLINE = "failed_deadline"    # missed its EngineConfig.deadline_ms
+FAILED_ANOMALY = "failed_anomaly"      # non-finite logits past the retries
+FAILED_MAX_ITERS = "failed_max_iters"  # stranded at max_iters exhaustion
+REJECTED = "rejected"                  # shed at submit (bounded queue) —
+#                                        retriable: resubmit later
+TERMINAL = (DONE, FAILED_DEADLINE, FAILED_ANOMALY, FAILED_MAX_ITERS,
+            REJECTED)
 
 
 @dataclasses.dataclass
@@ -95,9 +137,15 @@ class Request:
     # -- filled by the engine -------------------------------------------------
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+    status: str = QUEUED
+    deadline: float = float("inf")           # absolute wall-clock bound
     t_enqueue: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+
+    @property
+    def terminal(self) -> bool:
+        return self.status in TERMINAL
 
 
 # prompt-length buckets for the sequential (packed=False) baseline path:
@@ -135,6 +183,11 @@ class ServingEngine:
         # backlog (the old list.pop(0) rescan was O(n) per admission)
         self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
+        self.failed: list[Request] = []      # terminal failures (deadline /
+        #                                      anomaly / max_iters)
+        self.rejected: list[Request] = []    # shed at submit (retriable)
+        self._slot_anomalies = [0] * B       # consecutive non-finite-logit
+        #                                      steps per slot (quarantine)
         self._uid = 0
 
         # host-transfer / prefill accounting (benchmarks/perf_serving.py)
@@ -229,8 +282,17 @@ class ServingEngine:
     def _fused_step_fn(self, params, cache, state):
         """decode → sample → bookkeeping, all on device.  Runs
         ``decode_chunk`` iterations (lax.scan for >1) and returns the new
-        (cache, state) plus a packed (K, 2, B) int32 of (next_token | -1,
-        done) — the only array the host reads back per step."""
+        (cache, state) plus a packed (K, 3, B) int32 of (next_token | -1,
+        done, anomaly) — the only array the host reads back per step.
+
+        A slot whose logits come back non-finite is *frozen*: no token
+        committed, pos/budget untouched, still live — the identical step
+        re-runs next iteration (the KV write at the same pos is
+        idempotent), so a transient fault costs one retry and a persistent
+        one is quarantined by the host without touching the other slots
+        (decode is batch-parallel, no cross-slot mixing).  With finite
+        logits ``ok == live`` and every value below reduces to the
+        anomaly-free step bit-identically."""
         def one(carry, _):
             cache, state = carry
             live = state["live"]
@@ -241,16 +303,19 @@ class ServingEngine:
                                           state["tokens"], pos_w,
                                           impl=self.ecfg.impl)
             nxt, key = self._sample_dev(logits, state["key"])
-            pos_new = jnp.where(live, state["pos"] + 1, state["pos"])
-            budget_new = jnp.where(live, state["budget"] - 1, state["budget"])
+            bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
+            ok = live & ~bad
+            pos_new = jnp.where(ok, state["pos"] + 1, state["pos"])
+            budget_new = jnp.where(ok, state["budget"] - 1, state["budget"])
             done = (budget_new <= 0) | (pos_new >= self.ecfg.kv_len)
             if self.ecfg.eos_token >= 0:
                 done = done | (nxt == self.ecfg.eos_token)
-            done = live & done
-            packed = jnp.stack([jnp.where(live, nxt, -1),
-                                done.astype(jnp.int32)])
+            done = ok & done
+            packed = jnp.stack([jnp.where(ok, nxt, -1),
+                                done.astype(jnp.int32),
+                                (live & bad).astype(jnp.int32)])
             state = {
-                "tokens": jnp.where(live, nxt, state["tokens"]),
+                "tokens": jnp.where(ok, nxt, state["tokens"]),
                 "pos": pos_new,
                 "budget": budget_new,
                 "live": live & ~done,
@@ -407,19 +472,87 @@ class ServingEngine:
 
     # -- public API -------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: Optional[int] = None) -> Request:
-        req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=max_new_tokens, t_enqueue=time.time())
+        """Validate and enqueue one request.
+
+        Malformed inputs (empty / over-long prompts, non-integer dtype,
+        wrong ndim, negative budget) raise ``ValueError`` here — at submit
+        time, not deep inside a jitted step.  When the bounded queue
+        (``EngineConfig.max_queue``) is full the request is shed: returned
+        with the retriable ``REJECTED`` status instead of enqueued."""
+        arr = np.asarray(prompt)
+        if arr.ndim != 1:
+            raise ValueError(f"prompt must be 1-D, got ndim={arr.ndim}")
+        if arr.size == 0:
+            raise ValueError("prompt must hold at least one token")
+        if arr.dtype.kind not in "iu":
+            raise ValueError(
+                f"prompt must be integer token ids, got dtype={arr.dtype}")
+        if arr.size + 1 >= self.ecfg.kv_len:
+            raise ValueError(
+                f"prompt ({arr.size}) ≥ kv_len ({self.ecfg.kv_len}): no room "
+                f"for even one generated token in the KV budget")
+        if max_new_tokens is not None and max_new_tokens < 0:
+            raise ValueError(
+                f"max_new_tokens must be >= 0, got {max_new_tokens}")
+        now = time.time()
+        req = Request(uid=self._uid, prompt=arr.astype(np.int32),
+                      max_new_tokens=max_new_tokens, t_enqueue=now)
+        if self.ecfg.deadline_ms > 0:
+            req.deadline = now + self.ecfg.deadline_ms / 1e3
         self._uid += 1
+        if self.ecfg.max_queue > 0 and len(self.queue) >= self.ecfg.max_queue:
+            req.status = REJECTED
+            req.t_done = now
+            self.rejected.append(req)
+            return req
         self.queue.append(req)
         return req
 
     def step(self) -> int:
-        """One engine iteration: admission (packed prefill) + chunked
-        prefill continuation + one decode step over the slot pool.  Returns
-        the number of occupied slots."""
+        """One engine iteration: deadline eviction + admission (packed
+        prefill) + chunked prefill continuation + one decode step over the
+        slot pool.  Returns the number of occupied slots."""
+        if self.ecfg.deadline_ms > 0:
+            self._evict_expired()
         if self.ecfg.fused:
             return self._step_fused()
         return self._step_host()
+
+    # -- failure plumbing ------------------------------------------------------
+    def _fail(self, req: Request, status: str, now: Optional[float] = None):
+        """Move a request to a terminal failure state (never ``finished``)."""
+        req.status = status
+        req.t_done = now if now is not None else time.time()
+        self.failed.append(req)
+
+    def _kill_slot(self, i: int):
+        """Free slot ``i`` and silence its device row so the decode sweep
+        never advances a dead request again."""
+        self.slot_req[i] = None
+        self._prefilling.pop(i, None)
+        self._slot_anomalies[i] = 0
+        if self.ecfg.fused:
+            self._state["live"] = self._state["live"].at[i].set(False)
+        elif hasattr(self, "_slot_pos"):
+            self._slot_budget[i] = 0
+
+    def _evict_expired(self):
+        """Fail every queued or in-flight request past its deadline —
+        expired work is dropped before it spends another admission or
+        decode step (the slot frees for a request that can still make it)."""
+        now = time.time()
+        if self.queue:
+            kept = collections.deque()
+            for req in self.queue:
+                if now > req.deadline:
+                    self._fail(req, FAILED_DEADLINE, now)
+                else:
+                    kept.append(req)
+            self.queue = kept
+        for i, req in enumerate(self.slot_req):
+            if req is not None and now > req.deadline:
+                self._fail(req, FAILED_DEADLINE, now)
+                self._kill_slot(i)
 
     def _step_fused(self) -> int:
         t0 = time.perf_counter()
@@ -447,14 +580,29 @@ class ServingEngine:
             # lets the occupancy mean discount the dead tail of a chunk
             self.active_slot_hist[int((arr[it, 0] >= 0).sum())] += 1
             for i, req in enumerate(self.slot_req):
-                if req is None or i in self._prefilling or arr[it, 0, i] < 0:
+                if req is None or i in self._prefilling:
                     continue
+                if arr[it, 2, i]:                 # non-finite logits: the
+                    # device froze the slot (no token, no pos advance) and
+                    # will retry the identical step; quarantine after the
+                    # configured retries — only this request fails, the
+                    # rest of the batch keeps decoding
+                    self._slot_anomalies[i] += 1
+                    if self._slot_anomalies[i] > self.ecfg.anomaly_retries:
+                        self._fail(req, FAILED_ANOMALY, now)
+                        self._kill_slot(i)
+                    continue
+                if arr[it, 0, i] < 0:
+                    continue
+                self._slot_anomalies[i] = 0       # clean step: retry budget
+                #                                   resets (transient fault)
                 tok = int(arr[it, 0, i])
                 if not req.output:
                     req.t_first_token = now
                 req.output.append(tok)
                 if arr[it, 1, i]:
                     req.done = True
+                    req.status = DONE
                     req.t_done = now
                     self.finished.append(req)
                     self.slot_req[i] = None  # slot freed → continuous batching
@@ -491,18 +639,38 @@ class ServingEngine:
             if self._slot_budget[i] <= 0 or hit_eos or \
                     self._slot_pos[i] >= self.ecfg.kv_len:
                 req.done = True
+                req.status = DONE
                 req.t_done = now
                 self.finished.append(req)
                 self.slot_req[i] = None      # slot freed → continuous batching
         return sum(r is not None for r in self.slot_req)
 
     def run_until_drained(self, max_iters: int = 10_000) -> list[Request]:
+        """Step until every request reaches a terminal state.
+
+        Exhausting ``max_iters`` is an explicit failure, never a silent
+        partial drain: every request still queued or in a slot is marked
+        ``FAILED_MAX_ITERS`` (terminal, listed in ``self.failed``) and
+        ``EngineStallError`` is raised."""
         it = 0
         while (self.queue or any(r is not None for r in self.slot_req)):
             self.step()
             it += 1
             if it > max_iters:
-                raise RuntimeError("engine did not drain")
+                now = time.time()
+                stranded = list(self.queue) + [r for r in self.slot_req
+                                               if r is not None]
+                for req in self.queue:
+                    self._fail(req, FAILED_MAX_ITERS, now)
+                self.queue.clear()
+                for i, req in enumerate(self.slot_req):
+                    if req is not None:
+                        self._fail(req, FAILED_MAX_ITERS, now)
+                        self._kill_slot(i)
+                raise EngineStallError(
+                    f"engine did not drain in {max_iters} iterations; "
+                    f"{len(stranded)} request(s) marked "
+                    f"{FAILED_MAX_ITERS}")
         return self.finished
 
     # -- admission: packed ragged prefill + chunked continuation ---------------
@@ -517,6 +685,7 @@ class ServingEngine:
                 else self.ecfg.max_new_tokens
             if budget <= 0:
                 req.done = True
+                req.status = DONE
                 req.t_first_token = req.t_done = time.time()
                 self.finished.append(req)
                 continue
@@ -605,11 +774,14 @@ class ServingEngine:
                 req.t_first_token = now
                 if budget == 1:     # the prefill sample was the whole budget
                     req.done = True
+                    req.status = DONE
                     req.t_done = now
                     self.finished.append(req)
                     continue
+                req.status = ACTIVE
                 self.slot_req[slot] = req
             else:                   # long prompt: first chunk only
+                req.status = ACTIVE
                 self.slot_req[slot] = req
                 self._prefilling[slot] = (take, budget)
 
@@ -653,6 +825,7 @@ class ServingEngine:
                 req.t_first_token = now
                 if budget == 1:
                     req.done = True
+                    req.status = DONE
                     req.t_done = now
                     self.finished.append(req)
                     self.slot_req[slot] = None
@@ -675,9 +848,11 @@ class ServingEngine:
         req.t_first_token = time.time()
         if budget == 1:             # the prefill sample was the whole budget
             req.done = True
+            req.status = DONE
             req.t_done = req.t_first_token
             self.finished.append(req)
         else:
+            req.status = ACTIVE
             self.slot_req[slot] = req
 
     def _admit_padded(self, free):
@@ -738,9 +913,11 @@ class ServingEngine:
             req.t_first_token = time.time()
             if budget == 1:         # the prefill sample was the whole budget
                 req.done = True
+                req.status = DONE
                 req.t_done = req.t_first_token
                 self.finished.append(req)
                 continue
+            req.status = ACTIVE
             self.slot_req[slot] = req
             self._slot_pos[slot] = plen
             self._slot_budget[slot] = budget - 1
@@ -754,10 +931,21 @@ class ServingEngine:
             sub, logits / self.ecfg.temperature, axis=-1))
 
     # -- stats ---------------------------------------------------------------
+    def _failure_stats(self) -> dict:
+        by_status: collections.Counter = collections.Counter(
+            r.status for r in self.failed)
+        return {
+            "failed": len(self.failed),
+            "rejected": len(self.rejected),
+            "failed_deadline": by_status.get(FAILED_DEADLINE, 0),
+            "failed_anomaly": by_status.get(FAILED_ANOMALY, 0),
+            "failed_max_iters": by_status.get(FAILED_MAX_ITERS, 0),
+        }
+
     def stats(self) -> dict:
         done = self.finished
         if not done:
-            return {"finished": 0}
+            return {"finished": 0, **self._failure_stats()}
         lat = [r.t_done - r.t_enqueue for r in done]
         ttft = [r.t_first_token - r.t_enqueue for r in done]
         toks = sum(len(r.output) for r in done)
@@ -791,4 +979,5 @@ class ServingEngine:
             # {n_active_slots: decode iterations at that occupancy} — the
             # measured continuous-batching utilisation of the slot pool
             "active_slots_hist": dict(sorted(self.active_slot_hist.items())),
+            **self._failure_stats(),
         }

@@ -1,0 +1,289 @@
+"""Fault injection (core/faults) + degraded-mode NoI routing: rerouting,
+explicit disconnection results, degenerate topologies, derating, seeded
+scenario sampling, and the fault-tolerance-aware MOO objective."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.core.cosim import (Episode, EpisodeMix, degradation_under_faults,
+                              fabric_time, resilience_objective)
+from repro.core.faults import (NOMINAL, DisconnectedFabric, FaultModel,
+                               FaultScenario, all_link_scenarios,
+                               endurance_link_weights)
+from repro.core.noi import evaluate_noi, mesh_baseline_eval, noi_phase_time
+from repro.core.placement import Placement, initial_placement, mesh_links
+from repro.core.simulator import simulate_generation
+from repro.core.traffic import Workload, transformer_phases
+
+
+@pytest.fixture(scope="module")
+def phases():
+    w = Workload.from_config(get_config("bert-base"), seq_len=16)
+    return transformer_phases(w)
+
+
+@pytest.fixture(scope="module")
+def mesh36():
+    return initial_placement(36)
+
+
+def _finite_eval(ev):
+    for x in (ev.mu, ev.sigma, ev.max_util, ev.total_byte_hops):
+        assert math.isfinite(x) and not math.isnan(x)
+
+
+# ---------------------------------------------------------------------------
+# scenario semantics
+# ---------------------------------------------------------------------------
+
+def test_nominal_scenario_bit_identical(mesh36, phases):
+    """scenario=None, the NOMINAL constant, and an empty FaultScenario all
+    evaluate to exactly the same numbers (the fault plumbing is free when
+    unused — the calibration pins rely on it)."""
+    base = evaluate_noi(mesh36, phases)
+    for sc in (NOMINAL, FaultScenario(), FaultScenario.make()):
+        ev = evaluate_noi(mesh36, phases, scenario=sc)
+        assert (ev.mu, ev.sigma, ev.max_util, ev.total_byte_hops) == \
+            (base.mu, base.sigma, base.max_util, base.total_byte_hops)
+
+
+def test_link_failure_reroutes(mesh36, phases):
+    """Failing one mesh link leaves the fabric routable: the evaluation
+    stays finite and the dead link carries zero bytes."""
+    links = sorted(mesh36.links)
+    sc = FaultScenario.make([links[0]])
+    ev = evaluate_noi(mesh36, phases, scenario=sc)
+    assert not ev.disconnected
+    _finite_eval(ev)
+    for u in ev.per_phase_link_bytes:
+        assert u[0] == 0.0                       # nothing routed on it
+    base = evaluate_noi(mesh36, phases)
+    assert ev.total_byte_hops != base.total_byte_hops or ev.mu != base.mu
+
+
+def test_all_links_failed_is_explicit_disconnection(mesh36, phases):
+    sc = FaultScenario.make(sorted(mesh36.links))
+    ev = evaluate_noi(mesh36, phases, scenario=sc)
+    assert ev.disconnected
+    assert ev.mu == float("inf") and ev.sigma == float("inf")
+    assert not math.isnan(ev.mu)
+
+
+def test_disconnected_placement_without_scenario(phases):
+    """A linkless multi-chiplet placement is disconnected even fault-free —
+    explicit inf result, no NaN/zero-division."""
+    p = Placement(2, 2, ["SM", "MC", "DRAM", "ReRAM"], set(), [3])
+    ev = evaluate_noi(p, phases)
+    assert ev.disconnected and ev.mu == float("inf")
+
+
+def test_single_chiplet_system_is_zero_not_nan(phases):
+    """One chiplet, zero links: no inter-chiplet traffic → exactly-zero
+    link statistics (the empty-array mean used to NaN here)."""
+    p = Placement(1, 1, ["SM"], set(), [])
+    ev = evaluate_noi(p, phases)
+    assert not ev.disconnected
+    assert ev.mu == 0.0 and ev.sigma == 0.0 and ev.max_util == 0.0
+
+
+def test_chiplet_down_redistributes_and_role_wipeout_disconnects(mesh36,
+                                                                 phases):
+    roles = mesh36.roles()
+    drams = roles["DRAM"]
+    assert len(drams) > 1
+    ev = evaluate_noi(mesh36, phases,
+                      scenario=FaultScenario.make(failed_chiplets=[drams[0]]))
+    assert not ev.disconnected
+    _finite_eval(ev)
+    # traffic a dead chiplet would have sourced moves to its role peers
+    base = evaluate_noi(mesh36, phases)
+    assert ev.total_byte_hops != base.total_byte_hops
+    # killing EVERY chiplet of a role leaves its traffic unroutable
+    ev2 = evaluate_noi(mesh36, phases,
+                       scenario=FaultScenario.make(failed_chiplets=drams))
+    assert ev2.disconnected
+
+
+def test_derated_link_slows_phase_time(mesh36, phases):
+    base = evaluate_noi(mesh36, phases)
+    # derate the busiest link of the heaviest phase to 10% bandwidth
+    u = max(base.per_phase_link_bytes, key=lambda u: u.max())
+    busiest = sorted(mesh36.links)[int(np.argmax(u))]
+    sc = FaultScenario.make(derated_links={busiest: 0.1})
+    ev = evaluate_noi(mesh36, phases, scenario=sc)
+    assert ev.mu == base.mu                      # routing unchanged
+    assert ev.link_bw_scale is not None
+    t0 = noi_phase_time(u)
+    t1 = noi_phase_time(u, ev.link_bw_scale)
+    assert t1 == pytest.approx(t0 * 10.0)
+
+
+def test_derate_factor_validated():
+    with pytest.raises(ValueError, match="derate"):
+        FaultScenario.make(derated_links={(0, 1): 0.0})
+    with pytest.raises(ValueError, match="derate"):
+        FaultScenario.make(derated_links={(0, 1): 1.5})
+
+
+def test_mesh_baseline_eval_degenerate_is_explicit(phases):
+    """A scenario that wipes a whole role disconnects every sampled mesh
+    draw: the baseline reports disconnection explicitly (no NaN from
+    averaging infs)."""
+    sc = FaultScenario.make(failed_chiplets=range(36))
+    ev = mesh_baseline_eval(36, phases, n_samples=2, scenario=sc)
+    assert ev.disconnected and not math.isnan(ev.mu)
+    ok = mesh_baseline_eval(36, phases, n_samples=2)
+    assert not ok.disconnected
+    _finite_eval(ok)
+
+
+# ---------------------------------------------------------------------------
+# scenario sampling
+# ---------------------------------------------------------------------------
+
+def test_sampling_deterministic_per_design(mesh36):
+    fm = FaultModel(k_links=2, seed=5)
+    a = fm.sample_scenarios(mesh36, 6)
+    b = fm.sample_scenarios(mesh36, 6)
+    assert a == b
+    assert all(len(s.failed_links) == 2 for s in a)
+    c = FaultModel(k_links=2, seed=6).sample_scenarios(mesh36, 6)
+    assert a != c
+
+
+def test_sampling_weights_bias_draws(mesh36):
+    links = sorted(mesh36.links)
+    w = [0.0] * len(links)
+    w[7] = 1.0
+    fm = FaultModel(k_links=1, seed=0)
+    for sc in fm.sample_scenarios(mesh36, 5, link_weights=w):
+        assert sc.failed_links == frozenset({links[7]})
+    with pytest.raises(ValueError, match="link_weights"):
+        fm.sample_scenarios(mesh36, 1, link_weights=[1.0])
+
+
+def test_sampling_chiplets_and_derates(mesh36):
+    fm = FaultModel(k_links=1, k_chiplets=1, k_derated=2, bw_derate=0.5,
+                    seed=1)
+    for sc in fm.sample_scenarios(mesh36, 4):
+        assert len(sc.failed_chiplets) == 1
+        assert len(sc.derated_links) == 2
+        assert all(f == 0.5 for _, f in sc.derated_links)
+        assert not (set(l for l, _ in sc.derated_links) & sc.failed_links)
+
+
+def test_fault_model_validation():
+    with pytest.raises(ValueError):
+        FaultModel(k_links=-1)
+    with pytest.raises(ValueError):
+        FaultModel(bw_derate=0.0)
+
+
+def test_all_link_scenarios_exhaustive_and_capped(mesh36):
+    scs = all_link_scenarios(mesh36, k=1)
+    assert len(scs) == len(mesh36.links)
+    assert len({s.failed_links for s in scs}) == len(scs)
+    capped = all_link_scenarios(mesh36, k=2, max_scenarios=10)
+    assert len(capped) == 10
+    assert all(len(s.failed_links) == 2 for s in capped)
+
+
+def test_endurance_weights_upweight_reram_links(mesh36, phases):
+    w = endurance_link_weights(mesh36, phases, reram_wear_factor=4.0)
+    links = sorted(mesh36.links)
+    assert len(w) == len(links)
+    assert all(x > 0 for x in w)
+    rerams = set(mesh36.roles()["ReRAM"])
+    rw = [x for l, x in zip(links, w) if l[0] in rerams or l[1] in rerams]
+    other = [x for l, x in zip(links, w)
+             if l[0] not in rerams and l[1] not in rerams]
+    assert np.mean(rw) > np.mean(other)
+
+
+# ---------------------------------------------------------------------------
+# simulator threading
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["2.5D-HI", "HAIMA_chiplet",
+                                  "TransPIM_chiplet"])
+def test_generation_per_scenario_and_disconnection(arch):
+    w = Workload.from_config(get_config("bert-base"), seq_len=16)
+    p = initial_placement(36)
+    sc = FaultScenario.make([sorted(p.links)[0]])
+    g = simulate_generation(w, 36, 16, 4, arch=arch, scenario=sc)
+    assert math.isfinite(g.ttft_s) and math.isfinite(g.decode_step_s)
+    assert math.isfinite(g.energy_j)
+    base = simulate_generation(w, 36, 16, 4, arch=arch)
+    nsc = simulate_generation(w, 36, 16, 4, arch=arch, scenario=NOMINAL)
+    assert (nsc.ttft_s, nsc.decode_step_s, nsc.energy_j) == \
+        (base.ttft_s, base.decode_step_s, base.energy_j)
+    wipe = FaultScenario.make(failed_chiplets=range(36))
+    with pytest.raises(DisconnectedFabric):
+        simulate_generation(w, 36, 16, 4, arch=arch, scenario=wipe)
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerance-aware objective
+# ---------------------------------------------------------------------------
+
+def _mix():
+    return EpisodeMix([Episode(16, 8, 2)], prefill_chunk=16, max_batch=2,
+                      active_hist={2: 1}, max_stall_tokens=16)
+
+
+def test_resilience_objective_orders_fragile_below_robust():
+    """On a mesh (1-failure-robust) the objective is finite with
+    worst >= the seed-normalised nominal (= 1.0 for the seed placement
+    itself, always scenario 0); on a spanning tree (any link failure
+    disconnects) it is inf — the MOO archive drops such designs."""
+    obj, seed_time, phs = resilience_objective(
+        get_config("bert-base"), _mix(), 36,
+        fault_model=FaultModel(k_links=1, seed=0), n_scenarios=4)
+    mesh = initial_placement(36)
+    assert seed_time == pytest.approx(fabric_time(mesh, phs))
+    e, wc = obj(mesh)
+    assert math.isfinite(e) and math.isfinite(wc)
+    assert wc >= 1.0 and wc >= e > 0    # nominal (==1.0) is scenario 0
+
+    # spanning tree: drop mesh links until exactly n-1 remain, connected
+    tree = mesh.copy()
+    for l in sorted(mesh.links):
+        if len(tree.links) == tree.n - 1:
+            break
+        tree.links.discard(l)
+        if not tree.connected():
+            tree.links.add(l)
+    assert tree.connected() and len(tree.links) == tree.n - 1
+    assert obj(tree) == (float("inf"), float("inf"))
+
+    from repro.core.moo import Archive
+    a = Archive()
+    assert a.add(mesh, obj(mesh))
+    assert not a.add(tree, obj(tree))
+
+
+def test_degradation_under_faults_reports():
+    p = initial_placement(36)
+    obj, _, phs = resilience_objective(
+        get_config("bert-base"), _mix(), 36, n_scenarios=2)
+    scs = all_link_scenarios(p, k=1, max_scenarios=8)
+    rep = degradation_under_faults(p, phs, scs)
+    assert rep["n_scenarios"] == 8 and rep["n_disconnected"] == 0
+    assert math.isfinite(rep["worst_t"])
+    assert rep["worst_t"] >= rep["expected_t"] > 0
+    assert rep["nominal_t"] > 0 and rep["worst_label"]
+    # all-links-down scenario disconnects and is counted, never NaN
+    rep2 = degradation_under_faults(
+        p, phs, [FaultScenario.make(sorted(p.links))])
+    assert rep2["n_disconnected"] == 1
+    assert rep2["worst_t"] == float("inf")
+
+
+def test_endurance_weighted_objective_runs():
+    obj, _, _ = resilience_objective(
+        get_config("bert-base"), _mix(), 36, n_scenarios=2,
+        endurance_weighted=True)
+    e, wc = obj(initial_placement(36))
+    assert math.isfinite(e) and math.isfinite(wc)

@@ -324,19 +324,18 @@ def test_deep_queue_admission_fifo(qwen):
     assert firsts == sorted(firsts)
 
 
-def test_overlong_prompt_mid_burst_does_not_strand_neighbours(qwen):
-    """An over-long prompt raising mid-admission must re-queue the requests
-    already popped into the packed stream — they drain on the next step."""
+def test_overlong_prompt_rejected_at_submit_spares_neighbours(qwen):
+    """An over-long prompt is rejected at submit time (it never reaches the
+    packed stream), and the requests around it drain untouched."""
     cfg, params = qwen
     eng = ServingEngine(cfg, params, EngineConfig(
         max_batch=2, kv_len=32, max_new_tokens=2, impl="ref",
         prefill_chunk=16))
     rng = np.random.default_rng(0)
     r1 = eng.submit(rng.integers(0, cfg.vocab_size, size=5))
-    eng.submit(rng.integers(0, cfg.vocab_size, size=40))   # >= kv_len
-    r3 = eng.submit(rng.integers(0, cfg.vocab_size, size=4))
     with pytest.raises(ValueError, match="kv_len"):
-        eng.step()
+        eng.submit(rng.integers(0, cfg.vocab_size, size=40))   # >= kv_len
+    r3 = eng.submit(rng.integers(0, cfg.vocab_size, size=4))
     eng.run_until_drained()
     assert r1.done and r3.done
     assert len(r1.output) == 2 and len(r3.output) == 2

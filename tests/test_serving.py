@@ -73,11 +73,13 @@ def test_greedy_decode_matches_teacher_forcing(small_model):
 
 
 def test_prompt_too_long_rejected(small_model):
+    """Over-long prompts are rejected at submit time (clear ValueError),
+    not deep inside a jitted step."""
     cfg, params = small_model
     eng = _engine(cfg, params, kv_len=16)
-    eng.submit(np.arange(20) % cfg.vocab_size)
     with pytest.raises(ValueError, match="kv_len"):
-        eng.step()
+        eng.submit(np.arange(20) % cfg.vocab_size)
+    assert not eng.queue                     # nothing enqueued
 
 
 def test_stats(small_model):
@@ -200,3 +202,152 @@ def test_moe_arch_serves(small_model):
     done = eng.run_until_drained()
     assert len(done) == 2
     assert all(len(r.output) == 4 for r in done)
+
+
+# ---------------------------------------------------------------------------
+# resilience: validation, shedding, deadlines, anomaly quarantine, stall
+# ---------------------------------------------------------------------------
+
+def test_submit_validation(small_model):
+    """Malformed submissions fail loudly at submit(), never inside a
+    jitted step: wrong rank, empty, float dtype, negative budget."""
+    cfg, params = small_model
+    eng = _engine(cfg, params)
+    with pytest.raises(ValueError, match="1-D"):
+        eng.submit(np.asarray([[1, 2], [3, 4]]))
+    with pytest.raises(ValueError, match="at least one token"):
+        eng.submit(np.asarray([], np.int32))
+    with pytest.raises(ValueError, match="integer"):
+        eng.submit(np.asarray([1.0, 2.0]))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(np.asarray([1, 2, 3]), max_new_tokens=-1)
+    assert not eng.queue
+
+
+def test_bounded_queue_sheds_not_strands(small_model):
+    """With max_queue set, overload is shed as retriable REJECTED at
+    submit; admitted requests still finish — every request terminal."""
+    from repro.serving.engine import DONE, REJECTED
+    cfg, params = small_model
+    eng = _engine(cfg, params, max_batch=1, max_new_tokens=2, max_queue=2)
+    reqs = [eng.submit(np.asarray([1, 2, 3])) for _ in range(5)]
+    statuses = [r.status for r in reqs]
+    assert statuses.count(REJECTED) == 3
+    eng.run_until_drained()
+    assert [r.status for r in reqs].count(DONE) == 2
+    assert all(r.terminal for r in reqs)
+    assert all(r.output == [] for r in reqs if r.status == REJECTED)
+    s = eng.stats()
+    assert s["rejected"] == 3 and s["finished"] == 2
+
+
+def test_deadline_expires_queued_request(small_model):
+    """A request whose deadline passes while still queued is evicted as
+    FAILED_DEADLINE on the next step — it never occupies a slot."""
+    import time
+    from repro.serving.engine import FAILED_DEADLINE
+    cfg, params = small_model
+    eng = _engine(cfg, params, max_batch=1, deadline_ms=20)
+    r = eng.submit(np.asarray([1, 2, 3]))
+    time.sleep(0.05)
+    eng.step()
+    assert r.status == FAILED_DEADLINE and r.terminal
+    assert not eng.queue and all(x is None for x in eng.slot_req)
+    assert eng.stats()["failed_deadline"] == 1
+
+
+def test_deadline_evicts_mid_decode(small_model):
+    """An in-flight request past its deadline is evicted mid-decode with
+    whatever tokens it produced — the drain terminates."""
+    from repro.serving.engine import FAILED_DEADLINE
+    cfg, params = small_model
+    eng = _engine(cfg, params, max_batch=1, deadline_ms=30,
+                  max_new_tokens=200_000)
+    r = eng.submit(np.asarray([1, 2, 3, 4]))
+    eng.run_until_drained()
+    assert r.status == FAILED_DEADLINE and r.terminal
+    assert len(r.output) < 200_000
+
+
+def test_run_until_drained_marks_stranded(small_model):
+    """max_iters exhaustion is an explicit failure: EngineStallError, and
+    every stranded request lands in FAILED_MAX_ITERS (regression for the
+    silent-partial-drain bug)."""
+    from repro.serving.engine import FAILED_MAX_ITERS, EngineStallError
+    cfg, params = small_model
+    eng = _engine(cfg, params, max_batch=1, max_new_tokens=50)
+    reqs = [eng.submit(np.asarray([1, 2, 3])) for _ in range(4)]
+    with pytest.raises(EngineStallError, match="did not drain"):
+        eng.run_until_drained(max_iters=2)
+    assert all(r.terminal for r in reqs)
+    assert any(r.status == FAILED_MAX_ITERS for r in reqs)
+    assert not eng.queue and all(x is None for x in eng.slot_req)
+    assert eng.stats()["failed_max_iters"] >= 1
+
+
+def _poison_slot(cache, slot):
+    """NaN one slot's KV pages (batch axis 1 of every stacked leaf)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.at[:, slot].set(jnp.nan)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, cache)
+
+
+def test_nan_quarantine_spares_the_batch(small_model):
+    """A slot producing non-finite logits is quarantined and failed alone;
+    the co-resident request's output stays bit-identical to a clean run."""
+    from repro.serving.engine import DONE, FAILED_ANOMALY
+    cfg, params = small_model
+    good_prompt = np.asarray([1, 2, 3, 4])
+    bad_prompt = np.asarray([7, 8, 9])
+
+    ref = _engine(cfg, params, max_batch=2, max_new_tokens=5)
+    ref.submit(good_prompt)
+    ref.run_until_drained()
+    want = ref.finished[0].output
+
+    eng = _engine(cfg, params, max_batch=2, max_new_tokens=5)
+    good = eng.submit(good_prompt)
+    bad = eng.submit(bad_prompt)
+    eng.step()                                   # both admitted + 1 decode
+    victim = eng.slot_req.index(bad)
+    eng.cache = _poison_slot(eng.cache, victim)
+    eng.run_until_drained()
+    assert bad.status == FAILED_ANOMALY and bad.terminal
+    assert good.status == DONE and good.output == want
+    assert eng.stats()["failed_anomaly"] == 1
+
+
+def test_transient_anomaly_retries_and_recovers(small_model):
+    """A transient non-finite step within the retry budget freezes the
+    slot (same position, no token emitted) and retries: once the fault
+    clears the request completes with the clean-run output, exactly."""
+    cfg, params = small_model
+    prompt = np.asarray([1, 2, 3, 4])
+
+    ref = _engine(cfg, params, max_batch=1, max_new_tokens=6)
+    ref.submit(prompt)
+    ref.run_until_drained()
+    want = ref.finished[0].output
+
+    eng = _engine(cfg, params, max_batch=1, max_new_tokens=6,
+                  anomaly_retries=3)
+    r = eng.submit(prompt)
+    eng.step()
+    snap = jax.tree_util.tree_map(jnp.copy, eng.cache)
+    eng.cache = _poison_slot(eng.cache, 0)
+    eng.step()                                   # anomaly: frozen, no token
+    eng.cache = snap                             # fault clears
+    eng.run_until_drained()
+    assert r.done and r.output == want
+    assert eng.stats()["failed_anomaly"] == 0
+
+
+def test_default_config_has_no_failure_paths(small_model):
+    """Defaults (no deadline, unbounded queue) leave the failure machinery
+    dormant: all DONE, zero failure counters."""
+    from repro.serving.engine import DONE
+    cfg, params = small_model
+    eng = _drain_workload(cfg, params, max_batch=2)
+    assert all(r.status == DONE for r in eng.finished)
+    s = eng.stats()
+    assert s["failed"] == 0 and s["rejected"] == 0
