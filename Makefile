@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow verify bench-serving bench-cosim bench-quant bench-resilience bench-smoke report
+.PHONY: test test-slow verify bench-serving bench-cosim bench-quant bench-resilience bench-recovery bench-smoke report
 
 test:               ## tier-1 test suite (everything, slow included)
 	$(PY) -m pytest -x -q
@@ -21,11 +21,15 @@ bench-quant:        ## quantised serving: parity/drift + Plane-B projection -> e
 bench-resilience:   ## fault sweeps + fault-aware NoI search + overload shedding -> experiments/BENCH_resilience.json
 	$(PY) -m benchmarks.perf_resilience
 
-bench-smoke:        ## tiny-config serving+cosim+quant+resilience benchmarks; assert the JSON report schemas
+bench-recovery:     ## chaos kill+restore + MTTR-aware NoI search -> experiments/BENCH_recovery.json
+	$(PY) -m benchmarks.perf_recovery
+
+bench-smoke:        ## tiny-config serving+cosim+quant+resilience+recovery benchmarks; assert the JSON report schemas
 	$(PY) -m benchmarks.perf_serving --smoke
 	$(PY) -m benchmarks.perf_cosim --smoke
 	$(PY) -m benchmarks.perf_quant --smoke
 	$(PY) -m benchmarks.perf_resilience --smoke
+	$(PY) -m benchmarks.perf_recovery --smoke
 
 # slow-marked tests run in their own non-blocking CI job (test-slow)
 verify:             ## CI gate: fast tests + bench smokes (schema-checked)

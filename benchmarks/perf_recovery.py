@@ -1,0 +1,425 @@
+"""Recovery benchmark: crash-safe serving and MTTR-aware NoI design.
+
+Two sections, one per plane:
+
+- **chaos** — Plane A exactly-once semantics under kill+restore.  For
+  every engine-servable zoo model the same request burst is drained
+  twice: once uninterrupted, once killed at an adversarially chosen
+  iteration (post-admission pre-snapshot, mid-prefill-chunk of a long
+  prompt, mid-decode) with two further iterations of work thrown away,
+  then revived via ``ServingEngine.restore`` from the snapshot + journal
+  (``repro.serving.checkpoint``).  The token streams must be
+  *bit-identical* per request uid — zero lost, duplicated, or divergent
+  tokens — including temperature sampling (per-slot PRNG keys are part
+  of the snapshot) and the int8 quantised slot pool.  Encoder-decoder
+  zoo members are reported as explicit unsupported rows (the engine has
+  no encoder prefill path); they are still covered by the Plane-B
+  section below.
+- **mttr_noi_search** — Plane B: the NoI design MOO-STAGE finds under
+  the fault-oblivious generation objective vs the MTTR-aware one
+  (``core.cosim.mttr_resilience_objective``: amortised checkpoint
+  write-back stream in steady state, KV-shard migration + restore read
+  priced into the worst case).  Both designs are scored under the same
+  *exhaustive* k=1 chiplet-loss sweep on worst-case service + recovery
+  time; the MTTR-aware design should carry the lower worst case.
+
+    PYTHONPATH=src python -m benchmarks.perf_recovery [--smoke]
+
+Results: ``experiments/BENCH_recovery.json``
+(``BENCH_recovery_smoke.json`` with ``--smoke``); rendered by
+``benchmarks/report.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+ZOO = ("llama2-7b", "gpt-j", "gemma2-9b", "qwen2.5-3b",
+       "bart-large", "whisper-large-v3")
+
+# adversarial kill kinds the chaos sweep must cover per servable model
+KILL_KINDS = ("post_admission", "mid_prefill", "mid_decode")
+
+_CHAOS_KEYS = {"model", "supported", "kv_bits", "temperature", "kills"}
+
+_KILL_KEYS = {"kill_at", "kind", "match", "lost", "duplicated",
+              "n_requests", "replayed_requests", "restores",
+              "checkpoints_written"}
+
+_MTTR_KEYS = {"model", "chiplets", "oblivious", "aware", "gain_worst_k1",
+              "aware_survives_k1", "same_design", "n_evals"}
+
+_SCORE_KEYS = {"nominal_t", "ckpt_overhead", "worst_total_k1",
+               "worst_service_k1", "worst_recovery_k1",
+               "n_disconnected_k1", "links"}
+
+
+def check_schema(rec: dict) -> None:
+    """Assert the BENCH_recovery.json record shape (CI bit-rot gate)."""
+    for key in ("bench", "smoke", "chiplets", "prompt_len", "gen_len",
+                "batch", "chaos", "mttr_noi_search"):
+        assert key in rec, f"missing top-level key {key!r}"
+    cells = rec["chaos"]["cells"]
+    assert cells, "chaos must not be empty"
+    for cell in cells:
+        missing = _CHAOS_KEYS - set(cell)
+        assert not missing, f"chaos cell missing {missing}"
+        if not cell["supported"]:
+            continue
+        assert cell["kills"], f"{cell['model']}: no kill points exercised"
+        for kill in cell["kills"]:
+            kmissing = _KILL_KEYS - set(kill)
+            assert not kmissing, f"kill row missing {kmissing}"
+            # the exactly-once contract is unconditional — smoke included
+            assert kill["match"], \
+                f"{cell['model']} kill@{kill['kill_at']}: token divergence"
+            assert kill["lost"] == 0 and kill["duplicated"] == 0, \
+                f"{cell['model']} kill@{kill['kill_at']}: lost/dup requests"
+            assert kill["restores"] == 1
+    if not rec["smoke"]:
+        servable = [c for c in cells if c["supported"]]
+        assert len(servable) >= 4, "full chaos must cover >=4 zoo models"
+        for cell in servable:
+            kinds = {k["kind"] for k in cell["kills"]}
+            assert set(KILL_KINDS) <= kinds, \
+                f"{cell['model']}: kill kinds {kinds} miss {KILL_KINDS}"
+            assert len({k["kill_at"] for k in cell["kills"]}) >= 3, \
+                f"{cell['model']}: need >=3 distinct kill iterations"
+        assert any(c["kv_bits"] for c in servable), \
+            "full chaos must include a quantised slot-pool variant"
+    cells = rec["mttr_noi_search"]["cells"]
+    assert cells, "mttr_noi_search must not be empty"
+    for cell in cells:
+        missing = _MTTR_KEYS - set(cell)
+        assert not missing, f"mttr_noi_search cell missing {missing}"
+        for side in ("oblivious", "aware"):
+            smissing = _SCORE_KEYS - set(cell[side])
+            assert not smissing, f"{side} score missing {smissing}"
+    if not rec["smoke"]:
+        assert len(cells) >= 6, "full sweep must cover the whole zoo"
+        improved = [c for c in cells
+                    if c["gain_worst_k1"] is None or c["gain_worst_k1"] > 1.0]
+        assert len(improved) >= 4, (
+            "MTTR-aware search must beat the fault-oblivious design on "
+            f"worst-case service+recovery for >=4 models "
+            f"(got {len(improved)})")
+
+
+# ---------------------------------------------------------------------------
+# chaos: kill + restore with exactly-once token semantics
+# ---------------------------------------------------------------------------
+
+def _outputs_by_uid(engine) -> dict:
+    out = {}
+    for req in engine.finished:
+        assert req.uid not in out, f"duplicated uid {req.uid}"
+        out[int(req.uid)] = [int(t) for t in req.output]
+    return out
+
+
+def _classify(engine, steps_taken: int) -> str:
+    if steps_taken == 0:
+        return "post_admission"
+    if engine._prefilling:
+        return "mid_prefill"
+    if any(r is not None for r in engine.slot_req):
+        return "mid_decode"
+    return "drained"
+
+
+def run_chaos(models, *, temperature: float = 0.8, quant_model: str = "",
+              max_steps: int = 24) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.config import get_config, reduce_config
+    from repro.models import transformer as T
+    from repro.serving.checkpoint import EngineCheckpointer
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    # one prompt longer than the chunk budget keeps a slot mid-prefill
+    # across iterations; the 5th prompt lands *after* the snapshot, so it
+    # only survives the crash through the journal
+    prompt_lens = (8, 5, 19, 11, 6)
+    chunk = 8
+
+    def build_case(name, kv_bits):
+        cfg = reduce_config(get_config(name))
+        servable = not (cfg.n_encoder_layers or cfg.cross_attn_decoder)
+        if not servable:
+            return cfg, None, None, None
+        params = T.init_params(cfg, jax.random.PRNGKey(0),
+                               param_dtype=jnp.float32)
+        ecfg = EngineConfig(max_batch=3, kv_len=48, max_new_tokens=6,
+                            impl="ref", prefill_chunk=chunk,
+                            temperature=temperature, seed=0,
+                            kv_bits=kv_bits)
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, size=n)
+                   for n in prompt_lens]
+        return cfg, params, ecfg, prompts
+
+    def reference(cfg, params, ecfg, prompts, kill_at):
+        eng = ServingEngine(cfg, params, ecfg)
+        reqs = [eng.submit(p.copy()) for p in prompts[:4]]
+        for _ in range(kill_at):
+            eng.step()
+        reqs.append(eng.submit(prompts[4].copy()))
+        eng.run_until_drained()
+        assert not eng.failed and not eng.rejected
+        return _outputs_by_uid(eng)
+
+    def chaos_once(cfg, params, ecfg, prompts, kill_at, root):
+        ckpt_dir = os.path.join(root, f"kill{kill_at}")
+        eng = ServingEngine(cfg, params, ecfg)
+        ck = EngineCheckpointer(eng, ckpt_dir)
+        for p in prompts[:4]:
+            ck.submit(p.copy())
+        for _ in range(kill_at):
+            eng.step()
+        kind = _classify(eng, kill_at)
+        ck.save()
+        ck.submit(prompts[4].copy())     # journal-only: post-snapshot
+        for _ in range(2):               # work the crash throws away
+            eng.step()
+        del eng                          # the "crash"
+        eng2 = ServingEngine.restore(cfg, params, ckpt_dir)
+        eng2.run_until_drained()
+        assert not eng2.failed and not eng2.rejected
+        stats = eng2.stats()
+        return _outputs_by_uid(eng2), kind, stats
+
+    def kill_schedule(cfg, params, ecfg, prompts):
+        """First iteration exhibiting each adversarial kind (scout run)."""
+        eng = ServingEngine(cfg, params, ecfg)
+        for p in prompts[:4]:
+            eng.submit(p.copy())
+        found = {"post_admission": 0}
+        for i in range(1, max_steps):
+            eng.step()
+            kind = _classify(eng, i)
+            if kind == "drained":
+                break
+            found.setdefault(kind, i)
+        return found
+
+    cells = []
+    for name in models:
+        kv_bits_list = [0] + ([8] if name == quant_model else [])
+        for kv_bits in kv_bits_list:
+            cfg, params, ecfg, prompts = build_case(name, kv_bits)
+            if params is None:
+                cells.append({
+                    "model": name, "supported": False, "kv_bits": kv_bits,
+                    "temperature": temperature, "kills": [],
+                    "reason": "engine has no encoder-decoder prefill path "
+                              "(covered by mttr_noi_search)"})
+                break
+            schedule = kill_schedule(cfg, params, ecfg, prompts)
+            kills = []
+            with tempfile.TemporaryDirectory() as root:
+                for kind, kill_at in sorted(schedule.items(),
+                                            key=lambda kv: kv[1]):
+                    ref = reference(cfg, params, ecfg, prompts, kill_at)
+                    got, seen, stats = chaos_once(cfg, params, ecfg,
+                                                  prompts, kill_at, root)
+                    lost = len(set(ref) - set(got))
+                    dup = len(got) - len(set(got))
+                    kills.append({
+                        "kill_at": kill_at, "kind": seen,
+                        "match": got == ref,
+                        "lost": lost, "duplicated": dup,
+                        "n_requests": len(ref),
+                        "replayed_requests": stats["replayed_requests"],
+                        "restores": stats["restores"],
+                        "checkpoints_written": stats["checkpoints_written"],
+                    })
+            cells.append({"model": name, "supported": True,
+                          "kv_bits": kv_bits, "temperature": temperature,
+                          "kills": kills})
+    return {"prompt_lens": list(prompt_lens), "prefill_chunk": chunk,
+            "cells": cells}
+
+
+# ---------------------------------------------------------------------------
+# MTTR-aware NoI search vs fault-oblivious, exhaustive k=1 chiplet loss
+# ---------------------------------------------------------------------------
+
+def _score_chiplet_loss(design, name, mix, phases, ckpt_phases_t,
+                        *, batch) -> dict:
+    """Worst-case (service + recovery) of one placement over every single
+    chiplet loss.  Disconnection of either the degraded service or the
+    recovery traffic is a flag + count (JSON-safe), never an inf."""
+    from repro.core.cosim import fabric_time, recovery_time
+    from repro.core.faults import all_chiplet_scenarios
+
+    nominal_t = fabric_time(design, phases)
+    out = {"links": len(design.links), "nominal_t": nominal_t,
+           "ckpt_overhead": ckpt_phases_t / max(nominal_t, 1e-30)}
+    worst = (-1.0, 0.0, 0.0)            # (total, service, recovery)
+    n_disc = 0
+    for sc in all_chiplet_scenarios(design, k=1):
+        svc = fabric_time(design, phases, sc)
+        rec = recovery_time(design, name, mix, sc, batch=batch)
+        total = svc + rec
+        if total == float("inf"):
+            n_disc += 1
+            continue
+        if total > worst[0]:
+            worst = (total, svc, rec)
+    disc = n_disc > 0
+    out["worst_total_k1"] = None if disc else worst[0]
+    out["worst_service_k1"] = None if disc else worst[1]
+    out["worst_recovery_k1"] = None if disc else worst[2]
+    out["n_disconnected_k1"] = n_disc
+    return out
+
+
+def run_mttr_search(models, chiplets: int, prompt_len: int, gen_len: int,
+                    *, batch: int = 8, requests: int = 4,
+                    iterations: int = 3, ls_steps: int = 12,
+                    n_scenarios: int = 8, ckpt_every: int = 32,
+                    mttr_weight: float = 1.0, seed: int = 0) -> dict:
+    import numpy as np
+
+    from repro.core.cosim import (Episode, EpisodeMix, fabric_time,
+                                  generation_objective,
+                                  mttr_resilience_objective,
+                                  seeded_noi_search)
+
+    chunk = max(prompt_len // 4, 1)
+    cells = []
+    for name in models:
+        mix = EpisodeMix([Episode(prompt_len, gen_len, requests)],
+                         prefill_chunk=chunk, max_batch=batch,
+                         active_hist={batch: 1}, max_stall_tokens=chunk)
+        # fault-oblivious designer: nominal service time only — never
+        # prices what losing a chiplet (and re-sharding its KV) costs
+        obl_obj, _, phases = generation_objective(name, mix, chiplets)
+        obl = seeded_noi_search(obl_obj, chiplets, iterations=iterations,
+                                ls_steps=ls_steps, seed=seed)
+        obl_design = min(obl.archive.designs,
+                         key=lambda d: fabric_time(d, phases))
+
+        # MTTR-aware designer: steady state carries the checkpoint
+        # write-back stream, worst case carries degraded service +
+        # KV-migration/restore recovery; picks the best worst case
+        aw_obj, _, aw_phases = mttr_resilience_objective(
+            name, mix, chiplets, n_scenarios=n_scenarios,
+            ckpt_every=ckpt_every, mttr_weight=mttr_weight)
+        aw = seeded_noi_search(aw_obj, chiplets, iterations=iterations,
+                               ls_steps=ls_steps, seed=seed)
+        aobjs = np.asarray(aw.archive.objs)
+        aw_design = aw.archive.designs[int(np.argmin(aobjs[:, 1]))]
+
+        # both designs under the same yardstick: exhaustive k=1 chiplet
+        # loss, worst-case service + recovery (ckpt stream reported as a
+        # separate nominal-overhead ratio, not folded into the service
+        # term — the comparison stays apples-to-apples)
+        scores = {}
+        for side, design in (("oblivious", obl_design),
+                             ("aware", aw_design)):
+            ckpt_t = fabric_time(design, aw_phases)
+            scores[side] = _score_chiplet_loss(
+                design, name, mix, phases, ckpt_t, batch=batch)
+        # worst-case total ratio oblivious/aware: > 1 means the
+        # MTTR-aware design recovers from its worst single chiplet loss
+        # faster; None = the oblivious design cannot recover at all while
+        # the aware one can (infinite gain)
+        gain = None
+        if scores["oblivious"]["worst_total_k1"] is not None \
+                and scores["aware"]["worst_total_k1"] is not None:
+            gain = (scores["oblivious"]["worst_total_k1"]
+                    / scores["aware"]["worst_total_k1"])
+        elif scores["aware"]["worst_total_k1"] is None:
+            gain = 0.0                  # aware design itself disconnects
+        cells.append({
+            "model": name, "chiplets": chiplets,
+            "oblivious": scores["oblivious"], "aware": scores["aware"],
+            "gain_worst_k1": gain,
+            "aware_survives_k1": scores["aware"]["n_disconnected_k1"] == 0,
+            "same_design": obl_design == aw_design,
+            "n_evals": obl.n_evals + aw.n_evals,
+        })
+    return {"chiplets": chiplets, "batch": batch, "requests": requests,
+            "iterations": iterations, "ls_steps": ls_steps,
+            "n_scenarios": n_scenarios, "ckpt_every": ckpt_every,
+            "mttr_weight": mttr_weight, "seed": seed, "cells": cells}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (seconds, still writes JSON)")
+    ap.add_argument("--chiplets", type=int, default=36,
+                    choices=(36, 64, 100))
+    ap.add_argument("--prompt-len", type=int, default=512)
+    ap.add_argument("--gen-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = os.path.join(
+            EXPERIMENTS, "BENCH_recovery_smoke.json" if args.smoke
+            else "BENCH_recovery.json")
+
+    chaos_models = ("qwen2.5-3b", "bart-large") if args.smoke else ZOO
+    mttr_models = ("qwen2.5-3b", "bart-large") if args.smoke else ZOO
+    if args.smoke:
+        args.prompt_len, args.gen_len, args.batch = 64, 16, 4
+
+    from benchmarks.common import emit
+
+    rec = {
+        "bench": "perf_recovery",
+        "smoke": args.smoke,
+        "chiplets": args.chiplets,
+        "prompt_len": args.prompt_len,
+        "gen_len": args.gen_len,
+        "batch": args.batch,
+        "chaos": run_chaos(
+            chaos_models,
+            quant_model="" if args.smoke else "qwen2.5-3b"),
+        "mttr_noi_search": run_mttr_search(
+            mttr_models, args.chiplets, args.prompt_len, args.gen_len,
+            batch=args.batch,
+            iterations=1 if args.smoke else 3,
+            ls_steps=4 if args.smoke else 12,
+            n_scenarios=4 if args.smoke else 8),
+    }
+    check_schema(rec)
+
+    emit([{"model": c["model"],
+           "kv_bits": c["kv_bits"] or "fp",
+           "supported": c["supported"],
+           "kills": len(c["kills"]),
+           "kinds": "+".join(sorted({k["kind"] for k in c["kills"]})),
+           "all_match": all(k["match"] for k in c["kills"]),
+           "replayed": sum(k["replayed_requests"] for k in c["kills"])}
+          for c in rec["chaos"]["cells"]],
+         "recovery: chaos kill+restore exactly-once token semantics")
+    emit([{"model": c["model"],
+           "obl_worst_k1": c["oblivious"]["worst_total_k1"] or "disc",
+           "obl_disc_k1": c["oblivious"]["n_disconnected_k1"],
+           "aware_worst_k1": c["aware"]["worst_total_k1"] or "disc",
+           "aware_disc_k1": c["aware"]["n_disconnected_k1"],
+           "ckpt_overhead": c["aware"]["ckpt_overhead"],
+           "gain_worst_k1": "inf" if c["gain_worst_k1"] is None
+                            else c["gain_worst_k1"]}
+          for c in rec["mttr_noi_search"]["cells"]],
+         f"recovery: MTTR-aware vs fault-oblivious NoI designs "
+         f"(k=1 chiplet loss, {args.chiplets} chiplets)")
+
+    os.makedirs(EXPERIMENTS, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"# wrote {os.path.normpath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -280,7 +280,7 @@ def main():
             / max(prefill["seq"]["prefill_tokens_per_s"], 1e-9)),
     }
     check_schema(rec)
-    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
 

@@ -1,0 +1,234 @@
+"""Shared atomic-checkpoint core for both planes' stateful runtimes.
+
+``training/checkpoint.py`` (params/optimizer snapshots) and
+``serving/checkpoint.py`` (live engine state) need the same four
+primitives, factored here instead of duplicated:
+
+- **pytree ↔ flat dict** — ``flatten_tree`` / ``unflatten_tree`` join
+  ``tree_flatten_with_path`` key paths with ``/`` so any nested
+  dict/list pytree round-trips through a single npz archive.
+- **dtype-safe npz** — ``save_arrays`` / ``load_arrays``: numpy's npz
+  silently stores extension dtypes (ml_dtypes bfloat16 — every serving
+  cache leaf) as opaque void records that load back as ``|V2`` garbage,
+  so non-native dtypes are viewed as same-width uints for storage and
+  the true dtype names ride along in a reserved JSON entry, restored on
+  load.  Native dtypes are written as-is (bit-identical either way).
+- **integrity digest** — ``digest_arrays``: one sha256 over every leaf's
+  (key, shape, dtype, bytes) in sorted key order.  A torn write, a
+  bit-flipped block device, or a half-synced network mount shows up as a
+  digest mismatch at restore time, not as silently-wrong tokens later.
+- **atomic directory commit** — ``atomic_save_dir``: populate a temp
+  dir, ``os.replace`` it into place, and update the ``LATEST`` pointer
+  file last.  A process dying at *any* instruction leaves the previous
+  checkpoint fully restorable; ``read_latest`` validates the pointer
+  against the directory it names.
+
+``retry`` wraps transient-failure-prone IO (a flaky network filesystem,
+an interrupted syscall) in bounded retries with exponential backoff —
+the serving plane layers it over PR 6's anomaly quarantine so a
+checkpoint write hiccup degrades to a late snapshot, never a crash.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+# reserved key inside the npz for the {leaf key: true dtype name} map —
+# leaf keys come from pytree paths joined with "/" and never collide
+DTYPE_KEY = "__dtypes__"
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> flat dict-of-arrays
+# ---------------------------------------------------------------------------
+
+def flatten_tree(tree) -> dict[str, np.ndarray]:
+    """Flatten any pytree into {``/``-joined key path: host ndarray}."""
+    import jax
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in kp)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def unflatten_tree(template, flat: dict[str, np.ndarray], *,
+                   cast: bool = True):
+    """Rebuild ``template``'s structure from a flat dict.
+
+    Missing leaves and shape mismatches raise (a checkpoint for a
+    different config must fail loudly, not load garbage).  ``cast=True``
+    coerces each leaf to the template leaf's dtype (the training-plane
+    contract: checkpoints are fp32, the model decides precision);
+    ``cast=False`` keeps the stored dtype bit-exactly (the serving-plane
+    contract: the pool's quantised int8 codes / f32 scales / bf16 rows
+    must come back as written)."""
+    import jax
+
+    paths, _ = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for kp, tmpl in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in kp)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(np.shape(tmpl)):
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {arr.shape}, template "
+                f"expects {np.shape(tmpl)}")
+        leaves.append(arr.astype(tmpl.dtype) if cast else arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+
+
+# ---------------------------------------------------------------------------
+# dtype-safe npz
+# ---------------------------------------------------------------------------
+
+def _storage_view(a: np.ndarray) -> tuple[np.ndarray, str]:
+    """(npz-safe array, true dtype name).  Extension dtypes (numpy kind
+    ``V`` — ml_dtypes bfloat16/fp8) are viewed as same-width uints; npz
+    stores them losslessly and ``load_arrays`` views them back."""
+    name = a.dtype.name
+    if a.dtype.kind == "V":
+        return a.view({1: np.uint8, 2: np.uint16, 4: np.uint32}
+                      [a.dtype.itemsize]), name
+    return a, name
+
+
+def save_arrays(path: str, arrays: dict[str, np.ndarray]) -> None:
+    """``np.savez`` with extension-dtype (bf16) round-trip safety."""
+    if DTYPE_KEY in arrays:
+        raise ValueError(f"leaf key {DTYPE_KEY!r} is reserved")
+    stored, dtypes = {}, {}
+    for k, a in arrays.items():
+        stored[k], dtypes[k] = _storage_view(np.asarray(a))
+    stored[DTYPE_KEY] = np.frombuffer(
+        json.dumps(dtypes).encode(), dtype=np.uint8)
+    np.savez(path, **stored)
+
+
+def load_arrays(path: str) -> dict[str, np.ndarray]:
+    """Inverse of :func:`save_arrays` — true dtypes restored."""
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    dtypes = {}
+    if DTYPE_KEY in flat:
+        dtypes = json.loads(flat.pop(DTYPE_KEY).tobytes().decode())
+    out = {}
+    for k, a in flat.items():
+        want = dtypes.get(k, a.dtype.name)
+        out[k] = a if a.dtype.name == want else a.view(np.dtype(want))
+    return out
+
+
+def digest_arrays(arrays: dict[str, np.ndarray],
+                  extra: Optional[str] = None) -> str:
+    """sha256 over every leaf's (key, shape, dtype, bytes), sorted by
+    key, plus an optional ``extra`` string (canonicalised metadata) —
+    the integrity hash stored beside, and checked against, a snapshot."""
+    h = hashlib.sha256()
+    for k in sorted(arrays):
+        a = np.ascontiguousarray(arrays[k])
+        h.update(k.encode())
+        h.update(repr((tuple(a.shape), a.dtype.name)).encode())
+        h.update(a.tobytes())
+    if extra is not None:
+        h.update(extra.encode())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# atomic directory commit + LATEST pointer
+# ---------------------------------------------------------------------------
+
+def atomic_save_dir(root: str, name: str,
+                    writer: Callable[[str], None], *,
+                    prefix: Optional[str] = None, keep: int = 0) -> str:
+    """Atomically materialise ``<root>/<name>`` via ``writer(tmp_dir)``.
+
+    The writer populates a ``tmp.<name>`` sibling; one ``os.replace``
+    commits the directory and the ``LATEST`` pointer is rewritten last
+    (its own tmp + replace) — the commit point.  ``keep`` > 0 garbage-
+    collects all but the newest ``keep`` ``prefix``-named siblings."""
+    os.makedirs(root, exist_ok=True)
+    tmp = os.path.join(root, f"tmp.{name}")
+    final = os.path.join(root, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    writer(tmp)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    latest_tmp = os.path.join(root, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(name)
+    os.replace(latest_tmp, os.path.join(root, "LATEST"))
+    if keep > 0 and prefix:
+        gc_dirs(root, prefix, keep, protect=name)
+    return final
+
+
+def read_latest(root: str) -> Optional[str]:
+    """Name the ``LATEST`` pointer commits to, or None when there is no
+    pointer or it names a directory that does not (yet/anymore) exist."""
+    ptr = os.path.join(root, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    if not name or not os.path.isdir(os.path.join(root, name)):
+        return None
+    return name
+
+
+def list_snapshots(root: str, prefix: str) -> list[str]:
+    """``prefix``-named checkpoint directories under ``root``, oldest
+    first (names must sort chronologically — both planes zero-pad)."""
+    if not os.path.isdir(root):
+        return []
+    return sorted(d for d in os.listdir(root)
+                  if d.startswith(prefix)
+                  and os.path.isdir(os.path.join(root, d)))
+
+
+def gc_dirs(root: str, prefix: str, keep: int,
+            protect: Optional[str] = None) -> None:
+    """Delete all but the newest ``keep`` ``prefix``-dirs (never the one
+    named ``protect`` — the snapshot just committed)."""
+    names = list_snapshots(root, prefix)
+    for d in names[:-keep] if keep > 0 else []:
+        if d != protect:
+            shutil.rmtree(os.path.join(root, d), ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# transient-failure retry
+# ---------------------------------------------------------------------------
+
+def retry(fn: Callable, *, retries: int = 0, backoff_s: float = 0.05,
+          exceptions: tuple = (OSError,), sleep: Callable = time.sleep):
+    """Run ``fn()``; on a transient failure retry up to ``retries`` times
+    with exponential backoff (``backoff_s``, doubling).  The final
+    failure re-raises — a persistently broken store must surface, the
+    caller (the serving checkpointer) decides whether that is fatal or
+    just a missed snapshot.  ``sleep`` is injectable so tests don't
+    wait."""
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except exceptions:
+            if attempt >= retries:
+                raise
+            sleep(backoff_s * (2 ** attempt))
+            attempt += 1

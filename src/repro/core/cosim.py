@@ -425,6 +425,108 @@ def resilience_objective(cfg, mix: EpisodeMix, n_chiplets: int, *,
     return objective, seed_time, phases
 
 
+def _lost_dram_frac(p, scenario) -> float:
+    """Share of the slot-pool KV orphaned by a scenario: dead DRAM role
+    members over the DRAM role size (0 for link-only faults)."""
+    if scenario is None or not scenario.failed_chiplets:
+        return 0.0
+    drams = p.roles().get("DRAM", [])
+    if not drams:
+        return 0.0
+    dead = sum(1 for c in drams if c in scenario.failed_chiplets)
+    return dead / len(drams)
+
+
+def _pool_depth(mix: EpisodeMix) -> tuple[Episode, int]:
+    """(dominant episode, mid-generation KV depth) — the pool state a
+    recovery event re-materialises.  Recovery can strike at any decode
+    iteration, so each slot is priced at its episode's expected depth
+    (prompt + half the generated tokens), request-count weighted."""
+    ep = max(mix.episodes, key=lambda e: e.count)
+    tot = sum((e.prompt_len + max(e.gen_len - 1, 0) // 2) * e.count
+              for e in mix.episodes)
+    return ep, max(1, round(tot / max(mix.requests, 1)))
+
+
+def recovery_time(p, cfg, mix: EpisodeMix, scenario=None, *,
+                  batch: Optional[int] = None) -> float:
+    """One-time fabric service time of recovering from ``scenario``:
+    KV-shard migration off the failed chiplet(s) plus the checkpoint
+    restore read (``traffic.recovery_phases``), routed and serialised on
+    the *degraded* fabric (failed chiplets' traffic redistributes over
+    surviving role members; disconnection ⇒ inf).  0 for the nominal
+    fabric — nothing to recover from."""
+    from repro.core.traffic import recovery_phases
+
+    if scenario is None or scenario.is_nominal:
+        return 0.0
+    cfg = _resolve(cfg)
+    if batch is None:
+        batch = mix.effective_batch
+    ep, depth = _pool_depth(mix)
+    w = workload_for(cfg, ep, mix)
+    phases = recovery_phases(w, depth, batch,
+                             lost_frac=_lost_dram_frac(p, scenario))
+    return fabric_time(p, phases, scenario)
+
+
+def mttr_resilience_objective(cfg, mix: EpisodeMix, n_chiplets: int, *,
+                              fault_model=None, n_scenarios: int = 8,
+                              samples: int = 1,
+                              batch: Optional[int] = None,
+                              ckpt_every: int = 32,
+                              mttr_weight: float = 1.0,
+                              ) -> tuple[Callable, float, list[Phase]]:
+    """MTTR-aware extension of :func:`resilience_objective`.
+
+    Steady-state service now carries the amortised checkpoint write-back
+    stream (``traffic.checkpoint_phases`` at ``ckpt_every`` — crash
+    safety is not free even when nothing fails), and the worst-case
+    objective prices the *recovery* a scenario forces on top of its
+    degraded service: ``(mean T_service, max (T_service + mttr_weight ×
+    T_recovery))``, both normalised by the seed placement's nominal
+    service time.  ``fault_model`` defaults to single-chiplet losses
+    (``FaultModel(k_links=0, k_chiplets=1)`` — the KV-orphaning event);
+    a scenario that disconnects service *or* recovery scores inf, so
+    surviving the loss **and** being able to re-shard off it are both
+    hard constraints the search trades against nominal speed.
+    ``ckpt_every <= 0`` drops the write-back stream (recovery still
+    priced — the checkpoint lives off-fabric)."""
+    from repro.core.faults import FaultModel
+    from repro.core.placement import initial_placement
+    from repro.core.traffic import checkpoint_phases
+
+    fault_model = fault_model or FaultModel(k_links=0, k_chiplets=1)
+    if batch is None:
+        batch = mix.effective_batch
+    phases = generation_phases(cfg, mix, samples=samples, batch=batch)
+    if ckpt_every > 0:
+        ep, depth = _pool_depth(mix)
+        w = workload_for(_resolve(cfg), ep, mix)
+        # same per-token 1/batch amortisation as the decode phases: the
+        # write-back repeats once per generated token's share of a step
+        for p in checkpoint_phases(w, depth, batch, every=ckpt_every):
+            phases.append(_scale_phase(p, 1.0 / batch,
+                                       p.repeat * max(mix.decode_tokens, 1)))
+    seed_time = fabric_time(initial_placement(n_chiplets), phases)
+
+    def objective(p):
+        scenarios = fault_model.sample_scenarios(p, n_scenarios)
+        t_nom = fabric_time(p, phases)
+        service, totals = [t_nom], [t_nom]
+        for sc in scenarios:
+            t = fabric_time(p, phases, sc)
+            r = recovery_time(p, cfg, mix, sc, batch=batch)
+            service.append(t)
+            totals.append(t + mttr_weight * r)
+        if any(t == float("inf") for t in totals):
+            return (float("inf"), float("inf"))
+        return (sum(service) / len(service) / seed_time,
+                max(totals) / seed_time)
+
+    return objective, seed_time, phases
+
+
 def seeded_noi_search(objective: Callable, n_chiplets: int, *,
                       iterations: int = 3, ls_steps: int = 12,
                       seed: int = 0):

@@ -213,6 +213,24 @@ def all_link_scenarios(placement, k: int = 1,
     return out
 
 
+def all_chiplet_scenarios(placement, k: int = 1,
+                          max_scenarios: int = 0) -> list[FaultScenario]:
+    """Exhaustive k-chiplet-loss scenarios of a placement (every size-k
+    subset of its cells) — the MTTR sweeps' ground truth: each scenario
+    drops the chiplets from the role map (traffic redistributes over the
+    surviving same-role members; wiping a whole role disconnects) and
+    removes their links.  ``max_scenarios`` > 0 caps the enumeration
+    deterministically (lexicographic cell order)."""
+    out = []
+    for combo in combinations(range(placement.n), min(k, placement.n)):
+        out.append(FaultScenario.make(
+            failed_chiplets=combo,
+            label="chip" + "+".join(map(str, combo))))
+        if max_scenarios and len(out) >= max_scenarios:
+            break
+    return out
+
+
 def endurance_link_weights(placement, phases,
                            reram_wear_factor: float = 4.0) -> list[float]:
     """Per-link failure weights driven by measured traffic wear (§4.4).

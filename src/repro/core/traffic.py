@@ -136,6 +136,9 @@ class Phase:
     reram_pipe_bytes: float = 0.0    # ReRAM_i→ReRAM_{i+1} (SFC pipeline)
     mc_reram_bytes: float = 0.0      # macro head/tail ↔ MC
     host_bytes: float = 0.0          # baseline host round-trips only
+    dram_dram_bytes: float = 0.0     # DRAM→NoI→DRAM re-sharding (recovery
+    #                                  KV migration off a failed chiplet —
+    #                                  0 on every nominal workload phase)
     repeat: int = 1                  # executed per layer?
 
 
@@ -324,10 +327,75 @@ def decode_step_phases(w: Workload, kv_pos, batch: int = 1) -> list[Phase]:
     return phases
 
 
+# ---------------------------------------------------------------------------
+# recovery: checkpoint write-back and KV-shard migration (crash safety)
+# ---------------------------------------------------------------------------
+
+def pool_kv_bytes_per_layer(w: Workload, kv_pos, batch: int = 1) -> float:
+    """KV bytes one decoder layer holds for a ``batch``-slot pool at the
+    given per-slot positions — the per-layer footprint a snapshot writes
+    and a recovery re-materialises.  Linear in the *sum* of positions
+    (``kv_cache_bytes_per_layer``), so it matches the decode-read
+    accounting bit-for-bit."""
+    positions = _decode_batch_positions(kv_pos, batch)
+    return kv_cache_bytes_per_layer(w, sum(positions))
+
+
+def checkpoint_phases(w: Workload, kv_pos, batch: int = 1, *,
+                      every: int = 32) -> list[Phase]:
+    """Per-decode-step amortised snapshot write-back stream.
+
+    A crash-safe engine commits its full slot-pool state every ``every``
+    iterations (``repro.serving.checkpoint``); between snapshots the
+    write-back streams SM→MC→DRAM exactly like the prefill ``kv_write``
+    commit, amortised to ``1/every`` of the pool per step.  Appended to
+    *generation* phase lists only — ``transformer_phases`` (the Table-4
+    calibration surface) never carries it."""
+    if every <= 0:
+        raise ValueError(f"checkpoint period must be positive, got {every}")
+    b = pool_kv_bytes_per_layer(w, kv_pos, batch) / every
+    return [Phase("ckpt_write",
+                  sm_mc_bytes=b,           # SM→MC hand-off of the dirty rows
+                  dram_bytes=b,            # MC→DRAM snapshot commit
+                  repeat=w.n_dec_layers)]
+
+
+def recovery_phases(w: Workload, kv_pos, batch: int = 1, *,
+                    lost_frac: float = 0.0) -> list[Phase]:
+    """One-time recovery traffic after a chiplet loss (the MTTR event).
+
+    Two streams, both priced on the *degraded* fabric (pass the same
+    ``scenario=`` to the NoI evaluation that models the failure):
+
+    - ``kv_migrate`` — the KV shards orphaned on the failed chiplet
+      (``lost_frac`` of the pool: dead DRAM members / DRAM role size)
+      re-materialise from their checkpoint/replica holders onto the
+      surviving DRAM chiplets, DRAM→NoI→DRAM over surviving links;
+    - ``ckpt_restore`` — the engine revives from its last snapshot: the
+      full pool state streams DRAM→MC→SM once so decode can resume.
+
+    ``lost_frac=0`` (a non-DRAM chiplet died) still pays the restore
+    read; nominal workloads never include these phases, so the Table-4
+    calibration surface is untouched."""
+    if not 0.0 <= lost_frac <= 1.0:
+        raise ValueError(f"lost_frac must be in [0, 1], got {lost_frac}")
+    pool = pool_kv_bytes_per_layer(w, kv_pos, batch)
+    phases = []
+    if lost_frac > 0.0:
+        phases.append(Phase("kv_migrate",
+                            dram_dram_bytes=pool * lost_frac,
+                            repeat=w.n_dec_layers))
+    phases.append(Phase("ckpt_restore",
+                        dram_bytes=pool,     # DRAM→MC snapshot read
+                        sm_mc_bytes=pool,    # MC→SM re-prime of the pool
+                        repeat=w.n_dec_layers))
+    return phases
+
+
 def phase_bytes(ph: Phase) -> float:
     """Total bytes one execution of a phase injects into the fabric."""
     return (ph.dram_bytes + ph.sm_mc_bytes + ph.reram_pipe_bytes
-            + ph.mc_reram_bytes + ph.host_bytes)
+            + ph.mc_reram_bytes + ph.host_bytes + ph.dram_dram_bytes)
 
 
 def total_traffic_bytes(phases: list[Phase]) -> float:
@@ -399,6 +467,15 @@ def phase_traffic_matrix(phase: Phase, roles: dict[str, list[int]],
         m = mcs[0]
         add(m, head, phase.mc_reram_bytes / 2)
         add(tail, m, phase.mc_reram_bytes / 2)
+
+    if phase.dram_dram_bytes and len(drams) > 1:
+        # recovery re-sharding: orphaned KV shards re-materialise across
+        # the surviving DRAM chiplets (ring neighbours — each survivor
+        # receives its share from the replica/checkpoint holder next to
+        # it).  With one DRAM chiplet there is no inter-chiplet hop.
+        per_hop = phase.dram_dram_bytes / len(drams)
+        for di, d in enumerate(drams):
+            add(d, drams[(di + 1) % len(drams)], per_hop)
 
     if phase.host_bytes and hosts:
         # host round trips (baselines): every SM/ReRAM talks to host

@@ -1,1 +1,3 @@
 from repro.serving.engine import EngineConfig, Request, ServingEngine  # noqa: F401
+from repro.serving.checkpoint import (  # noqa: F401
+    EngineCheckpointer, restore_engine, save_engine)

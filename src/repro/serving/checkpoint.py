@@ -1,0 +1,410 @@
+"""Crash-safe serving: snapshot/restore of live engine state with
+bit-exact resume and journal replay.
+
+The engine is a state machine over (device pytrees, host bookkeeping):
+the slot-pool KV cache (bf16 rows, or int8/int4 codes + f32 scale leaves
+under ``kv_bits``), the fused per-slot decode state including the
+threaded PRNG key, the seed-path sampling key, request objects in
+queue/slots/terminal lists, chunked-prefill progress, anomaly-quarantine
+counters, and the measurement counters ``stats()`` reports.  A snapshot
+captures *all* of it, so a process killed between any two ``step()``
+calls restores to the exact pre-kill state and every subsequent token is
+bit-identical to the uninterrupted run — greedy or temperature sampling
+(the stored keys replay the same draws).
+
+Storage layout (built on the shared ``repro.ckpt`` core, the same
+atomic-commit discipline as ``training/checkpoint.py``)::
+
+    <ckpt_dir>/
+      journal.jsonl          append-only admission journal (one line per
+                             accepted submit: uid, prompt, budget)
+      snap_00000000/         versioned snapshot directories
+        arrays.npz           every device leaf, dtype-exact (bf16-safe)
+        meta.json            bookkeeping + config echo + sha256 digest
+      LATEST                 pointer file, rewritten last (commit point)
+
+**Exactly-once semantics.**  Requests admitted *after* the last snapshot
+are not in it — they are recovered from the journal: ``restore_engine``
+rewinds the engine to the snapshot, then resubmits the journal tail
+(entries with ``uid >= `` the snapshot's next-uid) in uid order.  The
+engine's restored ``_uid`` counter reassigns the same uids, and
+re-prefilling from the prompt is deterministic, so the replayed requests
+produce the same tokens the uninterrupted run would have — nothing lost
+(journal), nothing duplicated (requests the snapshot already tracks are
+skipped), nothing divergent (state + keys are bit-exact).  Requests that
+*finished* between snapshot and crash simply rewind and re-decode to the
+identical output.
+
+Replay is bit-exact when post-snapshot submissions form one burst before
+further ``step()`` calls (the chaos-harness kill points) or when the
+bounded queue never sheds; interleaving submits with steps across a
+bounded queue can re-shed differently on replay — the retriable
+``REJECTED`` contract already covers that.  Deadlines are stored as
+absolute engine-clock values: restoring into a process with a different
+clock origin shifts them, so crash-safe deadline serving should inject a
+persistent ``EngineConfig(clock=)``.
+
+Transient-failure handling: snapshot IO runs under ``repro.ckpt.retry``
+(bounded exponential backoff, layered on PR 6's anomaly quarantine —
+a flaky store costs a late snapshot, not a crash), and restore walks
+snapshots newest → oldest, skipping any whose integrity digest or
+format version fails, so a torn/corrupt newest snapshot degrades to the
+previous one instead of refusing to serve.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+import sys
+import time
+import zipfile
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import (atomic_save_dir, digest_arrays, flatten_tree,
+                        list_snapshots, load_arrays, read_latest, retry,
+                        save_arrays, unflatten_tree)
+from repro.serving.engine import REJECTED, EngineConfig, Request, ServingEngine
+
+FORMAT_VERSION = 1
+SNAP_PREFIX = "snap_"
+JOURNAL = "journal.jsonl"
+
+# engine-config fields echoed into the snapshot; all but the operational
+# policy knobs (deadline/shedding/quarantine budgets — free to change
+# across a restart) must match at restore or the resumed token stream
+# could not be bit-exact
+_ECHO_FIELDS = ("max_batch", "kv_len", "max_new_tokens", "temperature",
+                "eos_token", "impl", "seed", "fused", "packed",
+                "prefill_chunk", "decode_chunk", "weight_bits",
+                "weight_group", "kv_bits", "deadline_ms", "max_queue",
+                "anomaly_retries")
+_POLICY_FIELDS = ("deadline_ms", "max_queue", "anomaly_retries")
+
+
+def _warn(msg: str) -> None:
+    print(f"serving.checkpoint: {msg}", file=sys.stderr)
+
+
+# ---------------------------------------------------------------------------
+# request (de)serialisation
+# ---------------------------------------------------------------------------
+
+def _req_to_dict(req: Request) -> dict:
+    return {"uid": req.uid, "prompt": [int(t) for t in req.prompt],
+            "max_new_tokens": req.max_new_tokens,
+            "output": list(req.output), "done": req.done,
+            "status": req.status, "deadline": req.deadline,
+            "t_enqueue": req.t_enqueue, "t_first_token": req.t_first_token,
+            "t_done": req.t_done}
+
+
+def _req_from_dict(d: dict) -> Request:
+    return Request(uid=int(d["uid"]),
+                   prompt=np.asarray(d["prompt"], np.int32),
+                   max_new_tokens=d["max_new_tokens"],
+                   output=list(d["output"]), done=bool(d["done"]),
+                   status=d["status"], deadline=float(d["deadline"]),
+                   t_enqueue=float(d["t_enqueue"]),
+                   t_first_token=float(d["t_first_token"]),
+                   t_done=float(d["t_done"]))
+
+
+def _engine_arrays(engine: ServingEngine) -> dict[str, np.ndarray]:
+    """Every device/host array leaf of the engine, as one flat dict.
+    Fetched with ``np.asarray`` (a copy — donation-safe) rather than the
+    engine's ``_fetch`` choke point so snapshotting never perturbs the
+    host-transfer accounting the benchmarks measure."""
+    tree = {"cache": engine.cache, "state": engine._state,
+            "seed_key": engine._key}
+    if hasattr(engine, "_slot_pos"):      # host-path lazily-created state
+        tree["host"] = {"slot_pos": engine._slot_pos,
+                        "slot_budget": engine._slot_budget,
+                        "last_token": engine._last_token}
+    return flatten_tree(tree)
+
+
+def _engine_meta(engine: ServingEngine) -> dict:
+    return {
+        "version": FORMAT_VERSION,
+        "model": engine.cfg.name,
+        "engine": {f: getattr(engine.ecfg, f) for f in _ECHO_FIELDS},
+        "uid": engine._uid,
+        "slot_req": [None if r is None else _req_to_dict(r)
+                     for r in engine.slot_req],
+        "queue": [_req_to_dict(r) for r in engine.queue],
+        "finished": [_req_to_dict(r) for r in engine.finished],
+        "failed": [_req_to_dict(r) for r in engine.failed],
+        "rejected": [_req_to_dict(r) for r in engine.rejected],
+        "prefilling": [[int(s), int(start), int(budget)]
+                       for s, (start, budget) in engine._prefilling.items()],
+        "slot_anomalies": list(engine._slot_anomalies),
+        "counters": {
+            "host_transfers": engine.host_transfers,
+            "host_bytes": engine.host_bytes,
+            "decode_steps": engine.decode_steps,
+            "prefill_tokens": engine.prefill_tokens,
+            "prefill_time": engine.prefill_time,
+            "prefill_calls": engine.prefill_calls,
+            "max_stall_tokens": engine.max_stall_tokens,
+            "stall_tokens": engine._stall_tokens,
+            "checkpoints_written": engine.checkpoints_written,
+            "restores": engine.restores,
+            "replayed_requests": engine.replayed_requests,
+            "active_slot_hist": {str(k): int(v)
+                                 for k, v in engine.active_slot_hist.items()},
+        },
+    }
+
+
+def _meta_digest(arrays: dict, meta: dict) -> str:
+    """Integrity hash binding the array leaves to the bookkeeping."""
+    canon = json.dumps({k: v for k, v in meta.items() if k != "digest"},
+                       sort_keys=True)
+    return digest_arrays(arrays, extra=canon)
+
+
+# ---------------------------------------------------------------------------
+# save
+# ---------------------------------------------------------------------------
+
+def save_engine(engine: ServingEngine, ckpt_dir: str, *, keep: int = 3,
+                retries: int = 0, backoff_s: float = 0.05,
+                sleep=time.sleep) -> str:
+    """Snapshot the full engine state atomically; returns the committed
+    snapshot path.  ``retries``/``backoff_s`` bound the transient-IO
+    retry loop (``repro.ckpt.retry``)."""
+    snaps = list_snapshots(ckpt_dir, SNAP_PREFIX)
+    nxt = 1 + int(snaps[-1][len(SNAP_PREFIX):]) if snaps else 0
+    name = f"{SNAP_PREFIX}{nxt:08d}"
+    arrays = _engine_arrays(engine)
+    # the snapshot counts itself, so a restore of it reports every
+    # snapshot committed on its lineage (increment rolled back on failure)
+    engine.checkpoints_written += 1
+    meta = _engine_meta(engine)
+    meta["digest"] = _meta_digest(arrays, meta)
+
+    def write(tmp: str) -> None:
+        save_arrays(os.path.join(tmp, "arrays.npz"), arrays)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+
+    try:
+        return retry(
+            lambda: atomic_save_dir(ckpt_dir, name, write,
+                                    prefix=SNAP_PREFIX, keep=keep),
+            retries=retries, backoff_s=backoff_s, sleep=sleep)
+    except Exception:
+        engine.checkpoints_written -= 1
+        raise
+
+
+# ---------------------------------------------------------------------------
+# load + integrity walk
+# ---------------------------------------------------------------------------
+
+def _load_snapshot(path: str) -> tuple[dict, dict]:
+    """(arrays, meta) of one snapshot dir; raises on any corruption —
+    unreadable files, version mismatch, or a digest that does not match
+    the stored leaves + bookkeeping."""
+    arrays = load_arrays(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    if meta.get("version") != FORMAT_VERSION:
+        raise ValueError(f"snapshot format v{meta.get('version')} != "
+                         f"v{FORMAT_VERSION}")
+    if meta.get("digest") != _meta_digest(arrays, meta):
+        raise ValueError("integrity digest mismatch (torn or corrupt write)")
+    return arrays, meta
+
+
+def load_newest_intact(ckpt_dir: str) -> tuple[dict, dict, str]:
+    """Walk snapshots newest → oldest (the ``LATEST`` pointer first) and
+    return the first that passes integrity checks.  A corrupt newest
+    snapshot degrades to the previous one with a warning; no intact
+    snapshot raises ``FileNotFoundError``."""
+    names = list_snapshots(ckpt_dir, SNAP_PREFIX)
+    order = list(reversed(names))
+    latest = read_latest(ckpt_dir)
+    if latest in names:
+        order = [latest] + [n for n in order if n != latest]
+    if not order:
+        raise FileNotFoundError(f"no snapshot in {ckpt_dir}")
+    last_err: Optional[Exception] = None
+    for name in order:
+        try:
+            arrays, meta = _load_snapshot(os.path.join(ckpt_dir, name))
+            return arrays, meta, name
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile) as e:
+            _warn(f"skipping snapshot {name}: {e}")
+            last_err = e
+    raise FileNotFoundError(
+        f"no intact snapshot in {ckpt_dir} (last error: {last_err})")
+
+
+# ---------------------------------------------------------------------------
+# restore + journal replay
+# ---------------------------------------------------------------------------
+
+def _check_config(meta: dict, cfg_name: str, ecfg: EngineConfig) -> None:
+    if meta["model"] != cfg_name:
+        raise ValueError(f"snapshot is of model {meta['model']!r}, "
+                         f"restore got {cfg_name!r}")
+    for f in _ECHO_FIELDS:
+        if f in _POLICY_FIELDS:      # operational policy may change
+            continue
+        if meta["engine"][f] != getattr(ecfg, f):
+            raise ValueError(
+                f"engine config mismatch on {f!r}: snapshot has "
+                f"{meta['engine'][f]!r}, restore got {getattr(ecfg, f)!r} — "
+                f"a bit-exact resume needs the snapshot's value")
+
+
+def read_journal(ckpt_dir: str) -> list[dict]:
+    """Parse the admission journal; a torn final line (a crash mid-
+    append) is dropped, every complete line before it survives."""
+    path = os.path.join(ckpt_dir, JOURNAL)
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line))
+            except ValueError:
+                _warn("dropping torn journal tail line")
+    return out
+
+
+def restore_engine(cfg, params, ckpt_dir: str, *,
+                   ecfg: Optional[EngineConfig] = None, mesh=None,
+                   replay: bool = True) -> ServingEngine:
+    """Revive a :class:`ServingEngine` from its newest intact snapshot.
+
+    ``ecfg=None`` rebuilds the engine config from the snapshot's echo
+    (default clock); an explicit ``ecfg`` must match the snapshot on
+    every field that shapes state or sampling (policy knobs —
+    ``deadline_ms``/``max_queue``/``anomaly_retries`` — may differ).
+    ``params`` are the caller's weights, exactly as at original
+    construction (quantisation re-derives deterministically); they are
+    not part of the snapshot.  With ``replay=True`` journal-tail
+    requests (admitted after the snapshot) are resubmitted in uid order,
+    reassigned their original uids by the restored counter."""
+    arrays, meta, name = load_newest_intact(ckpt_dir)
+    if ecfg is None:
+        ecfg = EngineConfig(**meta["engine"])
+    engine = ServingEngine(cfg, params, ecfg, mesh=mesh)
+    _check_config(meta, engine.cfg.name, engine.ecfg)
+
+    template = {"cache": engine.cache, "state": engine._state,
+                "seed_key": engine._key}
+    host = any(k.startswith("host/") for k in arrays)
+    if host:
+        B = engine.ecfg.max_batch
+        template["host"] = {"slot_pos": np.zeros(B, np.int32),
+                            "slot_budget": np.zeros(B, np.int32),
+                            "last_token": np.zeros(B, np.int32)}
+    tree = unflatten_tree(template, arrays, cast=False)
+    engine.cache = jax.device_put(tree["cache"])
+    engine._state = jax.device_put(tree["state"])
+    engine._key = jax.device_put(tree["seed_key"])
+    if host:
+        engine._slot_pos = np.array(tree["host"]["slot_pos"])
+        engine._slot_budget = np.array(tree["host"]["slot_budget"])
+        engine._last_token = np.array(tree["host"]["last_token"])
+
+    engine.slot_req = [None if r is None else _req_from_dict(r)
+                       for r in meta["slot_req"]]
+    engine.queue = collections.deque(_req_from_dict(r)
+                                     for r in meta["queue"])
+    engine.finished = [_req_from_dict(r) for r in meta["finished"]]
+    engine.failed = [_req_from_dict(r) for r in meta["failed"]]
+    engine.rejected = [_req_from_dict(r) for r in meta["rejected"]]
+    engine._prefilling = {int(s): (int(start), int(budget))
+                          for s, start, budget in meta["prefilling"]}
+    engine._slot_anomalies = list(meta["slot_anomalies"])
+    engine._uid = int(meta["uid"])
+    c = meta["counters"]
+    engine.host_transfers = c["host_transfers"]
+    engine.host_bytes = c["host_bytes"]
+    engine.decode_steps = c["decode_steps"]
+    engine.prefill_tokens = c["prefill_tokens"]
+    engine.prefill_time = c["prefill_time"]
+    engine.prefill_calls = c["prefill_calls"]
+    engine.max_stall_tokens = c["max_stall_tokens"]
+    engine._stall_tokens = c["stall_tokens"]
+    engine.checkpoints_written = c["checkpoints_written"]
+    engine.replayed_requests = c["replayed_requests"]
+    engine.active_slot_hist = collections.Counter(
+        {int(k): int(v) for k, v in c["active_slot_hist"].items()})
+    engine.restores = c["restores"] + 1
+
+    if replay:
+        tail = sorted((e for e in read_journal(ckpt_dir)
+                       if int(e["uid"]) >= engine._uid),
+                      key=lambda e: int(e["uid"]))
+        for entry in tail:
+            req = engine.submit(np.asarray(entry["prompt"], np.int32),
+                                entry["max_new_tokens"])
+            if req.uid != int(entry["uid"]):
+                raise RuntimeError(
+                    f"journal replay desync: resubmit assigned uid "
+                    f"{req.uid}, journal recorded {entry['uid']}")
+        engine.replayed_requests += len(tail)
+    return engine
+
+
+# ---------------------------------------------------------------------------
+# checkpointer: journal + periodic snapshots around one engine
+# ---------------------------------------------------------------------------
+
+class EngineCheckpointer:
+    """Admission journal + snapshot writer for one engine.
+
+    Route submits through :meth:`submit` so every accepted request hits
+    the append-only journal before it can be lost with the process;
+    call :meth:`save` at snapshot boundaries (between ``step()`` calls —
+    engine state is only consistent there).  ``every`` > 0 makes
+    :meth:`maybe_save` snapshot each time that many engine iterations
+    have passed since the last one."""
+
+    def __init__(self, engine: ServingEngine, ckpt_dir: str, *,
+                 keep: int = 3, every: int = 0, retries: int = 0,
+                 backoff_s: float = 0.05, sleep=time.sleep):
+        self.engine, self.ckpt_dir = engine, ckpt_dir
+        self.keep, self.every = keep, every
+        self.retries, self.backoff_s, self._sleep = retries, backoff_s, sleep
+        self._steps_since = 0
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def submit(self, prompt, max_new_tokens: Optional[int] = None) -> Request:
+        req = self.engine.submit(prompt, max_new_tokens)
+        if req.status != REJECTED:       # shed requests are the caller's
+            #                              to retry — never replayed
+            with open(os.path.join(self.ckpt_dir, JOURNAL), "a") as f:
+                f.write(json.dumps(
+                    {"uid": req.uid,
+                     "prompt": [int(t) for t in req.prompt],
+                     "max_new_tokens": req.max_new_tokens}) + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+        return req
+
+    def save(self) -> str:
+        self._steps_since = 0
+        return save_engine(self.engine, self.ckpt_dir, keep=self.keep,
+                           retries=self.retries, backoff_s=self.backoff_s,
+                           sleep=self._sleep)
+
+    def maybe_save(self) -> Optional[str]:
+        """Call once per engine iteration; snapshots every ``every``-th."""
+        self._steps_since += 1
+        if self.every > 0 and self._steps_since >= self.every:
+            return self.save()
+        return None

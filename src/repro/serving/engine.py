@@ -59,7 +59,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -106,6 +106,11 @@ class EngineConfig:
     #   logits go non-finite is frozen (no token, no pos/budget advance)
     #   and retried this many times before only that request is failed —
     #   the rest of the batch keeps decoding
+    clock: Callable[[], float] = time.monotonic
+    #   the engine's time source for request timestamps and deadline
+    #   arithmetic — injectable so deadline/eviction tests advance a fake
+    #   clock instead of sleeping.  Every stats() latency is a difference
+    #   of clock readings, so any monotonic float-seconds source works.
 
 
 class EngineStallError(RuntimeError):
@@ -199,6 +204,10 @@ class ServingEngine:
         self.prefill_calls = 0
         self.max_stall_tokens = 0         # max prefill tokens between decodes
         self._stall_tokens = 0
+        # crash-safety accounting (repro.serving.checkpoint)
+        self.checkpoints_written = 0      # snapshots committed for this engine
+        self.restores = 0                 # times this engine state was revived
+        self.replayed_requests = 0        # journal-tail requests resubmitted
         # per-decode-iteration active-slot histogram {n_active: count} — the
         # measured slot-pool utilisation the Plane-B co-simulation batches
         # its decode steps with (repro.core.cosim.mix_from_stats)
@@ -259,6 +268,10 @@ class ServingEngine:
         self._jit_decode = jax.jit(self._decode_fn)
         self._jit_prefill = jax.jit(self._prefill_fn)
         self._jit_insert = jax.jit(self._insert_fn, donate_argnums=(0,))
+
+    def _now(self) -> float:
+        """Engine time (``EngineConfig.clock`` — monotonic seconds)."""
+        return self.ecfg.clock()
 
     # -- device→host choke point ---------------------------------------------
     def _fetch(self, x) -> np.ndarray:
@@ -494,7 +507,7 @@ class ServingEngine:
         if max_new_tokens is not None and max_new_tokens < 0:
             raise ValueError(
                 f"max_new_tokens must be >= 0, got {max_new_tokens}")
-        now = time.time()
+        now = self._now()
         req = Request(uid=self._uid, prompt=arr.astype(np.int32),
                       max_new_tokens=max_new_tokens, t_enqueue=now)
         if self.ecfg.deadline_ms > 0:
@@ -522,7 +535,7 @@ class ServingEngine:
     def _fail(self, req: Request, status: str, now: Optional[float] = None):
         """Move a request to a terminal failure state (never ``finished``)."""
         req.status = status
-        req.t_done = now if now is not None else time.time()
+        req.t_done = now if now is not None else self._now()
         self.failed.append(req)
 
     def _kill_slot(self, i: int):
@@ -540,7 +553,7 @@ class ServingEngine:
         """Fail every queued or in-flight request past its deadline —
         expired work is dropped before it spends another admission or
         decode step (the slot frees for a request that can still make it)."""
-        now = time.time()
+        now = self._now()
         if self.queue:
             kept = collections.deque()
             for req in self.queue:
@@ -573,7 +586,7 @@ class ServingEngine:
         self.decode_steps += arr.shape[0]
         self.max_stall_tokens = max(self.max_stall_tokens, self._stall_tokens)
         self._stall_tokens = 0
-        now = time.time()
+        now = self._now()
         for it in range(arr.shape[0]):            # decode_chunk iterations
             # zero-active iterations (slots all finished mid-chunk) are real
             # device work — recording them keeps Σhist == decode_steps and
@@ -625,7 +638,7 @@ class ServingEngine:
         self.max_stall_tokens = max(self.max_stall_tokens, self._stall_tokens)
         self._stall_tokens = 0
         nxt = self._sample(logits)
-        now = time.time()
+        now = self._now()
         for i in live:
             req = self.slot_req[i]
             tok = int(nxt[i])
@@ -657,7 +670,7 @@ class ServingEngine:
             self.step()
             it += 1
             if it > max_iters:
-                now = time.time()
+                now = self._now()
                 stranded = list(self.queue) + [r for r in self.slot_req
                                                if r is not None]
                 for req in self.queue:
@@ -686,7 +699,7 @@ class ServingEngine:
             if budget <= 0:
                 req.done = True
                 req.status = DONE
-                req.t_first_token = req.t_done = time.time()
+                req.t_first_token = req.t_done = self._now()
                 self.finished.append(req)
                 continue
             plen = len(req.prompt)
@@ -766,7 +779,7 @@ class ServingEngine:
         self.prefill_tokens += used
         self.prefill_calls += 1
         self._stall_tokens += used
-        now = time.time()
+        now = self._now()
         for req, slot, off, take, final, budget in segs:
             if final:
                 tok = int(arr[slot])
@@ -815,7 +828,7 @@ class ServingEngine:
         self.prefill_tokens += total
         self.prefill_calls += 1
         self._stall_tokens += C                    # one batched chunk call
-        now = time.time()
+        now = self._now()
         for slot, start, c, budget in plan:
             req = self.slot_req[slot]
             if start + c == len(req.prompt):       # prompt complete
@@ -845,7 +858,7 @@ class ServingEngine:
         self.prefill_calls += 1
         self._stall_tokens += pad
         req.output = [tok]
-        req.t_first_token = time.time()
+        req.t_first_token = self._now()
         if budget == 1:             # the prefill sample was the whole budget
             req.done = True
             req.status = DONE
@@ -910,7 +923,7 @@ class ServingEngine:
             self.prefill_calls += 1
             self._stall_tokens += toks.shape[1]
             req.output = [int(first[0])]
-            req.t_first_token = time.time()
+            req.t_first_token = self._now()
             if budget == 1:         # the prefill sample was the whole budget
                 req.done = True
                 req.status = DONE
@@ -930,6 +943,20 @@ class ServingEngine:
         return self._fetch(jax.random.categorical(
             sub, logits / self.ecfg.temperature, axis=-1))
 
+    # -- crash safety ---------------------------------------------------------
+    @classmethod
+    def restore(cls, cfg: ModelConfig, params, ckpt_dir: str, *,
+                ecfg: Optional[EngineConfig] = None, mesh=None,
+                replay: bool = True) -> "ServingEngine":
+        """Revive an engine from its newest intact snapshot in
+        ``ckpt_dir`` (written by ``repro.serving.checkpoint``), resuming
+        mid-decode bit-identically and replaying journal-tail requests
+        admitted after the snapshot.  See
+        :func:`repro.serving.checkpoint.restore_engine`."""
+        from repro.serving.checkpoint import restore_engine
+        return restore_engine(cfg, params, ckpt_dir, ecfg=ecfg, mesh=mesh,
+                              replay=replay)
+
     # -- stats ---------------------------------------------------------------
     def _failure_stats(self) -> dict:
         by_status: collections.Counter = collections.Counter(
@@ -940,6 +967,12 @@ class ServingEngine:
             "failed_deadline": by_status.get(FAILED_DEADLINE, 0),
             "failed_anomaly": by_status.get(FAILED_ANOMALY, 0),
             "failed_max_iters": by_status.get(FAILED_MAX_ITERS, 0),
+            # crash-safety counters (repro.serving.checkpoint): snapshots
+            # committed, revivals of this engine state, journal-tail
+            # requests resubmitted during restore
+            "checkpoints_written": self.checkpoints_written,
+            "restores": self.restores,
+            "replayed_requests": self.replayed_requests,
         }
 
     def stats(self) -> dict:

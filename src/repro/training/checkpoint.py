@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import json
 import os
-import shutil
 import signal
 import threading
 from typing import Any, Optional
@@ -27,35 +26,13 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.ckpt import (atomic_save_dir, flatten_tree, gc_dirs, read_latest,
+                        unflatten_tree)
 
-# ---------------------------------------------------------------------------
-# pytree <-> flat dict-of-arrays
-# ---------------------------------------------------------------------------
-
-def _flatten(tree) -> dict[str, np.ndarray]:
-    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    out = {}
-    for kp, leaf in flat:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in kp)
-        out[key] = np.asarray(leaf)
-    return out
-
-
-def _unflatten(template, flat: dict[str, np.ndarray]):
-    paths, tdef = jax.tree_util.tree_flatten_with_path(template)
-    leaves = []
-    for kp, tmpl in paths:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in kp)
-        if key not in flat:
-            raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = flat[key]
-        if tuple(arr.shape) != tuple(tmpl.shape):
-            raise ValueError(
-                f"checkpoint leaf {key!r} has shape {arr.shape}, model "
-                f"expects {tmpl.shape}")
-        leaves.append(arr.astype(tmpl.dtype))
-    return jax.tree_util.tree_unflatten(
-        jax.tree_util.tree_structure(template), leaves)
+# pytree <-> flat dict-of-arrays: shared with the serving checkpointer
+# (repro.ckpt) — kept under the old private names for callers/tests
+_flatten = flatten_tree
+_unflatten = unflatten_tree
 
 
 # ---------------------------------------------------------------------------
@@ -66,42 +43,22 @@ def save_checkpoint(ckpt_dir: str, step: int, *, params, opt_state=None,
                     data_state: Optional[dict] = None,
                     extra: Optional[dict] = None, keep: int = 3) -> str:
     """Atomic save; returns the final checkpoint path."""
-    os.makedirs(ckpt_dir, exist_ok=True)
-    tmp = os.path.join(ckpt_dir, f"tmp.{step}")
-    final = os.path.join(ckpt_dir, f"step_{step:08d}")
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
+    def write(tmp: str) -> None:
+        np.savez(os.path.join(tmp, "params.npz"), **_flatten(params))
+        if opt_state is not None:
+            np.savez(os.path.join(tmp, "opt_state.npz"), **_flatten(opt_state))
+        meta = {"step": step, "data_state": data_state or {},
+                "extra": extra or {}}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
 
-    np.savez(os.path.join(tmp, "params.npz"), **_flatten(params))
-    if opt_state is not None:
-        np.savez(os.path.join(tmp, "opt_state.npz"), **_flatten(opt_state))
-    meta = {"step": step, "data_state": data_state or {}, "extra": extra or {}}
-    with open(os.path.join(tmp, "meta.json"), "w") as f:
-        json.dump(meta, f)
-
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.replace(tmp, final)
-    # LATEST pointer written last — the commit point
-    latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
-    with open(latest_tmp, "w") as f:
-        f.write(os.path.basename(final))
-    os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
-
-    _gc(ckpt_dir, keep)
-    return final
+    return atomic_save_dir(ckpt_dir, f"step_{step:08d}", write,
+                           prefix="step_", keep=keep)
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
-    ptr = os.path.join(ckpt_dir, "LATEST")
-    if not os.path.exists(ptr):
-        return None
-    with open(ptr) as f:
-        name = f.read().strip()
-    if not os.path.isdir(os.path.join(ckpt_dir, name)):
-        return None
-    return int(name.split("_")[-1])
+    name = read_latest(ckpt_dir)
+    return None if name is None else int(name.split("_")[-1])
 
 
 def restore_checkpoint(ckpt_dir: str, *, params_template, opt_template=None,
@@ -135,11 +92,7 @@ def restore_checkpoint(ckpt_dir: str, *, params_template, opt_template=None,
 
 
 def _gc(ckpt_dir: str, keep: int):
-    steps = sorted(
-        d for d in os.listdir(ckpt_dir)
-        if d.startswith("step_") and os.path.isdir(os.path.join(ckpt_dir, d)))
-    for d in steps[:-keep] if keep > 0 else []:
-        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+    gc_dirs(ckpt_dir, "step_", keep)
 
 
 # ---------------------------------------------------------------------------

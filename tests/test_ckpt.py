@@ -1,0 +1,123 @@
+"""Shared atomic-checkpoint core (repro.ckpt): dtype-safe npz, integrity
+digests, atomic directory commits, and transient-failure retry."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (DTYPE_KEY, atomic_save_dir, digest_arrays,
+                        flatten_tree, gc_dirs, list_snapshots, load_arrays,
+                        read_latest, retry, save_arrays, unflatten_tree)
+
+
+def test_bf16_npz_roundtrip_is_bit_exact(tmp_path):
+    """np.savez silently stores ml_dtypes bfloat16 as opaque void records;
+    save_arrays/load_arrays must round-trip the true dtype and bits."""
+    rng = np.random.default_rng(0)
+    a16 = jnp.asarray(rng.standard_normal((3, 5)), jnp.bfloat16)
+    arrays = {"bf16": np.asarray(a16),
+              "i8": rng.integers(-128, 127, (4,)).astype(np.int8),
+              "f32": rng.standard_normal((2, 2)).astype(np.float32)}
+    path = os.path.join(tmp_path, "arrs.npz")
+    save_arrays(path, arrays)
+    back = load_arrays(path)
+    assert set(back) == set(arrays)
+    for k in arrays:
+        assert back[k].dtype == arrays[k].dtype, k
+        assert back[k].tobytes() == arrays[k].tobytes(), k
+
+
+def test_reserved_dtype_key_rejected(tmp_path):
+    with pytest.raises(ValueError, match="reserved"):
+        save_arrays(os.path.join(tmp_path, "x.npz"),
+                    {DTYPE_KEY: np.zeros(1)})
+
+
+def test_digest_detects_corruption():
+    arrays = {"a": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    d0 = digest_arrays(arrays)
+    flipped = {"a": arrays["a"].copy()}
+    flipped["a"][0, 0] += 1
+    assert digest_arrays(flipped) != d0
+    # same bytes under a different dtype/shape must not collide
+    assert digest_arrays({"a": arrays["a"].view(np.int32)}) != d0
+    assert digest_arrays(arrays, extra="meta") != d0
+
+
+def test_atomic_save_dir_commit_and_latest(tmp_path):
+    root = str(tmp_path)
+
+    def write(tmp):
+        with open(os.path.join(tmp, "payload"), "w") as f:
+            f.write("v1")
+
+    path = atomic_save_dir(root, "snap_00000000", write, prefix="snap_")
+    assert os.path.isdir(path)
+    assert read_latest(root) == "snap_00000000"
+
+    # a writer that dies mid-flight leaves the previous commit untouched
+    def boom(tmp):
+        raise OSError("disk full")
+
+    with pytest.raises(OSError):
+        atomic_save_dir(root, "snap_00000001", boom, prefix="snap_")
+    assert read_latest(root) == "snap_00000000"
+    assert list_snapshots(root, "snap_") == ["snap_00000000"]
+
+
+def test_gc_keeps_newest_and_protects(tmp_path):
+    root = str(tmp_path)
+    for i in range(5):
+        atomic_save_dir(root, f"snap_{i:08d}", lambda t: None,
+                        prefix="snap_")
+    gc_dirs(root, "snap_", keep=2, protect="snap_00000000")
+    names = list_snapshots(root, "snap_")
+    assert names == ["snap_00000000", "snap_00000003", "snap_00000004"]
+
+
+def test_list_snapshots_missing_root(tmp_path):
+    assert list_snapshots(os.path.join(tmp_path, "nope"), "snap_") == []
+    assert read_latest(os.path.join(tmp_path, "nope")) is None
+
+
+def test_retry_backoff_and_exhaustion():
+    sleeps = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return "ok"
+
+    assert retry(flaky, retries=4, backoff_s=0.05,
+                 sleep=sleeps.append) == "ok"
+    assert sleeps == [0.05, 0.1]          # exponential backoff
+
+    calls["n"] = -100                     # always fails within budget
+    with pytest.raises(OSError, match="transient"):
+        retry(flaky, retries=2, backoff_s=0.01, sleep=sleeps.append)
+
+
+def test_flatten_unflatten_roundtrip_and_mismatches():
+    tree = {"a": [np.arange(3, dtype=np.int32),
+                  np.ones((2, 2), np.float32)],
+            "b": {"c": np.asarray(jnp.zeros((2,), jnp.bfloat16))}}
+    flat = flatten_tree(tree)
+    assert set(flat) == {"a/0", "a/1", "b/c"}
+    back = unflatten_tree(tree, flat, cast=False)
+    assert np.asarray(back["b"]["c"]).dtype == np.asarray(tree["b"]["c"]).dtype
+    # cast=True coerces to the template dtype, cast=False keeps stored
+    stored = dict(flat)
+    stored["a/1"] = flat["a/1"].astype(np.float64)
+    assert np.asarray(unflatten_tree(tree, stored)["a"][1]).dtype \
+        == np.float32
+    assert np.asarray(unflatten_tree(tree, stored,
+                                     cast=False)["a"][1]).dtype == np.float64
+    with pytest.raises(KeyError, match="missing leaf"):
+        unflatten_tree(tree, {k: v for k, v in flat.items() if k != "a/0"})
+    bad = dict(flat)
+    bad["a/0"] = np.arange(4, dtype=np.int32)
+    with pytest.raises(ValueError, match="shape"):
+        unflatten_tree(tree, bad)

@@ -1,0 +1,161 @@
+"""Plane-B recovery accounting: DRAM↔DRAM re-shard routing, checkpoint
+write-back amortisation, recovery phases on the degraded fabric, the
+exhaustive chiplet-loss enumeration, and the MTTR-aware NoI objective."""
+import math
+
+import pytest
+
+from repro.config import get_config
+from repro.core.cosim import (Episode, EpisodeMix, fabric_time,
+                              mttr_resilience_objective, recovery_time)
+from repro.core.faults import FaultScenario, all_chiplet_scenarios
+from repro.core.placement import initial_placement
+from repro.core.traffic import (Phase, Workload, checkpoint_phases,
+                                decode_step_phases, phase_bytes,
+                                phase_traffic_matrix,
+                                pool_kv_bytes_per_layer, prefill_phases,
+                                recovery_phases, transformer_phases)
+
+
+@pytest.fixture(scope="module")
+def w():
+    return Workload.from_config(get_config("gpt-j"), seq_len=64)
+
+
+@pytest.fixture(scope="module")
+def p36():
+    return initial_placement(36)
+
+
+@pytest.fixture(scope="module")
+def mix():
+    return EpisodeMix([Episode(64, 16, 4)], prefill_chunk=16, max_batch=4,
+                      active_hist={4: 1}, max_stall_tokens=16)
+
+
+# ---------------------------------------------------------------------------
+# traffic: the new recovery streams
+# ---------------------------------------------------------------------------
+
+def test_nominal_phases_carry_no_recovery_traffic(w):
+    """Every nominal builder leaves dram_dram_bytes at 0.0 — the Table-4
+    calibration surface must not see the recovery plumbing."""
+    for ph in (transformer_phases(w) + prefill_phases(w)
+               + decode_step_phases(w, 32)):
+        assert ph.dram_dram_bytes == 0.0
+
+
+def test_dram_dram_ring_routing(w, p36):
+    roles = p36.roles()
+    drams = roles["DRAM"]
+    ph = Phase("kv_migrate", dram_dram_bytes=1000.0)
+    F = phase_traffic_matrix(ph, roles, p36.n)
+    ring = {(d, drams[(i + 1) % len(drams)]): 1000.0 / len(drams)
+            for i, d in enumerate(drams)}
+    assert F == pytest.approx(ring)
+    assert sum(F.values()) == pytest.approx(1000.0)
+    # a single surviving DRAM member has nobody to re-shard with
+    solo = dict(roles, DRAM=drams[:1])
+    assert phase_traffic_matrix(ph, solo, p36.n) == {}
+    assert phase_bytes(ph) == 1000.0
+
+
+def test_checkpoint_phases_amortise_the_pool(w):
+    pool = pool_kv_bytes_per_layer(w, 32, batch=4)
+    (ph,) = checkpoint_phases(w, 32, batch=4, every=16)
+    assert ph.sm_mc_bytes == pytest.approx(pool / 16)
+    assert ph.dram_bytes == pytest.approx(pool / 16)
+    assert ph.repeat == w.n_dec_layers
+    with pytest.raises(ValueError, match="checkpoint period"):
+        checkpoint_phases(w, 32, every=0)
+
+
+def test_recovery_phases_scale_with_lost_fraction(w):
+    pool = pool_kv_bytes_per_layer(w, 32, batch=4)
+    full = recovery_phases(w, 32, batch=4, lost_frac=0.25)
+    assert [ph.name for ph in full] == ["kv_migrate", "ckpt_restore"]
+    mig, rst = full
+    assert mig.dram_dram_bytes == pytest.approx(pool * 0.25)
+    assert rst.dram_bytes == pytest.approx(pool)
+    assert rst.sm_mc_bytes == pytest.approx(pool)
+    # a non-DRAM loss orphans nothing but still pays the restore read
+    (only,) = recovery_phases(w, 32, batch=4, lost_frac=0.0)
+    assert only.name == "ckpt_restore"
+    for bad in (-0.1, 1.5):
+        with pytest.raises(ValueError, match="lost_frac"):
+            recovery_phases(w, 32, lost_frac=bad)
+
+
+def test_pool_bytes_match_decode_accounting(w):
+    """Pool footprint is linear in the position *sum* — per-slot position
+    lists and their scalar mean price identically."""
+    assert pool_kv_bytes_per_layer(w, [10, 20, 30], batch=3) == \
+        pytest.approx(pool_kv_bytes_per_layer(w, 20, batch=3))
+
+
+# ---------------------------------------------------------------------------
+# faults: exhaustive chiplet-loss enumeration
+# ---------------------------------------------------------------------------
+
+def test_all_chiplet_scenarios_exhaustive_and_capped(p36):
+    scs = all_chiplet_scenarios(p36, k=1)
+    assert len(scs) == p36.n
+    assert {next(iter(s.failed_chiplets)) for s in scs} \
+        == set(range(p36.n))
+    assert all(not s.failed_links for s in scs)
+    capped = all_chiplet_scenarios(p36, k=2, max_scenarios=10)
+    assert len(capped) == 10
+    assert all(len(s.failed_chiplets) == 2 for s in capped)
+
+
+# ---------------------------------------------------------------------------
+# cosim: recovery time + MTTR-aware objective
+# ---------------------------------------------------------------------------
+
+def test_recovery_time_nominal_is_zero(p36, mix):
+    assert recovery_time(p36, "gpt-j", mix, None) == 0.0
+    assert recovery_time(p36, "gpt-j", mix,
+                         FaultScenario(label="nominal")) == 0.0
+
+
+def test_recovery_time_prices_dram_loss_above_compute_loss(p36, mix):
+    roles = p36.roles()
+    t_by_role = {}
+    for role in ("DRAM", "SM"):
+        sc = FaultScenario.make(failed_chiplets=[roles[role][0]])
+        t = recovery_time(p36, "gpt-j", mix, sc)
+        assert math.isfinite(t) and t > 0.0
+        t_by_role[role] = t
+    # losing a DRAM member adds the KV re-shard stream on top of the
+    # restore read every loss pays
+    assert t_by_role["DRAM"] > t_by_role["SM"]
+
+
+def test_mttr_objective_normalised_and_admissible(mix):
+    obj, seed_t, phases = mttr_resilience_objective(
+        "gpt-j", mix, 36, n_scenarios=4)
+    assert seed_t > 0.0
+    assert any(ph.name == "ckpt_write" for ph in phases)
+    mean_t, worst_t = obj(initial_placement(36))
+    assert math.isfinite(mean_t) and math.isfinite(worst_t)
+    # the worst case carries recovery on top of degraded service: it can
+    # never undercut the nominal-service mean
+    assert worst_t >= mean_t > 0.0
+
+    no_ckpt_obj, _, no_ckpt_phases = mttr_resilience_objective(
+        "gpt-j", mix, 36, n_scenarios=4, ckpt_every=0)
+    assert all(ph.name != "ckpt_write" for ph in no_ckpt_phases)
+    # dropping the write-back stream cheapens steady-state service
+    assert no_ckpt_obj(initial_placement(36))[0] <= mean_t
+
+
+def test_mttr_worst_case_tracks_exhaustive_chiplet_loss(p36, mix):
+    """Every exhaustive k=1 loss must be finitely recoverable on the seed
+    placement — the benchmark's ground-truth sweep never silently drops a
+    scenario."""
+    _, _, phases = mttr_resilience_objective("gpt-j", mix, 36,
+                                             n_scenarios=2)
+    for sc in all_chiplet_scenarios(p36, k=1):
+        svc = fabric_time(p36, phases, sc)
+        rec = recovery_time(p36, "gpt-j", mix, sc)
+        assert math.isfinite(svc) and math.isfinite(rec)

@@ -92,6 +92,61 @@ def test_resilience_table_partial_record(monkeypatch, tmp_path):
     assert "engine_overload section missing" in out
 
 
+def test_recovery_table_missing_file(monkeypatch, tmp_path):
+    from benchmarks.report import recovery_table
+    _patch_experiments(monkeypatch, tmp_path)
+    out = recovery_table()
+    assert "no BENCH_recovery.json" in out
+
+
+def test_recovery_table_renders_record(monkeypatch, tmp_path):
+    """Renders both the chaos and MTTR sections, including the
+    engine-unsupported enc-dec row and the '—' a disconnected design
+    leaves behind."""
+    import json
+    from benchmarks.report import recovery_table
+    _patch_experiments(monkeypatch, tmp_path)
+    kill = {"kind": "mid_decode", "kill_at": 3, "match": True, "lost": 0,
+            "duplicated": 0, "checkpoints_written": 1, "restores": 1,
+            "replayed_requests": 1}
+    (tmp_path / "BENCH_recovery.json").write_text(json.dumps({
+        "bench": "perf_recovery", "smoke": False, "chiplets": 36,
+        "prompt_len": 64, "gen_len": 16, "batch": 8,
+        "chaos": {"cells": [
+            {"model": "qwen2.5-3b", "kv_bits": None, "supported": True,
+             "kills": [kill]},
+            {"model": "bart-large", "supported": False,
+             "reason": "enc-dec"},
+        ]},
+        "mttr_noi_search": {"cells": [
+            {"model": "qwen2.5-3b",
+             "oblivious": {"worst_total_k1": None, "n_disconnected_k1": 3},
+             "aware": {"worst_total_k1": 0.5, "n_disconnected_k1": 0,
+                       "ckpt_overhead": 1.01},
+             "gain_worst_k1": None, "aware_survives_k1": True},
+        ]},
+    }), encoding="utf-8")
+    out = recovery_table()
+    assert "mid_decode@3" in out and "| yes |" in out
+    assert "engine-unsupported" in out
+    assert "—" in out and "∞" in out
+
+
+def test_report_main_tolerates_missing_experiments_dir(monkeypatch,
+                                                       tmp_path, capsys):
+    """A checkout with no experiments/ at all must render a full report of
+    placeholders — no traceback, every section header present."""
+    import benchmarks.report as report
+    monkeypatch.setattr(report, "DRYRUN",
+                        str(tmp_path / "experiments" / "dryrun"))
+    report.main()
+    captured = capsys.readouterr()
+    assert "Crash recovery" in captured.out
+    assert "no BENCH_recovery.json" in captured.out
+    assert "no BENCH_resilience.json" in captured.out
+    assert "directory missing" in captured.err + captured.out
+
+
 def test_resilience_table_renders_full_record(monkeypatch, tmp_path):
     """The table renders the real benchmark record, including the None
     entries a disconnected sweep writes (shown as '—')."""

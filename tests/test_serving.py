@@ -241,15 +241,30 @@ def test_bounded_queue_sheds_not_strands(small_model):
     assert s["rejected"] == 3 and s["finished"] == 2
 
 
+class FakeClock:
+    """Injectable EngineConfig(clock=): deterministic, no sleeping."""
+
+    def __init__(self, t: float = 100.0, auto_advance: float = 0.0):
+        self.t, self.auto = t, auto_advance
+
+    def __call__(self) -> float:
+        self.t += self.auto
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
 def test_deadline_expires_queued_request(small_model):
     """A request whose deadline passes while still queued is evicted as
-    FAILED_DEADLINE on the next step — it never occupies a slot."""
-    import time
+    FAILED_DEADLINE on the next step — it never occupies a slot.  Driven
+    by an injected fake clock: no wall-clock sleeps."""
     from repro.serving.engine import FAILED_DEADLINE
     cfg, params = small_model
-    eng = _engine(cfg, params, max_batch=1, deadline_ms=20)
+    clk = FakeClock()
+    eng = _engine(cfg, params, max_batch=1, deadline_ms=20, clock=clk)
     r = eng.submit(np.asarray([1, 2, 3]))
-    time.sleep(0.05)
+    clk.advance(0.05)
     eng.step()
     assert r.status == FAILED_DEADLINE and r.terminal
     assert not eng.queue and all(x is None for x in eng.slot_req)
@@ -258,15 +273,30 @@ def test_deadline_expires_queued_request(small_model):
 
 def test_deadline_evicts_mid_decode(small_model):
     """An in-flight request past its deadline is evicted mid-decode with
-    whatever tokens it produced — the drain terminates."""
+    whatever tokens it produced — the drain terminates.  The fake clock
+    self-advances per reading, so expiry is deterministic in iterations
+    rather than host speed."""
     from repro.serving.engine import FAILED_DEADLINE
     cfg, params = small_model
+    clk = FakeClock(auto_advance=0.005)
     eng = _engine(cfg, params, max_batch=1, deadline_ms=30,
-                  max_new_tokens=200_000)
+                  max_new_tokens=200_000, clock=clk)
     r = eng.submit(np.asarray([1, 2, 3, 4]))
     eng.run_until_drained()
     assert r.status == FAILED_DEADLINE and r.terminal
     assert len(r.output) < 200_000
+
+
+def test_clock_injection_defaults_to_monotonic(small_model):
+    """Default EngineConfig wires time.monotonic; an injected clock is
+    the one the engine actually reads."""
+    import time
+    cfg, params = small_model
+    assert _engine(cfg, params).ecfg.clock is time.monotonic
+    clk = FakeClock(t=42.0)
+    eng = _engine(cfg, params, clock=clk)
+    r = eng.submit(np.asarray([1, 2, 3]))
+    assert r.t_enqueue == clk.t
 
 
 def test_run_until_drained_marks_stranded(small_model):

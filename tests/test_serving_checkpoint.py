@@ -1,0 +1,350 @@
+"""Crash-safe serving: bit-exact snapshot/restore, journal replay,
+corruption fallback, retry, and quantised slot-pool serialisation."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduce_config
+from repro.models import transformer as T
+from repro.serving import checkpoint as sc
+from repro.serving.engine import EngineConfig, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduce_config(get_config("qwen2.5-3b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(0),
+                           param_dtype=jnp.float32)
+    return cfg, params
+
+
+def _ecfg(**kw):
+    defaults = dict(max_batch=3, kv_len=48, max_new_tokens=6, impl="ref",
+                    prefill_chunk=8)
+    defaults.update(kw)
+    return EngineConfig(**defaults)
+
+
+# prompt 2 is longer than the chunk budget -> chunked-prefill state
+_PROMPT_LENS = (8, 5, 19, 11, 6)
+
+
+def _prompts(cfg, lens=_PROMPT_LENS):
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, cfg.vocab_size, size=n) for n in lens]
+
+
+def _outputs(engine):
+    out = {}
+    for r in engine.finished:
+        assert r.uid not in out
+        out[r.uid] = list(r.output)
+    return out
+
+
+def _reference(cfg, params, ecfg, prompts, kill_at):
+    eng = ServingEngine(cfg, params, ecfg)
+    for p in prompts[:4]:
+        eng.submit(p.copy())
+    for _ in range(kill_at):
+        eng.step()
+    eng.submit(prompts[4].copy())
+    eng.run_until_drained()
+    return _outputs(eng)
+
+
+def _crash_and_restore(cfg, params, ecfg, prompts, kill_at, ckpt_dir,
+                       lost_steps=2):
+    eng = ServingEngine(cfg, params, ecfg)
+    ck = sc.EngineCheckpointer(eng, ckpt_dir)
+    for p in prompts[:4]:
+        ck.submit(p.copy())
+    for _ in range(kill_at):
+        eng.step()
+    ck.save()
+    ck.submit(prompts[4].copy())          # journal-only: post-snapshot
+    for _ in range(lost_steps):           # work the crash throws away
+        eng.step()
+    del eng                               # the crash
+    eng2 = ServingEngine.restore(cfg, params, ckpt_dir)
+    eng2.run_until_drained()
+    return eng2
+
+
+@pytest.mark.parametrize("kill_at,temperature", [
+    (0, 0.0),     # post-admission, pre-snapshot journal burst
+    (1, 0.0),     # mid-prefill-chunk (19-token prompt, chunk=8)
+    (3, 0.0),     # mid-decode
+    (3, 0.8),     # mid-decode under temperature sampling (PRNG state)
+])
+def test_kill_restore_bit_exact(small_model, tmp_path, kill_at,
+                                temperature):
+    cfg, params = small_model
+    ecfg = _ecfg(temperature=temperature, seed=0)
+    prompts = _prompts(cfg)
+    ref = _reference(cfg, params, ecfg, prompts, kill_at)
+    eng2 = _crash_and_restore(cfg, params, ecfg, prompts, kill_at,
+                              str(tmp_path))
+    assert _outputs(eng2) == ref          # bit-exact, nothing lost/dup
+    s = eng2.stats()
+    assert s["restores"] == 1
+    assert s["replayed_requests"] == 1
+    assert s["checkpoints_written"] == 1
+
+
+def test_mid_prefill_snapshot_carries_chunk_progress(small_model,
+                                                     tmp_path):
+    cfg, params = small_model
+    ecfg = _ecfg()
+    prompts = _prompts(cfg)
+    eng = ServingEngine(cfg, params, ecfg)
+    for p in prompts[:4]:
+        eng.submit(p.copy())
+    for _ in range(10):                   # reach the adversarial kill
+        eng.step()                        # point: a 19-token prompt is
+        if eng._prefilling:               # mid-chunk (chunk=8)
+            break
+    assert eng._prefilling
+    sc.save_engine(eng, str(tmp_path))
+    eng2 = sc.restore_engine(cfg, params, str(tmp_path))
+    assert eng2._prefilling == eng._prefilling
+    eng.run_until_drained()
+    eng2.run_until_drained()
+    assert _outputs(eng2) == _outputs(eng)
+
+
+def test_journal_replay_desync_raises(small_model, tmp_path):
+    cfg, params = small_model
+    prompts = _prompts(cfg)
+    eng = ServingEngine(cfg, params, _ecfg())
+    ck = sc.EngineCheckpointer(eng, str(tmp_path))
+    ck.submit(prompts[0].copy())
+    ck.save()
+    # a gap in the journal uids cannot replay to the recorded uid
+    with open(os.path.join(str(tmp_path), sc.JOURNAL), "a") as f:
+        f.write(json.dumps({"uid": eng._uid + 1,
+                            "prompt": [1, 2, 3],
+                            "max_new_tokens": 4}) + "\n")
+    with pytest.raises(RuntimeError, match="journal replay desync"):
+        sc.restore_engine(cfg, params, str(tmp_path))
+
+
+def test_torn_journal_tail_dropped(small_model, tmp_path):
+    cfg, params = small_model
+    prompts = _prompts(cfg)
+    eng = ServingEngine(cfg, params, _ecfg())
+    ck = sc.EngineCheckpointer(eng, str(tmp_path))
+    ck.submit(prompts[0].copy())
+    ck.save()
+    ck.submit(prompts[1].copy())
+    with open(os.path.join(str(tmp_path), sc.JOURNAL), "a") as f:
+        f.write('{"uid": 99, "prompt": [1,')   # crash mid-append
+    eng2 = sc.restore_engine(cfg, params, str(tmp_path))
+    assert eng2.replayed_requests == 1         # the complete line survived
+    eng2.run_until_drained()
+    assert len(_outputs(eng2)) == 2
+
+
+def test_corrupt_newest_falls_back_to_previous(small_model, tmp_path):
+    cfg, params = small_model
+    prompts = _prompts(cfg)
+    eng = ServingEngine(cfg, params, _ecfg())
+    for p in prompts[:2]:
+        eng.submit(p.copy())
+    sc.save_engine(eng, str(tmp_path))
+    eng.step()
+    newest = sc.save_engine(eng, str(tmp_path))
+    # tamper one leaf of the newest arrays blob (valid npz, wrong bits)
+    # -> the integrity digest must reject it
+    blob = os.path.join(newest, "arrays.npz")
+    arrays = sc.load_arrays(blob)
+    key = sorted(arrays)[0]
+    tampered = np.array(arrays[key])
+    tampered.view(np.uint8).reshape(-1)[0] ^= 0xFF
+    arrays[key] = tampered
+    sc.save_arrays(blob, arrays)
+    arrays, meta, name = sc.load_newest_intact(str(tmp_path))
+    assert name == "snap_00000000"
+    eng2 = sc.restore_engine(cfg, params, str(tmp_path))
+    assert eng2.restores == 1
+    eng2.run_until_drained()
+    assert len(_outputs(eng2)) == 2
+
+    # all snapshots corrupt -> explicit FileNotFoundError
+    oldest = os.path.join(str(tmp_path), name, "meta.json")
+    with open(oldest, "r+") as f:
+        meta = json.load(f)
+        meta["digest"] = "0" * 64
+        f.seek(0)
+        json.dump(meta, f)
+        f.truncate()
+    with pytest.raises(FileNotFoundError, match="no intact snapshot"):
+        sc.load_newest_intact(str(tmp_path))
+
+
+def test_save_retries_transient_failures(small_model, tmp_path,
+                                         monkeypatch):
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, _ecfg())
+    eng.submit(_prompts(cfg)[0].copy())
+    real = sc.atomic_save_dir
+    fails = {"n": 2}
+    sleeps = []
+
+    def flaky(*a, **kw):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("transient store hiccup")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(sc, "atomic_save_dir", flaky)
+    path = sc.save_engine(eng, str(tmp_path), retries=3, backoff_s=0.05,
+                          sleep=sleeps.append)
+    assert os.path.isdir(path)
+    assert sleeps == [0.05, 0.1]          # exponential backoff, no waiting
+    assert eng.checkpoints_written == 1
+
+    # exhausted retries re-raise and roll the counter back
+    fails["n"] = 10
+    with pytest.raises(OSError):
+        sc.save_engine(eng, str(tmp_path), retries=1, backoff_s=0.01,
+                       sleep=sleeps.append)
+    assert eng.checkpoints_written == 1
+
+
+def test_config_mismatch_rejected_policy_tolerated(small_model, tmp_path):
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, _ecfg())
+    eng.submit(_prompts(cfg)[0].copy())
+    sc.save_engine(eng, str(tmp_path))
+    with pytest.raises(ValueError, match="config mismatch on 'kv_len'"):
+        sc.restore_engine(cfg, params, str(tmp_path),
+                          ecfg=_ecfg(kv_len=64))
+    # operational policy knobs are free to change across a restart
+    eng2 = sc.restore_engine(cfg, params, str(tmp_path),
+                             ecfg=_ecfg(deadline_ms=50.0, max_queue=7))
+    assert eng2.ecfg.max_queue == 7
+    other = dataclasses.replace(cfg, name="other-model")
+    with pytest.raises(ValueError, match="snapshot is of model"):
+        sc.restore_engine(other, params, str(tmp_path))
+
+
+def test_empty_dir_raises(small_model, tmp_path):
+    cfg, params = small_model
+    with pytest.raises(FileNotFoundError):
+        sc.restore_engine(cfg, params, str(tmp_path))
+
+
+def test_keep_bounds_snapshots_latest_survives(small_model, tmp_path):
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, _ecfg())
+    eng.submit(_prompts(cfg)[0].copy())
+    for _ in range(4):
+        sc.save_engine(eng, str(tmp_path), keep=2)
+    names = sc.list_snapshots(str(tmp_path), sc.SNAP_PREFIX)
+    assert names == ["snap_00000002", "snap_00000003"]
+    assert sc.read_latest(str(tmp_path)) == "snap_00000003"
+    assert eng.checkpoints_written == 4
+
+
+# ---------------------------------------------------------------------------
+# quantised slot-pool serialisation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_quantised_pool_kill_restore_bit_exact(small_model, tmp_path,
+                                               kv_bits):
+    """int8/int4 code+scale pools snapshot and resume bit-exactly (GQA
+    engine path)."""
+    cfg, params = small_model
+    ecfg = _ecfg(kv_bits=kv_bits)
+    prompts = _prompts(cfg)
+    ref = _reference(cfg, params, ecfg, prompts, kill_at=2)
+    eng2 = _crash_and_restore(cfg, params, ecfg, prompts, 2,
+                              str(tmp_path))
+    assert _outputs(eng2) == ref
+    leaves = sc.flatten_tree({"cache": eng2.cache})
+    kinds = {k.split("/")[-1]: np.asarray(v).dtype
+             for k, v in leaves.items()}
+    assert kinds["k_q"] == np.int8 and kinds["v_q"] == np.int8
+    assert kinds["k_s"] == np.float32 and kinds["v_s"] == np.float32
+
+
+def _mqa(cfg):
+    return dataclasses.replace(cfg, n_kv_heads=1)
+
+
+@pytest.mark.parametrize("arch,mutate,kv_bits", [
+    ("gpt-j", None, 8),                    # MHA
+    ("gemma2-9b", None, 8),                # GQA, global+local windows
+    ("qwen2.5-3b", _mqa, 8),               # MQA (one shared KV head)
+    ("qwen2.5-3b", None, 4),               # int4 packed codes
+    ("deepseek-v2-236b", None, 8),         # MLA: latent cache stays fp
+    ("bart-large", None, 8),               # enc-dec: cross-KV stays fp
+])
+def test_slot_pool_serialisation_roundtrip(tmp_path, arch, mutate,
+                                           kv_bits):
+    """Every attention variant's slot pool round-trips through the
+    dtype-safe npz with leaf dtypes intact — including the documented fp
+    exceptions (MLA latents, cross-attention KV are never quantised)."""
+    cfg = reduce_config(get_config(arch))
+    if mutate:
+        cfg = mutate(cfg)
+    cache = T.init_cache(cfg, batch=2, kv_len=16, kv_bits=kv_bits)
+    # realistic content: nonzero codes/scales/rows, not just zeros
+    cache = jax.tree_util.tree_map(
+        lambda x: x + jnp.asarray(np.random.default_rng(0)
+                                  .integers(1, 5, x.shape), x.dtype),
+        cache)
+    flat = sc.flatten_tree(cache)
+    path = os.path.join(str(tmp_path), "pool.npz")
+    sc.save_arrays(path, flat)
+    back = sc.unflatten_tree(cache, sc.load_arrays(path), cast=False)
+    for (kp, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(cache)[0],
+            jax.tree_util.tree_flatten_with_path(back)[0]):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype and a.tobytes() == b.tobytes(), kp
+
+    leaf_names = {k.split("/")[-1] for k in flat}
+    if arch == "deepseek-v2-236b":
+        # MLA is the documented fp exception: latent cache, no quant planes
+        assert {"ckv", "kr"} <= leaf_names
+        assert not ({"k_q", "v_q"} & leaf_names)
+    else:
+        assert {"k_q", "k_s", "v_q", "v_s"} <= leaf_names  # quant planes
+    if cfg.cross_attn_decoder:
+        # the fp exception: cross-KV leaves are bf16, never int8
+        cross = {k: np.asarray(v).dtype for k, v in flat.items()
+                 if "/cross/" in k}
+        assert cross and all(d != np.int8 for d in cross.values())
+
+
+def test_mla_pool_serialises_fp_latents(tmp_path):
+    """MLA caches (ckv/kr latents) are the documented fp exception: no
+    quant planes exist, and the latents round-trip bit-exactly."""
+    cfg = reduce_config(get_config("deepseek-v2-236b"))
+    cache = T.init_cache(cfg, batch=2, kv_len=16, kv_bits=8)
+    flat = sc.flatten_tree(cache)
+    names = {k.split("/")[-1] for k in flat}
+    assert {"ckv", "kr", "pos"} <= names
+    assert not ({"k_q", "v_q"} & names)
+    path = os.path.join(str(tmp_path), "mla.npz")
+    sc.save_arrays(path, flat)
+    back = sc.load_arrays(path)
+    for k, a in flat.items():
+        assert back[k].dtype == np.asarray(a).dtype
+
+
+def test_counters_surface_in_stats(small_model):
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, _ecfg())
+    s = eng.stats()
+    assert s["checkpoints_written"] == 0
+    assert s["restores"] == 0
+    assert s["replayed_requests"] == 0
