@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow verify bench-serving bench-cosim bench-quant bench-resilience bench-recovery bench-smoke report
+.PHONY: test test-slow verify bench-serving bench-capacity bench-cosim bench-quant bench-resilience bench-recovery bench-smoke report
 
 test:               ## tier-1 test suite (everything, slow included)
 	$(PY) -m pytest -x -q
@@ -11,6 +11,9 @@ test-slow:          ## only the slow-marked tests (CI runs these non-blocking)
 
 bench-serving:      ## full serving decode+prefill benchmark -> experiments/BENCH_serving.json
 	$(PY) -m benchmarks.perf_serving
+
+bench-capacity:     ## tail latency vs offered load per scheduler -> experiments/BENCH_capacity.json
+	$(PY) -m benchmarks.perf_capacity
 
 bench-cosim:        ## generation co-simulation sweep (zoo x architectures) -> experiments/BENCH_cosim.json
 	$(PY) -m benchmarks.perf_cosim
@@ -24,8 +27,9 @@ bench-resilience:   ## fault sweeps + fault-aware NoI search + overload shedding
 bench-recovery:     ## chaos kill+restore + MTTR-aware NoI search -> experiments/BENCH_recovery.json
 	$(PY) -m benchmarks.perf_recovery
 
-bench-smoke:        ## tiny-config serving+cosim+quant+resilience+recovery benchmarks; assert the JSON report schemas
+bench-smoke:        ## tiny-config serving+capacity+cosim+quant+resilience+recovery benchmarks; assert the JSON report schemas
 	$(PY) -m benchmarks.perf_serving --smoke
+	$(PY) -m benchmarks.perf_capacity --smoke
 	$(PY) -m benchmarks.perf_cosim --smoke
 	$(PY) -m benchmarks.perf_quant --smoke
 	$(PY) -m benchmarks.perf_resilience --smoke

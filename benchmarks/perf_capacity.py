@@ -1,0 +1,313 @@
+"""Capacity benchmark: tail latency (TTFT/TPOT percentiles) vs offered load.
+
+The request-level view the paper's serving claims live in: an open-loop
+arrival process (``serving/workload.py``) is offered to the engine
+through the streaming front end (``serving/frontend.py``) at multiples
+of the measured closed-loop capacity, and the drain's per-request
+timestamps yield p50/p95/p99 TTFT and TPOT per priority class — the
+load-latency curve that saturates at capacity and diverges under
+overload.
+
+Each zoo model runs the sweep under both schedulers:
+
+- ``fifo`` — strict arrival order (the pre-layering engine's policy);
+- ``slo``  — ``SloScheduler`` with a high-priority interactive class
+  (tight TTFT/TPOT targets) over a best-effort batch class: priority
+  admission + slack-gated chunked-prefill preemption of decode.
+
+The headline check: at overload (highest load multiple) the SLO policy
+improves the high-priority class's p99 TTFT vs FIFO — tail isolation
+paid for by the batch class, visible in the same table.  The overload
+run's measured mix then flows through ``cosim_from_engine`` so Plane-B
+NoI architecture comparison is driven by the tail-latency regime, not a
+synthetic mix.
+
+Results go to ``experiments/BENCH_capacity.json`` (schema-checked;
+``--smoke`` writes ``BENCH_capacity_smoke.json`` for CI) and are
+rendered by ``benchmarks/report.py``.
+
+    PYTHONPATH=src python -m benchmarks.perf_capacity [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+_CLASS_KEYS = {"n", "ttft_p50_s", "ttft_p95_s", "ttft_p99_s",
+               "tpot_p50_s", "tpot_p95_s", "tpot_p99_s",
+               "mean_queue_wait_s"}
+_POINT_KEYS = {"offered_rps", "load_x", "n", "finished", "failed",
+               "span_s", "classes"}
+
+
+def check_schema(rec: dict) -> None:
+    """Assert the BENCH_capacity.json record shape (CI bit-rot gate)."""
+    for key in ("bench", "backend", "smoke", "hi_fraction", "loads",
+                "schedulers", "models"):
+        assert key in rec, f"missing top-level key {key!r}"
+    assert rec["models"], "no models in record"
+    for arch, m in rec["models"].items():
+        for key in ("capacity_rps", "curves", "slo_wins_hi_p99_ttft",
+                    "cosim"):
+            assert key in m, f"model {arch!r} missing {key!r}"
+        for sched in rec["schedulers"]:
+            curve = m["curves"][sched]
+            assert len(curve) == len(rec["loads"]), \
+                f"{arch}/{sched}: {len(curve)} points != {len(rec['loads'])}"
+            for pt in curve:
+                missing = _POINT_KEYS - set(pt)
+                assert not missing, f"{arch}/{sched} point missing {missing}"
+                for cls in ("hi", "lo"):
+                    missing = _CLASS_KEYS - set(pt["classes"][cls])
+                    assert not missing, \
+                        f"{arch}/{sched}/{cls} missing {missing}"
+        for key in ("mix", "archs"):
+            assert key in m["cosim"], f"{arch} cosim missing {key!r}"
+
+
+def _pcts(xs) -> tuple[float, float, float]:
+    if not xs:
+        return (0.0, 0.0, 0.0)
+    p = np.percentile(np.asarray(xs, np.float64), (50.0, 95.0, 99.0))
+    return (float(p[0]), float(p[1]), float(p[2]))
+
+
+def _class_stats(reqs) -> dict:
+    ttft = [r.t_first_token - r.t_enqueue for r in reqs]
+    tpot = [(r.t_done - r.t_first_token) / (len(r.output) - 1)
+            for r in reqs if len(r.output) > 1]
+    qwait = [r.t_admit - r.t_enqueue for r in reqs if r.t_admit > 0.0]
+    t50, t95, t99 = _pcts(ttft)
+    d50, d95, d99 = _pcts(tpot)
+    return {"n": len(reqs),
+            "ttft_p50_s": t50, "ttft_p95_s": t95, "ttft_p99_s": t99,
+            "tpot_p50_s": d50, "tpot_p95_s": d95, "tpot_p99_s": d99,
+            "mean_queue_wait_s": float(np.mean(qwait)) if qwait else 0.0}
+
+
+def _warm_drain(engine, cfg, *, n: int, min_len: int, max_len: int,
+                max_new_tokens: int, seed: int = 0) -> list:
+    """Closed-loop drain of ``n`` requests; returns the finished slice."""
+    from repro.serving.workload import synthetic_prompts
+
+    rng = np.random.default_rng(seed)
+    n0 = len(engine.finished)
+    for p in synthetic_prompts(n, rng, min_len=min_len, max_len=max_len,
+                               vocab=cfg.vocab_size):
+        engine.submit(p, max_new_tokens)
+    engine.run_until_drained()
+    return engine.finished[n0:]
+
+
+def measure_capacity(cfg, params, ecfg_kw: dict, *, n: int,
+                     min_len: int, max_len: int,
+                     max_new_tokens: int) -> float:
+    """Closed-loop capacity (finished req/s): submit everything at once,
+    drain flat out — the saturation throughput the load multiples are
+    anchored to.  A first (untimed) drain absorbs every compile; the
+    measured drain times only the serving loop."""
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    eng = ServingEngine(cfg, params, EngineConfig(**ecfg_kw))
+    shape = dict(n=n, min_len=min_len, max_len=max_len,
+                 max_new_tokens=max_new_tokens)
+    _warm_drain(eng, cfg, **shape)            # compiles happen here
+    done = _warm_drain(eng, cfg, **shape, seed=1)
+    span = max(r.t_done for r in done) - min(r.t_enqueue for r in done)
+    return len(done) / max(span, 1e-9)
+
+
+def run_point(engine, frontend, *, n: int, rate_rps: float, load_x: float,
+              hi_fraction: float, min_len: int, max_len: int,
+              max_new_tokens: int, seed: int) -> dict:
+    """Offer one open-loop workload and summarise the drain per class."""
+    from repro.serving.workload import make_workload
+
+    n0, f0 = len(engine.finished), len(engine.failed)
+    wl = make_workload(n, rate_rps, seed=seed, hi_fraction=hi_fraction,
+                       min_len=min_len, max_len=max_len,
+                       vocab=engine.cfg.vocab_size,
+                       max_new_tokens=max_new_tokens)
+    t0 = time.perf_counter()
+    frontend.play(wl)
+    span = time.perf_counter() - t0
+    done = engine.finished[n0:]
+    hi = [r for r in done if r.priority > 0]
+    lo = [r for r in done if r.priority == 0]
+    return {"offered_rps": rate_rps,
+            "load_x": load_x,
+            "n": n,
+            "finished": len(done),
+            "failed": len(engine.failed) - f0,
+            "span_s": span,
+            "classes": {"hi": _class_stats(hi), "lo": _class_stats(lo)}}
+
+
+def run_model(arch: str, *, loads, n: int, hi_fraction: float,
+              ecfg_kw: dict, min_len: int, max_len: int,
+              max_new_tokens: int, hi_ttft_ms: float, hi_tpot_ms: float,
+              lo_ttft_ms: float, n_chiplets: int) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.config import get_config, reduce_config
+    from repro.core.cosim import cosim_from_engine
+    from repro.models import transformer as T
+    from repro.serving.engine import EngineConfig, ServingEngine
+    from repro.serving.frontend import ServingFrontend
+    from repro.serving.scheduler import SloClass, SloScheduler
+
+    cfg = reduce_config(get_config(arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(0),
+                           param_dtype=jnp.bfloat16)
+    shape = dict(min_len=min_len, max_len=max_len,
+                 max_new_tokens=max_new_tokens)
+    capacity = measure_capacity(cfg, params, ecfg_kw, n=n, **shape)
+
+    def make_sched(name):
+        if name == "fifo":
+            return None                       # engine default
+        return SloScheduler(classes={1: SloClass(ttft_ms=hi_ttft_ms,
+                                                 tpot_ms=hi_tpot_ms),
+                                     0: SloClass(ttft_ms=lo_ttft_ms)},
+                            aging_s=30.0)
+
+    curves: dict[str, list] = {}
+    overload_engine = None
+    for sched_name in ("fifo", "slo"):
+        # one engine per scheduler, warmed with an untimed closed-loop
+        # drain (fresh jit closures per engine → compiles land there, not
+        # in the first load point); per-point metrics slice
+        # engine.finished, so accumulation across load points never
+        # mixes samples
+        engine = ServingEngine(cfg, params, EngineConfig(**ecfg_kw),
+                               scheduler=make_sched(sched_name))
+        _warm_drain(engine, cfg, n=2 * ecfg_kw["max_batch"], **shape)
+        frontend = ServingFrontend(engine)
+        curve = []
+        for j, load_x in enumerate(loads):
+            curve.append(run_point(
+                engine, frontend, n=n, rate_rps=load_x * capacity,
+                load_x=load_x, hi_fraction=hi_fraction, seed=100 + j,
+                **shape))
+        curves[sched_name] = curve
+        if sched_name == "slo":
+            overload_engine = engine
+
+    hi_fifo = curves["fifo"][-1]["classes"]["hi"]["ttft_p99_s"]
+    hi_slo = curves["slo"][-1]["classes"]["hi"]["ttft_p99_s"]
+    # the overload SLO run's measured mix drives Plane-B NoI comparison
+    cosim = cosim_from_engine(overload_engine, n_chiplets=n_chiplets)
+    return {"capacity_rps": capacity,
+            "curves": curves,
+            "hi_p99_ttft_s": {"fifo": hi_fifo, "slo": hi_slo},
+            "slo_wins_hi_p99_ttft": bool(hi_slo < hi_fifo),
+            "cosim": cosim}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", nargs="+",
+                    default=["qwen2.5-3b", "gemma2-9b"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI (seconds, still writes JSON)")
+    ap.add_argument("--requests", type=int, default=40,
+                    help="requests offered per (scheduler, load) point")
+    ap.add_argument("--loads", nargs="+", type=float,
+                    default=[0.5, 1.0, 2.0],
+                    help="offered load as multiples of measured capacity")
+    ap.add_argument("--hi-fraction", type=float, default=0.25,
+                    help="fraction of requests in the high-priority class")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--kv-len", type=int, default=64)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--min-len", type=int, default=6)
+    ap.add_argument("--max-len", type=int, default=20)
+    ap.add_argument("--hi-ttft-ms", type=float, default=200.0)
+    ap.add_argument("--hi-tpot-ms", type=float, default=100.0)
+    ap.add_argument("--lo-ttft-ms", type=float, default=5000.0)
+    ap.add_argument("--n-chiplets", type=int, default=64)
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: experiments/BENCH_capacity"
+                         ".json, or BENCH_capacity_smoke.json with --smoke "
+                         "so CI never clobbers the recorded full run)")
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = os.path.join(
+            EXPERIMENTS, "BENCH_capacity_smoke.json" if args.smoke
+            else "BENCH_capacity.json")
+    if args.smoke:
+        args.archs = ["qwen2.5-3b"]
+        args.requests = 8
+        args.loads = [0.8, 2.5]
+        args.max_batch, args.kv_len = 2, 48
+        args.max_new_tokens = 4
+        args.min_len, args.max_len = 4, 8
+        args.n_chiplets = 36          # smallest paper system size (§4.1.1)
+
+    import jax
+    from benchmarks.common import emit
+
+    ecfg_kw = dict(max_batch=args.max_batch, kv_len=args.kv_len,
+                   max_new_tokens=args.max_new_tokens, impl="ref")
+    models = {}
+    for arch in args.archs:
+        models[arch] = run_model(
+            arch, loads=args.loads, n=args.requests,
+            hi_fraction=args.hi_fraction, ecfg_kw=ecfg_kw,
+            min_len=args.min_len, max_len=args.max_len,
+            max_new_tokens=args.max_new_tokens,
+            hi_ttft_ms=args.hi_ttft_ms, hi_tpot_ms=args.hi_tpot_ms,
+            lo_ttft_ms=args.lo_ttft_ms, n_chiplets=args.n_chiplets)
+
+    rec = {
+        "bench": "capacity",
+        "backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+        "requests": args.requests,
+        "hi_fraction": args.hi_fraction,
+        "loads": args.loads,
+        "schedulers": ["fifo", "slo"],
+        "engine": ecfg_kw,
+        "slo": {"hi_ttft_ms": args.hi_ttft_ms,
+                "hi_tpot_ms": args.hi_tpot_ms,
+                "lo_ttft_ms": args.lo_ttft_ms},
+        "models": models,
+    }
+    check_schema(rec)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=2)
+
+    rows = []
+    for arch, m in models.items():
+        for sched in ("fifo", "slo"):
+            for pt in m["curves"][sched]:
+                rows.append({
+                    "arch": arch, "sched": sched,
+                    "load_x": pt["load_x"],
+                    "offered_rps": round(pt["offered_rps"], 2),
+                    "hi_ttft_p99_ms":
+                        pt["classes"]["hi"]["ttft_p99_s"] * 1e3,
+                    "lo_ttft_p99_ms":
+                        pt["classes"]["lo"]["ttft_p99_s"] * 1e3,
+                    "hi_tpot_p99_ms":
+                        pt["classes"]["hi"]["tpot_p99_s"] * 1e3,
+                })
+    emit(rows, "capacity")
+    for arch, m in models.items():
+        hp = m["hi_p99_ttft_s"]
+        print(f"{arch}: capacity {m['capacity_rps']:.2f} req/s · overload "
+              f"hi-class p99 TTFT {hp['fifo']*1e3:.0f} ms (fifo) -> "
+              f"{hp['slo']*1e3:.0f} ms (slo) · "
+              f"{'SLO wins' if m['slo_wins_hi_p99_ttft'] else 'NO WIN'}")
+    print(f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -452,6 +452,60 @@ def recovery_table() -> str:
     return "\n".join(out)
 
 
+def capacity_table() -> str:
+    """Render experiments/BENCH_capacity.json (benchmarks.perf_capacity)."""
+    path = os.path.normpath(os.path.join(DRYRUN, "..", "BENCH_capacity.json"))
+    if not os.path.exists(path):
+        return ("(no BENCH_capacity.json — run "
+                "`python -m benchmarks.perf_capacity`)")
+    r = _load_json(path)
+    if r is None:
+        return ("(BENCH_capacity.json is malformed — re-run "
+                "`python -m benchmarks.perf_capacity`)")
+    e = r.get("engine", {})
+    slo = r.get("slo", {})
+    out = [f"backend={r['backend']} · slots={e.get('max_batch')} · "
+           f"kv_len={e.get('kv_len')} · max_new={e.get('max_new_tokens')} · "
+           f"{r['requests']} req/point · hi class = {r['hi_fraction']:.0%} "
+           f"of traffic @ TTFT≤{slo.get('hi_ttft_ms', 0):.0f} ms"
+           + (" · SMOKE" if r.get("smoke") else ""),
+           "",
+           "| model | sched | load | offered req/s | hi TTFT p50/p99 ms | "
+           "lo TTFT p99 ms | hi TPOT p99 ms |",
+           "|---|---|---|---|---|---|---|"]
+    for arch, m in r["models"].items():
+        for sched in r["schedulers"]:
+            for pt in m["curves"][sched]:
+                hi, lo = pt["classes"]["hi"], pt["classes"]["lo"]
+                out.append(
+                    f"| {arch} | {sched} | {pt['load_x']:g}× | "
+                    f"{pt['offered_rps']:.0f} | "
+                    f"{hi['ttft_p50_s']*1e3:.1f} / "
+                    f"{hi['ttft_p99_s']*1e3:.1f} | "
+                    f"{lo['ttft_p99_s']*1e3:.1f} | "
+                    f"{hi['tpot_p99_s']*1e3:.2f} |")
+    out.append("")
+    for arch, m in r["models"].items():
+        hp = m["hi_p99_ttft_s"]
+        verdict = "**SLO wins**" if m["slo_wins_hi_p99_ttft"] else "no win"
+        out.append(
+            f"- {arch}: capacity {m['capacity_rps']:.0f} req/s · overload "
+            f"hi-class p99 TTFT {hp['fifo']*1e3:.0f} ms (fifo) → "
+            f"{hp['slo']*1e3:.0f} ms (slo) — {verdict}")
+    out.append("")
+    out.append("Overload mix → Plane-B co-sim (SLO run, measured episode "
+               "mix through `cosim_from_engine`):")
+    out.append("")
+    out.append("| model | arch | TTFT ms | tok/s | mJ/token |")
+    out.append("|---|---|---|---|---|")
+    for arch, m in r["models"].items():
+        for noi, g in m["cosim"]["archs"].items():
+            out.append(f"| {arch} | {noi} | {g['ttft_s']*1e3:.2f} | "
+                       f"{g['tokens_per_s']:.0f} | "
+                       f"{g['energy_per_token_j']*1e3:.2f} |")
+    return "\n".join(out)
+
+
 def _opt(v, fmt: str) -> str:
     """Format an optional number ('—' for the None a disconnected or
     unroutable sweep records)."""
@@ -484,6 +538,9 @@ def main():
     print(_render(roofline_table, recs) + "\n")
     print("### Serving decode fast path (benchmarks.perf_serving)\n")
     print(_render(serving_table) + "\n")
+    print("### Capacity: tail latency vs offered load per scheduler "
+          "(benchmarks.perf_capacity)\n")
+    print(_render(capacity_table) + "\n")
     print("### Generation co-simulation (benchmarks.perf_cosim)\n")
     print(_render(cosim_table) + "\n")
     print("### Quantised serving (benchmarks.perf_quant)\n")

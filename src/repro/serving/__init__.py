@@ -1,3 +1,11 @@
 from repro.serving.engine import EngineConfig, Request, ServingEngine  # noqa: F401
+from repro.serving.scheduler import (  # noqa: F401
+    FifoScheduler, Scheduler, SloClass, SloScheduler)
+from repro.serving.executor import Executor  # noqa: F401
+from repro.serving.pool import SlotPool  # noqa: F401
 from repro.serving.checkpoint import (  # noqa: F401
     EngineCheckpointer, restore_engine, save_engine)
+from repro.serving.frontend import ServingFrontend, TokenStream  # noqa: F401
+from repro.serving.workload import (  # noqa: F401
+    Arrival, bursty_arrivals, make_workload, poisson_arrivals,
+    synthetic_prompts, trace_arrivals)

@@ -96,34 +96,37 @@ def _warn(msg: str) -> None:
 def _req_to_dict(req: Request) -> dict:
     return {"uid": req.uid, "prompt": [int(t) for t in req.prompt],
             "max_new_tokens": req.max_new_tokens,
+            "priority": req.priority,
             "output": list(req.output), "done": req.done,
             "status": req.status, "deadline": req.deadline,
-            "t_enqueue": req.t_enqueue, "t_first_token": req.t_first_token,
+            "t_enqueue": req.t_enqueue, "t_admit": req.t_admit,
+            "t_first_token": req.t_first_token,
             "t_done": req.t_done}
 
 
 def _req_from_dict(d: dict) -> Request:
+    # .get defaults keep pre-layering (priority-less) snapshots restorable
     return Request(uid=int(d["uid"]),
                    prompt=np.asarray(d["prompt"], np.int32),
                    max_new_tokens=d["max_new_tokens"],
+                   priority=int(d.get("priority", 0)),
                    output=list(d["output"]), done=bool(d["done"]),
                    status=d["status"], deadline=float(d["deadline"]),
                    t_enqueue=float(d["t_enqueue"]),
+                   t_admit=float(d.get("t_admit", 0.0)),
                    t_first_token=float(d["t_first_token"]),
                    t_done=float(d["t_done"]))
 
 
 def _engine_arrays(engine: ServingEngine) -> dict[str, np.ndarray]:
-    """Every device/host array leaf of the engine, as one flat dict.
-    Fetched with ``np.asarray`` (a copy — donation-safe) rather than the
-    engine's ``_fetch`` choke point so snapshotting never perturbs the
-    host-transfer accounting the benchmarks measure."""
-    tree = {"cache": engine.cache, "state": engine._state,
-            "seed_key": engine._key}
-    if hasattr(engine, "_slot_pos"):      # host-path lazily-created state
-        tree["host"] = {"slot_pos": engine._slot_pos,
-                        "slot_budget": engine._slot_budget,
-                        "last_token": engine._last_token}
+    """Every device/host array leaf of the engine, as one flat dict:
+    the slot pool's serialization tree (``SlotPool.array_tree``) plus the
+    seed-path sampling key.  Leaves are serialised with ``np.asarray``
+    (a copy — donation-safe) rather than the executor's ``fetch`` choke
+    point so snapshotting never perturbs the host-transfer accounting
+    the benchmarks measure."""
+    tree = dict(engine.pool.array_tree())
+    tree["seed_key"] = engine._key
     return flatten_tree(tree)
 
 
@@ -139,9 +142,7 @@ def _engine_meta(engine: ServingEngine) -> dict:
         "finished": [_req_to_dict(r) for r in engine.finished],
         "failed": [_req_to_dict(r) for r in engine.failed],
         "rejected": [_req_to_dict(r) for r in engine.rejected],
-        "prefilling": [[int(s), int(start), int(budget)]
-                       for s, (start, budget) in engine._prefilling.items()],
-        "slot_anomalies": list(engine._slot_anomalies),
+        **engine.pool.meta(),        # prefilling + slot_anomalies
         "counters": {
             "host_transfers": engine.host_transfers,
             "host_bytes": engine.host_bytes,
@@ -284,7 +285,7 @@ def read_journal(ckpt_dir: str) -> list[dict]:
 
 def restore_engine(cfg, params, ckpt_dir: str, *,
                    ecfg: Optional[EngineConfig] = None, mesh=None,
-                   replay: bool = True) -> ServingEngine:
+                   scheduler=None, replay: bool = True) -> ServingEngine:
     """Revive a :class:`ServingEngine` from its newest intact snapshot.
 
     ``ecfg=None`` rebuilds the engine config from the snapshot's echo
@@ -293,31 +294,24 @@ def restore_engine(cfg, params, ckpt_dir: str, *,
     ``deadline_ms``/``max_queue``/``anomaly_retries`` — may differ).
     ``params`` are the caller's weights, exactly as at original
     construction (quantisation re-derives deterministically); they are
-    not part of the snapshot.  With ``replay=True`` journal-tail
-    requests (admitted after the snapshot) are resubmitted in uid order,
-    reassigned their original uids by the restored counter."""
+    not part of the snapshot.  ``scheduler`` is passed through to the
+    revived engine (policy, like the operational knobs, may change
+    across a restart — it shapes future admissions, not restored
+    state).  With ``replay=True`` journal-tail requests (admitted after
+    the snapshot) are resubmitted in uid order, reassigned their
+    original uids by the restored counter."""
     arrays, meta, name = load_newest_intact(ckpt_dir)
     if ecfg is None:
         ecfg = EngineConfig(**meta["engine"])
-    engine = ServingEngine(cfg, params, ecfg, mesh=mesh)
+    engine = ServingEngine(cfg, params, ecfg, mesh=mesh, scheduler=scheduler)
     _check_config(meta, engine.cfg.name, engine.ecfg)
 
-    template = {"cache": engine.cache, "state": engine._state,
-                "seed_key": engine._key}
     host = any(k.startswith("host/") for k in arrays)
-    if host:
-        B = engine.ecfg.max_batch
-        template["host"] = {"slot_pos": np.zeros(B, np.int32),
-                            "slot_budget": np.zeros(B, np.int32),
-                            "last_token": np.zeros(B, np.int32)}
+    template = engine.pool.array_template(with_host=host)
+    template["seed_key"] = engine._key
     tree = unflatten_tree(template, arrays, cast=False)
-    engine.cache = jax.device_put(tree["cache"])
-    engine._state = jax.device_put(tree["state"])
-    engine._key = jax.device_put(tree["seed_key"])
-    if host:
-        engine._slot_pos = np.array(tree["host"]["slot_pos"])
-        engine._slot_budget = np.array(tree["host"]["slot_budget"])
-        engine._last_token = np.array(tree["host"]["last_token"])
+    engine._key = jax.device_put(tree.pop("seed_key"))
+    engine.pool.load_array_tree(tree)
 
     engine.slot_req = [None if r is None else _req_from_dict(r)
                        for r in meta["slot_req"]]
@@ -326,9 +320,7 @@ def restore_engine(cfg, params, ckpt_dir: str, *,
     engine.finished = [_req_from_dict(r) for r in meta["finished"]]
     engine.failed = [_req_from_dict(r) for r in meta["failed"]]
     engine.rejected = [_req_from_dict(r) for r in meta["rejected"]]
-    engine._prefilling = {int(s): (int(start), int(budget))
-                          for s, start, budget in meta["prefilling"]}
-    engine._slot_anomalies = list(meta["slot_anomalies"])
+    engine.pool.load_meta(meta["prefilling"], meta["slot_anomalies"])
     engine._uid = int(meta["uid"])
     c = meta["counters"]
     engine.host_transfers = c["host_transfers"]
@@ -351,7 +343,8 @@ def restore_engine(cfg, params, ckpt_dir: str, *,
                       key=lambda e: int(e["uid"]))
         for entry in tail:
             req = engine.submit(np.asarray(entry["prompt"], np.int32),
-                                entry["max_new_tokens"])
+                                entry["max_new_tokens"],
+                                priority=int(entry.get("priority", 0)))
             if req.uid != int(entry["uid"]):
                 raise RuntimeError(
                     f"journal replay desync: resubmit assigned uid "
@@ -383,15 +376,17 @@ class EngineCheckpointer:
         self._steps_since = 0
         os.makedirs(ckpt_dir, exist_ok=True)
 
-    def submit(self, prompt, max_new_tokens: Optional[int] = None) -> Request:
-        req = self.engine.submit(prompt, max_new_tokens)
+    def submit(self, prompt, max_new_tokens: Optional[int] = None,
+               *, priority: int = 0) -> Request:
+        req = self.engine.submit(prompt, max_new_tokens, priority=priority)
         if req.status != REJECTED:       # shed requests are the caller's
             #                              to retry — never replayed
             with open(os.path.join(self.ckpt_dir, JOURNAL), "a") as f:
                 f.write(json.dumps(
                     {"uid": req.uid,
                      "prompt": [int(t) for t in req.prompt],
-                     "max_new_tokens": req.max_new_tokens}) + "\n")
+                     "max_new_tokens": req.max_new_tokens,
+                     "priority": req.priority}) + "\n")
                 f.flush()
                 os.fsync(f.fileno())
         return req

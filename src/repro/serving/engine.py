@@ -1,73 +1,70 @@
-"""Batched serving engine: slotted KV cache, continuous batching, packed
-ragged prefill and chunked prefill.
+"""Batched serving engine: the wiring layer of the serving stack.
 
-The paper's evaluation is *inference*; this is the inference runtime for
-Plane A.  Design follows the production pattern (vLLM/TGI-style, expressed
-in JAX with static shapes).  Each engine iteration runs three phases:
+The engine is deliberately thin.  Policy, device execution and slot
+lifecycle live in three sibling layers with narrow interfaces::
 
-1. **admission** — *all* queued requests that fit are packed back-to-back
-   into one ragged ``(1, C)`` token stream (``C = prefill_chunk``) and
-   prefilled in a **single** jitted call: the segmented flash kernel masks
-   cross-prompt attention, and one donated multi-slot scatter inserts every
-   segment's KV into its slot.  A burst of arrivals therefore costs one
-   device call, not one per request — time-to-first-token no longer scales
-   linearly with queue depth.  Prompts longer than ``C`` contribute their
-   first ``≤ C`` tokens and leave the slot in the *prefilling* state;
-2. **chunked-prefill continuation** — every prefilling slot advances by at
-   most one ``C``-token chunk per iteration (one batched jitted call over
-   the pool; chunk K/V is written at explicit positions and attends to the
-   whole cache, so later chunks see earlier chunks).  A long prompt can
-   never stall the decode pool for more than one chunk budget;
-3. **decode** — one jitted, cache-donated step over the full slot pool:
-   decode → sample (greedy and temperature, PRNG threaded on device) →
-   position/budget/EOS bookkeeping; the only device→host traffic per
-   iteration is one packed ``(K, 3, max_batch)`` int32 of
-   ``(next_token, done, anomaly)``.  Mid-prefill and dead slots carry
-   ``pos = -1`` so their decode writes are dropped, never corrupting a
-   half-filled row.
+    scheduler.py   admission + slot policy (Scheduler protocol:
+                   FifoScheduler / SloScheduler) — who is admitted next,
+                   may prefill preempt decode this iteration
+    executor.py    the jitted device programs (fused decode step, packed
+                   ragged prefill, chunked continuation, sequential
+                   baselines) + the single device→host transfer point
+    pool.py        the slotted (optionally quantised) KV cache, per-slot
+                   decode state, slot lifecycle and its serialization API
 
-Hardening (defaults off → bit-identical to the plain engine): per-request
-deadlines (``deadline_ms`` — expired requests are evicted and marked
-``FAILED_DEADLINE``), bounded-queue overload shedding (``max_queue`` —
-excess submits return with the retriable ``REJECTED`` status), NaN/inf
-logit quarantine (an anomalous slot is frozen and retried
-``anomaly_retries`` times before only that request fails — the batch
-survives), and explicit ``run_until_drained`` failure semantics
-(``EngineStallError`` + ``FAILED_MAX_ITERS``, never a silent partial
-drain).  Every submitted request ends in a terminal state.
+``ServingEngine`` owns only the request queue, terminal bookkeeping and
+the iteration loop that drives the three layers.  Each iteration runs:
 
-Every prefill shape is static: the packed stream is always ``(1, C)``, the
-continuation always ``(max_batch, C)``, and non-packable architectures
-(SSM / recurrent / MoE stacks, whose state or expert-capacity would couple
-packed prompts) prefill per-request right-padded to a multiple of ``C``
-with ``length``-exact state handling — no compile-per-distinct-prompt-length
-anywhere.
+1. **admission** — the scheduler picks queued requests (FIFO by
+   default); all picked prompts pack back-to-back into one ragged
+   ``(1, C)`` stream and prefill in a **single** jitted call, with one
+   donated multi-slot scatter insert.  Prompts longer than ``C``
+   contribute their first ``≤ C`` tokens and enter the *prefilling*
+   state;
+2. **chunked-prefill continuation** — every prefilling slot advances by
+   at most one ``C``-token chunk per iteration, so a long prompt can
+   never stall the decode pool for more than one chunk budget.  An
+   SLO-aware scheduler may *defer* steps 1–2 while decode slack is too
+   thin (slack-gated preemption); the default FIFO never does;
+3. **decode** — one jitted, cache-donated step over the full slot pool;
+   the only device→host traffic per iteration is one packed
+   ``(K, 3, max_batch)`` int32 of ``(next_token, done, anomaly)``.
 
-``packed=False`` preserves the PR-1 sequential admission path (one
-bucket-padded batch-1 prefill+insert call per request) and ``fused=False``
-the original host-looped decode step — both kept as measurement baselines
-for ``benchmarks/perf_serving.py``.
+Hardening (defaults off → bit-identical to the plain engine):
+per-request deadlines (``deadline_ms``), bounded-queue shedding
+(``max_queue`` → retriable ``REJECTED``), NaN/inf logit quarantine
+(``anomaly_retries``), and explicit ``run_until_drained`` failure
+semantics (``EngineStallError`` — never a silent partial drain).  Every
+submitted request ends in a terminal state.
 
-The engine is mesh-aware: pass ``mesh=`` to shard the slot pool (and run
-the decode step) over a pod with the decode-mode plan from
-``repro.parallel.sharding``; the packed prefill call runs under the
-sequence-sharded serving prefill plan.  On CPU tests everything runs on
-one device with the same code path.
+``packed=False`` preserves the sequential admission baseline (one
+bucket-padded batch-1 prefill+insert call per request) and
+``fused=False`` the original host-looped decode step — both kept as
+measurement baselines for ``benchmarks/perf_serving.py``.
+
+The engine is mesh-aware: pass ``mesh=`` to shard the slot pool and run
+the decode step over a pod (the executor activates the serving plans
+from ``repro.parallel.sharding``).  Under the default config (FIFO, no
+SLOs) token streams, ``stats()`` and checkpoint round-trips are
+bit-identical to the pre-layering monolithic engine — pinned by
+``tests/test_serving.py`` golden token streams and the HEAD snapshot
+fixture in ``tests/data/``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
-from repro.models import transformer as T
-from repro.parallel.api import activate_plan
+from repro.serving.executor import Executor
+from repro.serving.pool import SlotPool
+from repro.serving.scheduler import FifoScheduler, Scheduler
 
 
 @dataclasses.dataclass
@@ -81,7 +78,7 @@ class EngineConfig:
     seed: int = 0
     fused: bool = True            # zero-host-sync decode step (False = seed path)
     packed: bool = True           # packed ragged prefill + chunked prefill
-    #   (False = PR-1 sequential admission: one batch-1 prefill per request)
+    #   (False = sequential admission: one batch-1 prefill per request)
     prefill_chunk: int = 0        # packed-stream / chunk budget in tokens
     #   (0 → min(128, kv_len)); also the padding quantum for non-packable
     #   architectures, so every prefill shape is static
@@ -139,12 +136,18 @@ class Request:
     uid: int
     prompt: np.ndarray                       # (prompt_len,) int32
     max_new_tokens: Optional[int] = None
+    priority: int = 0                        # scheduling class (larger =
+    #                                          more urgent; FIFO ignores it)
     # -- filled by the engine -------------------------------------------------
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
     status: str = QUEUED
     deadline: float = float("inf")           # absolute wall-clock bound
     t_enqueue: float = 0.0
+    t_admit: float = 0.0                     # left the queue (slot assigned):
+    #                                          t_admit - t_enqueue is pure
+    #                                          scheduling delay, separable
+    #                                          from prefill/decode service
     t_first_token: float = 0.0
     t_done: float = 0.0
 
@@ -165,39 +168,42 @@ def _bucket_len(plen: int, kv_len: int) -> int:
     return min(b, kv_len)
 
 
+def _percentiles(xs) -> tuple[float, float, float]:
+    """(p50, p95, p99) of a sample list; zeros when empty."""
+    if not xs:
+        return (0.0, 0.0, 0.0)
+    p = np.percentile(np.asarray(xs, np.float64), (50.0, 95.0, 99.0))
+    return (float(p[0]), float(p[1]), float(p[2]))
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, ecfg: Optional[EngineConfig] = None,
-                 *, mesh=None):
+                 *, mesh=None, scheduler: Optional[Scheduler] = None):
         # NOTE: default built per-instance — a dataclass default argument
         # would be one shared mutable EngineConfig across all engines.
-        self.cfg, self.params = cfg, params
+        self.cfg = cfg
         self.ecfg = ecfg = ecfg if ecfg is not None else EngineConfig()
         if ecfg.weight_bits not in (0, 4, 8):
             raise ValueError(f"weight_bits must be 0, 4 or 8, got {ecfg.weight_bits}")
         if ecfg.kv_bits not in (0, 4, 8):
             raise ValueError(f"kv_bits must be 0, 4 or 8, got {ecfg.kv_bits}")
-        if ecfg.weight_bits:
-            from repro.quant.core import quantize_params
-            self.params = quantize_params(params, ecfg.weight_bits,
-                                          group=ecfg.weight_group)
-        B, S = ecfg.max_batch, ecfg.kv_len
-        self.cache = T.init_cache(cfg, B, S, dtype=jnp.bfloat16,
-                                  kv_bits=ecfg.kv_bits)
-        self.slot_req: list[Optional[Request]] = [None] * B
+
+        # the three layers: policy / device programs / slot lifecycle
+        self.scheduler: Scheduler = scheduler if scheduler is not None \
+            else FifoScheduler()
+        self.executor = Executor(cfg, params, ecfg, mesh=mesh)
+        self.pool = SlotPool(cfg, ecfg, shard_ctx=self.executor.shard_ctx)
+
         # indexed FIFO admission queue: popleft is O(1) however deep the
-        # backlog (the old list.pop(0) rescan was O(n) per admission)
+        # backlog; the scheduler picks *which* entry leaves it
         self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
         self.failed: list[Request] = []      # terminal failures (deadline /
         #                                      anomaly / max_iters)
         self.rejected: list[Request] = []    # shed at submit (retriable)
-        self._slot_anomalies = [0] * B       # consecutive non-finite-logit
-        #                                      steps per slot (quarantine)
         self._uid = 0
 
-        # host-transfer / prefill accounting (benchmarks/perf_serving.py)
-        self.host_transfers = 0
-        self.host_bytes = 0
+        # prefill / schedule accounting (benchmarks/perf_serving.py)
         self.decode_steps = 0
         self.prefill_tokens = 0           # prompt tokens pushed through prefill
         self.prefill_time = 0.0           # host wall time spent in admission
@@ -214,6 +220,7 @@ class ServingEngine:
         self.active_slot_hist: collections.Counter = collections.Counter()
 
         # packed-stream / chunk budget (also the padding quantum)
+        S = ecfg.kv_len
         self._chunk = min(ecfg.prefill_chunk or min(128, S), S)
 
         # pow2-bucketing (sequential baseline) is exact only when cache
@@ -230,268 +237,107 @@ class ServingEngine:
                           and not cfg.n_experts
                           and not cfg.cross_attn_decoder
                           and not cfg.n_encoder_layers)
-        # slot → (next_prompt_pos, budget) for mid-prefill long prompts
-        self._prefilling: dict[int, tuple[int, int]] = {}
 
-        # optional decode-mode sharding plan for the slot pool
-        self._plan = None
-        self._prefill_plan = None
-        if mesh is not None:
-            from repro.parallel.sharding import (
-                cache_shardings, serving_decode_plan, serving_prefill_plan)
-            self._plan, ctx = serving_decode_plan(cfg, mesh, max_batch=B,
-                                                  kv_len=S)
-            self._prefill_plan, _ = serving_prefill_plan(
-                cfg, mesh, prefill_chunk=self._chunk)
-            shardings = cache_shardings(
-                jax.eval_shape(lambda: self.cache), ctx)
-            self.cache = jax.device_put(self.cache, shardings)
-
-        # -- fused path: device-resident per-slot state ----------------------
-        self._state = {
-            "tokens": jnp.zeros((B,), jnp.int32),
-            "pos": jnp.zeros((B,), jnp.int32),
-            "budget": jnp.zeros((B,), jnp.int32),
-            "live": jnp.zeros((B,), bool),
-            "key": jax.random.PRNGKey(ecfg.seed),
-        }
-        self._jit_step = jax.jit(self._fused_step_fn, donate_argnums=(1, 2))
-        self._jit_prefill_insert = jax.jit(self._prefill_insert_fn,
-                                           donate_argnums=(1, 2))
-        self._jit_packed_prefill = jax.jit(self._packed_prefill_fn,
-                                           donate_argnums=(1, 2))
-        self._jit_chunk_step = jax.jit(self._chunk_step_fn,
-                                       donate_argnums=(1, 2))
-
-        # -- seed-compat path (fused=False) ----------------------------------
+        # seed-compat sampling key (fused=False host path)
         self._key = jax.random.PRNGKey(ecfg.seed)
-        self._jit_decode = jax.jit(self._decode_fn)
-        self._jit_prefill = jax.jit(self._prefill_fn)
-        self._jit_insert = jax.jit(self._insert_fn, donate_argnums=(0,))
+
+    # -- layer delegation (stable public/test surface) -------------------------
+    @property
+    def params(self):
+        return self.executor.params
+
+    @property
+    def cache(self):
+        return self.pool.cache
+
+    @cache.setter
+    def cache(self, value):
+        self.pool.cache = value
+
+    @property
+    def _state(self):
+        return self.pool.state
+
+    @_state.setter
+    def _state(self, value):
+        self.pool.state = value
+
+    @property
+    def slot_req(self):
+        return self.pool.slot_req
+
+    @slot_req.setter
+    def slot_req(self, value):
+        self.pool.slot_req = list(value)
+
+    @property
+    def _prefilling(self):
+        return self.pool.prefilling
+
+    @_prefilling.setter
+    def _prefilling(self, value):
+        self.pool.prefilling = dict(value)
+
+    @property
+    def _slot_anomalies(self):
+        return self.pool.anomalies
+
+    @_slot_anomalies.setter
+    def _slot_anomalies(self, value):
+        self.pool.anomalies = list(value)
+
+    @property
+    def host_transfers(self):
+        return self.executor.host_transfers
+
+    @host_transfers.setter
+    def host_transfers(self, value):
+        self.executor.host_transfers = value
+
+    @property
+    def host_bytes(self):
+        return self.executor.host_bytes
+
+    @host_bytes.setter
+    def host_bytes(self, value):
+        self.executor.host_bytes = value
+
+    # compiled-program handles (compile-count regression tests)
+    @property
+    def _jit_step(self):
+        return self.executor.jit_step
+
+    @property
+    def _jit_prefill_insert(self):
+        return self.executor.jit_prefill_insert
+
+    @property
+    def _jit_packed_prefill(self):
+        return self.executor.jit_packed_prefill
+
+    @property
+    def _jit_chunk_step(self):
+        return self.executor.jit_chunk_step
 
     def _now(self) -> float:
         """Engine time (``EngineConfig.clock`` — monotonic seconds)."""
         return self.ecfg.clock()
 
-    # -- device→host choke point ---------------------------------------------
     def _fetch(self, x) -> np.ndarray:
-        """The engine's single device→host transfer point (explicit, so
-        tests can fence everything else with a d2h transfer guard)."""
-        arr = jax.device_get(x)
-        arr = np.asarray(arr)
-        self.host_transfers += 1
-        self.host_bytes += arr.nbytes
-        return arr
-
-    # -- jitted cores: fused path ---------------------------------------------
-    def _sample_dev(self, logits, key):
-        if self.ecfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), key
-        key, sub = jax.random.split(key)
-        nxt = jax.random.categorical(sub, logits / self.ecfg.temperature,
-                                     axis=-1)
-        return nxt.astype(jnp.int32), key
-
-    def _fused_step_fn(self, params, cache, state):
-        """decode → sample → bookkeeping, all on device.  Runs
-        ``decode_chunk`` iterations (lax.scan for >1) and returns the new
-        (cache, state) plus a packed (K, 3, B) int32 of (next_token | -1,
-        done, anomaly) — the only array the host reads back per step.
-
-        A slot whose logits come back non-finite is *frozen*: no token
-        committed, pos/budget untouched, still live — the identical step
-        re-runs next iteration (the KV write at the same pos is
-        idempotent), so a transient fault costs one retry and a persistent
-        one is quarantined by the host without touching the other slots
-        (decode is batch-parallel, no cross-slot mixing).  With finite
-        logits ``ok == live`` and every value below reduces to the
-        anomaly-free step bit-identically."""
-        def one(carry, _):
-            cache, state = carry
-            live = state["live"]
-            # dead / mid-prefill slots write at pos -1 → dropped, so a
-            # half-prefilled row is never corrupted by the decode sweep
-            pos_w = jnp.where(live, state["pos"], -1)
-            logits, cache = T.decode_step(params, self.cfg, cache,
-                                          state["tokens"], pos_w,
-                                          impl=self.ecfg.impl)
-            nxt, key = self._sample_dev(logits, state["key"])
-            bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
-            ok = live & ~bad
-            pos_new = jnp.where(ok, state["pos"] + 1, state["pos"])
-            budget_new = jnp.where(ok, state["budget"] - 1, state["budget"])
-            done = (budget_new <= 0) | (pos_new >= self.ecfg.kv_len)
-            if self.ecfg.eos_token >= 0:
-                done = done | (nxt == self.ecfg.eos_token)
-            done = ok & done
-            packed = jnp.stack([jnp.where(ok, nxt, -1),
-                                done.astype(jnp.int32),
-                                (live & bad).astype(jnp.int32)])
-            state = {
-                "tokens": jnp.where(ok, nxt, state["tokens"]),
-                "pos": pos_new,
-                "budget": budget_new,
-                "live": live & ~done,
-                "key": key,
-            }
-            return (cache, state), packed
-
-        with activate_plan(self._plan):
-            chunk = max(1, self.ecfg.decode_chunk)
-            if chunk == 1:
-                (cache, state), packed = one((cache, state), None)
-                packed = packed[None]
-            else:
-                (cache, state), packed = jax.lax.scan(
-                    one, (cache, state), None, length=chunk)
-        return cache, state, packed
-
-    def _prefill_insert_fn(self, params, cache, state, tokens, slot, length,
-                           budget):
-        """prompt forward pass → first-token sample → slot insert → state
-        update, one jitted cache-donated call per admission (sequential
-        baseline + non-packable architectures)."""
-        with activate_plan(self._plan):
-            logits, pcache = T.prefill(params, self.cfg, {"tokens": tokens},
-                                       impl=self.ecfg.impl,
-                                       kv_cap=self.ecfg.kv_len, length=length,
-                                       kv_bits=self.ecfg.kv_bits)
-            nxt, key = self._sample_dev(logits, state["key"])
-            tok = nxt[0]
-            cache = self._insert_fn(cache, pcache, slot, length)
-            state = {
-                "tokens": state["tokens"].at[slot].set(tok),
-                "pos": state["pos"].at[slot].set(length),
-                "budget": state["budget"].at[slot].set(budget - 1),
-                "live": state["live"].at[slot].set(budget > 1),
-                "key": key,
-            }
-        return cache, state, tok
-
-    def _insert_fn(self, cache, pcache, slot, length):
-        """Insert a batch-1 prefill cache into slot ``slot`` of the pool
-        with one ``dynamic_update_slice`` per leaf (batch axis is axis 1 of
-        every stacked leaf).  ``pos`` entries at cache indices >= ``length``
-        are invalidated so right-padding never leaves attendable entries
-        (exact-length prefill makes it a no-op; ring caches only hold
-        positions < length)."""
-        def ins(path, pool, one):
-            one = one.astype(pool.dtype)
-            if str(getattr(path[-1], "key", "")) == "pos":
-                idx = jnp.arange(one.shape[-1], dtype=jnp.int32)
-                one = jnp.where(idx[None, None, :] < length, one, -1)
-            start = (0, slot) + (0,) * (one.ndim - 2)
-            return jax.lax.dynamic_update_slice(pool, one, start)
-
-        return jax.tree_util.tree_map_with_path(ins, cache, pcache)
-
-    def _packed_prefill_fn(self, params, cache, state, tokens, positions,
-                           seg, gather_idx, seg_off, seg_len, final, budget,
-                           active):
-        """One ragged prefill for every admitted segment: packed forward
-        pass (segment-masked attention) → per-segment first-token sample →
-        one multi-slot scatter insert → state update.  Segment id == target
-        slot index; ``active`` masks unused slots, ``final`` the segments
-        whose prompt completed in this stream (non-final = first chunk of a
-        long prompt, which only inserts KV)."""
-        with activate_plan(self._prefill_plan):
-            logits, pcache = T.prefill_packed(
-                params, self.cfg, tokens, positions, seg, gather_idx,
-                impl=self.ecfg.impl, kv_bits=self.ecfg.kv_bits)
-        with activate_plan(self._plan):
-            nxt, key = self._sample_dev(logits, state["key"])
-            cache = self._packed_insert(cache, pcache["stack"], seg,
-                                        positions, seg_len, active)
-            fin = active & final
-            state = {
-                "tokens": jnp.where(fin, nxt, state["tokens"]),
-                "pos": jnp.where(fin, seg_len, state["pos"]),
-                "budget": jnp.where(fin, budget - 1, state["budget"]),
-                "live": jnp.where(fin, budget > 1, state["live"]),
-                "key": key,
-            }
-        return cache, state, jnp.where(fin, nxt, -1)
-
-    def _packed_insert(self, cache, pstack, seg, positions, seg_len, active):
-        """Scatter each packed segment into its KV slot — one scatter per
-        cache leaf for the whole admission burst (replaces the per-request
-        ``dynamic_update_slice`` loop).  Validity is governed entirely by
-        the ``pos`` leaves, so those rows are rebuilt per slot (ring slot
-        ``s`` of a cap-``c`` cache holds position ``p ≡ s (mod c)``,
-        ``p ∈ [len-c, len)`` — identity layout for global caches), while
-        k/v/latent leaves scatter the C packed tokens straight to their
-        (slot, ring index) targets — O(C) work, independent of pool size."""
-        B = self.ecfg.max_batch
-        tgt = jnp.where(active, jnp.arange(B), B)       # B = dropped
-        seg1 = seg[0]                                    # (C,) slot id, -1 pad
-        pos1 = positions[0]                              # (C,) within-seg pos
-
-        from repro.models.attention import ring_positions
-
-        def ins(path, pool, packed):
-            cap = pool.shape[2]
-            if str(getattr(path[-1], "key", "")) == "pos":
-                p = ring_positions(seg_len[:, None], cap)   # (B, cap)
-                valid = (p >= 0) & active[:, None]
-                rows = jnp.broadcast_to(
-                    jnp.where(valid, p, -1)[None], (pool.shape[0], B, cap))
-                return pool.at[:, tgt].set(rows, mode="drop")
-            # only the last `cap` tokens of a segment survive its ring —
-            # dropping the rest keeps scatter targets unique
-            keep = (seg1 >= 0) & (pos1 >= jnp.take(seg_len, jnp.clip(seg1, 0),
-                                                   mode="clip") - cap)
-            row = jnp.where(keep, seg1, B)
-            ring = jnp.where(keep, pos1 % cap, cap)
-            return pool.at[:, row, ring].set(
-                packed[:, 0].astype(pool.dtype), mode="drop")
-
-        new_stack = [jax.tree_util.tree_map_with_path(ins, pool, packed)
-                     for pool, packed in zip(cache["stack"], pstack)]
-        return {"stack": new_stack}
-
-    def _chunk_step_fn(self, params, cache, state, tokens, pos, take_idx,
-                       final, budget):
-        """One chunked-prefill continuation over the pool: write each
-        prefilling row's next chunk into its cache at explicit positions,
-        attend to the whole cache, and activate rows whose prompt completed
-        (sample their first token)."""
-        with activate_plan(self._plan):
-            logits, cache = T.chunk_prefill_step(
-                params, self.cfg, cache, tokens, pos, take_idx,
-                impl=self.ecfg.impl)
-            nxt, key = self._sample_dev(logits, state["key"])
-            pos_end = jnp.max(jnp.where(pos >= 0, pos + 1, 0), axis=1)
-            state = {
-                "tokens": jnp.where(final, nxt, state["tokens"]),
-                "pos": jnp.where(final, pos_end, state["pos"]),
-                "budget": jnp.where(final, budget - 1, state["budget"]),
-                "live": jnp.where(final, budget > 1, state["live"]),
-                "key": key,
-            }
-        return cache, state, jnp.where(final, nxt, -1)
-
-    # -- jitted cores: seed-compat path ---------------------------------------
-    def _decode_fn(self, params, cache, tokens, pos):
-        logits, cache = T.decode_step(params, self.cfg, cache, tokens, pos,
-                                      impl=self.ecfg.impl)
-        return logits, cache
-
-    def _prefill_fn(self, params, tokens, length):
-        # single-request prefill padded to a bucketed length (static shape)
-        logits, cache = T.prefill(params, self.cfg, {"tokens": tokens},
-                                  impl=self.ecfg.impl, kv_cap=self.ecfg.kv_len,
-                                  length=length, kv_bits=self.ecfg.kv_bits)
-        return logits, cache
+        return self.executor.fetch(x)
 
     # -- public API -------------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: Optional[int] = None) -> Request:
+    def submit(self, prompt: np.ndarray, max_new_tokens: Optional[int] = None,
+               *, priority: int = 0) -> Request:
         """Validate and enqueue one request.
 
         Malformed inputs (empty / over-long prompts, non-integer dtype,
         wrong ndim, negative budget) raise ``ValueError`` here — at submit
         time, not deep inside a jitted step.  When the bounded queue
         (``EngineConfig.max_queue``) is full the request is shed: returned
-        with the retriable ``REJECTED`` status instead of enqueued."""
+        with the retriable ``REJECTED`` status instead of enqueued.
+        ``priority`` is the scheduling class (larger = more urgent) an
+        SLO-aware scheduler orders by; the default FIFO ignores it."""
         arr = np.asarray(prompt)
         if arr.ndim != 1:
             raise ValueError(f"prompt must be 1-D, got ndim={arr.ndim}")
@@ -509,7 +355,8 @@ class ServingEngine:
                 f"max_new_tokens must be >= 0, got {max_new_tokens}")
         now = self._now()
         req = Request(uid=self._uid, prompt=arr.astype(np.int32),
-                      max_new_tokens=max_new_tokens, t_enqueue=now)
+                      max_new_tokens=max_new_tokens, priority=int(priority),
+                      t_enqueue=now)
         if self.ecfg.deadline_ms > 0:
             req.deadline = now + self.ecfg.deadline_ms / 1e3
         self._uid += 1
@@ -522,9 +369,9 @@ class ServingEngine:
         return req
 
     def step(self) -> int:
-        """One engine iteration: deadline eviction + admission (packed
-        prefill) + chunked prefill continuation + one decode step over the
-        slot pool.  Returns the number of occupied slots."""
+        """One engine iteration: deadline eviction + (scheduler-gated)
+        admission + chunked prefill continuation + one decode step over
+        the slot pool.  Returns the number of occupied slots."""
         if self.ecfg.deadline_ms > 0:
             self._evict_expired()
         if self.ecfg.fused:
@@ -537,17 +384,6 @@ class ServingEngine:
         req.status = status
         req.t_done = now if now is not None else self._now()
         self.failed.append(req)
-
-    def _kill_slot(self, i: int):
-        """Free slot ``i`` and silence its device row so the decode sweep
-        never advances a dead request again."""
-        self.slot_req[i] = None
-        self._prefilling.pop(i, None)
-        self._slot_anomalies[i] = 0
-        if self.ecfg.fused:
-            self._state["live"] = self._state["live"].at[i].set(False)
-        elif hasattr(self, "_slot_pos"):
-            self._slot_budget[i] = 0
 
     def _evict_expired(self):
         """Fail every queued or in-flight request past its deadline —
@@ -562,26 +398,71 @@ class ServingEngine:
                 else:
                     kept.append(req)
             self.queue = kept
-        for i, req in enumerate(self.slot_req):
+        for i, req in enumerate(self.pool.slot_req):
             if req is not None and now > req.deadline:
                 self._fail(req, FAILED_DEADLINE, now)
-                self._kill_slot(i)
+                self.pool.kill(i)
 
+    # -- scheduler seams -------------------------------------------------------
+    def _prefill_allowed(self) -> bool:
+        """Ask the scheduler whether prefill (admission + chunk
+        continuation) may preempt decode this iteration.  Only consulted
+        when there is both prefill work to run and decode work to stall —
+        an idle pool is never gated, so no policy can deadlock the
+        drain."""
+        if not (self.queue or self.pool.prefilling):
+            return True
+        decoding = self.pool.decoding()
+        if not decoding:
+            return True
+        return self.scheduler.allow_prefill(decoding, self._now())
+
+    def _pop_admissible(self) -> Optional[tuple]:
+        """Pop the scheduler's next admissible queued request.  Requests
+        asking for 0 tokens finish immediately; over-long prompts raise."""
+        while self.queue:
+            idx = self.scheduler.select(self.queue, self._now())
+            if idx is None:
+                return None
+            req = self.queue[idx]
+            del self.queue[idx]
+            # a request may ask for fewer tokens than the engine default —
+            # including 0 (`or` would silently swap in the default)
+            budget = req.max_new_tokens if req.max_new_tokens is not None \
+                else self.ecfg.max_new_tokens
+            if budget <= 0:
+                req.done = True
+                req.status = DONE
+                req.t_admit = req.t_first_token = req.t_done = self._now()
+                self.finished.append(req)
+                continue
+            plen = len(req.prompt)
+            if plen + 1 >= self.ecfg.kv_len:
+                raise ValueError(f"prompt ({plen}) ≥ kv_len ({self.ecfg.kv_len})")
+            return req, plen, budget
+        return None
+
+    # -- iteration loop --------------------------------------------------------
     def _step_fused(self) -> int:
         t0 = time.perf_counter()
-        if self.ecfg.packed:
-            self._admit_packed()
-        else:
-            self._admit_fused()
-        self.prefill_time += time.perf_counter() - t0
-        occupied = sum(r is not None for r in self.slot_req)
-        if occupied == len(self._prefilling):
+        calls0 = self.prefill_calls
+        if self._prefill_allowed():
+            if self.ecfg.packed:
+                self._admit_packed()
+            else:
+                self._admit_fused()
+        dt = time.perf_counter() - t0
+        self.prefill_time += dt
+        if self.prefill_calls > calls0:
+            self.scheduler.observe_prefill(dt)
+        occupied = self.pool.occupied()
+        if occupied == len(self.pool.prefilling):
             # no live slot: nothing to decode (and nothing being stalled —
             # mid-prefill-only iterations just advance their chunks)
             self._stall_tokens = 0
             return occupied
-        self.cache, self._state, packed = self._jit_step(
-            self.params, self.cache, self._state)
+        self.pool.cache, self.pool.state, packed = self.executor.fused_step(
+            self.pool.cache, self.pool.state)
         arr = self._fetch(packed)                 # ONE d2h transfer
         self.decode_steps += arr.shape[0]
         self.max_stall_tokens = max(self.max_stall_tokens, self._stall_tokens)
@@ -592,22 +473,22 @@ class ServingEngine:
             # device work — recording them keeps Σhist == decode_steps and
             # lets the occupancy mean discount the dead tail of a chunk
             self.active_slot_hist[int((arr[it, 0] >= 0).sum())] += 1
-            for i, req in enumerate(self.slot_req):
-                if req is None or i in self._prefilling:
+            for i, req in enumerate(self.pool.slot_req):
+                if req is None or i in self.pool.prefilling:
                     continue
                 if arr[it, 2, i]:                 # non-finite logits: the
                     # device froze the slot (no token, no pos advance) and
                     # will retry the identical step; quarantine after the
                     # configured retries — only this request fails, the
                     # rest of the batch keeps decoding
-                    self._slot_anomalies[i] += 1
-                    if self._slot_anomalies[i] > self.ecfg.anomaly_retries:
+                    self.pool.anomalies[i] += 1
+                    if self.pool.anomalies[i] > self.ecfg.anomaly_retries:
                         self._fail(req, FAILED_ANOMALY, now)
-                        self._kill_slot(i)
+                        self.pool.kill(i)
                     continue
                 if arr[it, 0, i] < 0:
                     continue
-                self._slot_anomalies[i] = 0       # clean step: retry budget
+                self.pool.anomalies[i] = 0        # clean step: retry budget
                 #                                   resets (transient fault)
                 tok = int(arr[it, 0, i])
                 if not req.output:
@@ -618,45 +499,51 @@ class ServingEngine:
                     req.status = DONE
                     req.t_done = now
                     self.finished.append(req)
-                    self.slot_req[i] = None  # slot freed → continuous batching
-        return sum(r is not None for r in self.slot_req)
+                    self.pool.release(i)     # slot freed → continuous batching
+        return self.pool.occupied()
 
     def _step_host(self) -> int:
         """Original per-token host round-trip step (measurement baseline)."""
         t0 = time.perf_counter()
-        self._admit_host()
-        self.prefill_time += time.perf_counter() - t0
-        live = [i for i, r in enumerate(self.slot_req) if r is not None]
+        calls0 = self.prefill_calls
+        if self._prefill_allowed():
+            self._admit_host()
+        dt = time.perf_counter() - t0
+        self.prefill_time += dt
+        if self.prefill_calls > calls0:
+            self.scheduler.observe_prefill(dt)
+        live = [i for i, r in enumerate(self.pool.slot_req) if r is not None]
         if not live:
             return 0
+        host = self.pool.ensure_host()
         self.active_slot_hist[len(live)] += 1
-        tokens = jnp.asarray(self._last_token)
-        pos = jnp.asarray(self._slot_pos)
-        logits, self.cache = self._jit_decode(self.params, self.cache,
-                                              tokens, pos)
+        tokens = jnp.asarray(host["last_token"])
+        pos = jnp.asarray(host["slot_pos"])
+        logits, self.pool.cache = self.executor.decode(self.pool.cache,
+                                                       tokens, pos)
         self.decode_steps += 1
         self.max_stall_tokens = max(self.max_stall_tokens, self._stall_tokens)
         self._stall_tokens = 0
-        nxt = self._sample(logits)
+        nxt, self._key = self.executor.sample_host(logits, self._key)
         now = self._now()
         for i in live:
-            req = self.slot_req[i]
+            req = self.pool.slot_req[i]
             tok = int(nxt[i])
             if not req.output:
                 req.t_first_token = now
             req.output.append(tok)
-            self._last_token[i] = tok
-            self._slot_pos[i] += 1
-            self._slot_budget[i] -= 1
+            host["last_token"][i] = tok
+            host["slot_pos"][i] += 1
+            host["slot_budget"][i] -= 1
             hit_eos = (self.ecfg.eos_token >= 0 and tok == self.ecfg.eos_token)
-            if self._slot_budget[i] <= 0 or hit_eos or \
-                    self._slot_pos[i] >= self.ecfg.kv_len:
+            if host["slot_budget"][i] <= 0 or hit_eos or \
+                    host["slot_pos"][i] >= self.ecfg.kv_len:
                 req.done = True
                 req.status = DONE
                 req.t_done = now
                 self.finished.append(req)
-                self.slot_req[i] = None      # slot freed → continuous batching
-        return sum(r is not None for r in self.slot_req)
+                self.pool.release(i)     # slot freed → continuous batching
+        return self.pool.occupied()
 
     def run_until_drained(self, max_iters: int = 10_000) -> list[Request]:
         """Step until every request reaches a terminal state.
@@ -666,20 +553,20 @@ class ServingEngine:
         ``FAILED_MAX_ITERS`` (terminal, listed in ``self.failed``) and
         ``EngineStallError`` is raised."""
         it = 0
-        while (self.queue or any(r is not None for r in self.slot_req)):
+        while (self.queue or any(r is not None for r in self.pool.slot_req)):
             self.step()
             it += 1
             if it > max_iters:
                 now = self._now()
-                stranded = list(self.queue) + [r for r in self.slot_req
+                stranded = list(self.queue) + [r for r in self.pool.slot_req
                                                if r is not None]
                 for req in self.queue:
                     self._fail(req, FAILED_MAX_ITERS, now)
                 self.queue.clear()
-                for i, req in enumerate(self.slot_req):
+                for i, req in enumerate(self.pool.slot_req):
                     if req is not None:
                         self._fail(req, FAILED_MAX_ITERS, now)
-                        self._kill_slot(i)
+                        self.pool.kill(i)
                 raise EngineStallError(
                     f"engine did not drain in {max_iters} iterations; "
                     f"{len(stranded)} request(s) marked "
@@ -687,27 +574,6 @@ class ServingEngine:
         return self.finished
 
     # -- admission: packed ragged prefill + chunked continuation ---------------
-    def _pop_admissible(self) -> Optional[tuple]:
-        """Pop the next admissible queued request (FIFO).  Requests asking
-        for 0 tokens finish immediately; over-long prompts raise."""
-        while self.queue:
-            req = self.queue.popleft()
-            # a request may ask for fewer tokens than the engine default —
-            # including 0 (`or` would silently swap in the default)
-            budget = req.max_new_tokens if req.max_new_tokens is not None \
-                else self.ecfg.max_new_tokens
-            if budget <= 0:
-                req.done = True
-                req.status = DONE
-                req.t_first_token = req.t_done = self._now()
-                self.finished.append(req)
-                continue
-            plen = len(req.prompt)
-            if plen + 1 >= self.ecfg.kv_len:
-                raise ValueError(f"prompt ({plen}) ≥ kv_len ({self.ecfg.kv_len})")
-            return req, plen, budget
-        return None
-
     def _pad_len(self, plen: int) -> int:
         """Smallest chunk multiple >= plen (capped at kv_len) — the static
         shape set for per-request prefill."""
@@ -716,9 +582,9 @@ class ServingEngine:
 
     def _admit_packed(self):
         B, C = self.ecfg.max_batch, self._chunk
-        if self._prefilling:
+        if self.pool.prefilling:
             self._continue_chunks()
-        free = [i for i in range(B) if self.slot_req[i] is None]
+        free = self.pool.free_slots()
         if not free or not self.queue:
             return
         if not self._packable:
@@ -762,7 +628,10 @@ class ServingEngine:
         fin_v = np.zeros((B,), bool)
         bud_v = np.ones((B,), np.int32)
         act_v = np.zeros((B,), bool)
+        t_adm = self._now()               # left the queue: scheduling delay
+        #                                   ends here, service time begins
         for req, slot, off, take, final, budget in segs:
+            req.t_admit = t_adm
             toks[0, off:off + take] = req.prompt[:take]
             seg[0, off:off + take] = slot
             pos[0, off:off + take] = np.arange(take)
@@ -770,8 +639,8 @@ class ServingEngine:
             off_v[slot], len_v[slot] = off, take
             fin_v[slot], bud_v[slot], act_v[slot] = final, budget, True
 
-        self.cache, self._state, first = self._jit_packed_prefill(
-            self.params, self.cache, self._state, jnp.asarray(toks),
+        self.pool.cache, self.pool.state, first = self.executor.packed_prefill(
+            self.pool.cache, self.pool.state, jnp.asarray(toks),
             jnp.asarray(pos), jnp.asarray(seg), jnp.asarray(gather),
             jnp.asarray(off_v), jnp.asarray(len_v), jnp.asarray(fin_v),
             jnp.asarray(bud_v), jnp.asarray(act_v))
@@ -792,11 +661,11 @@ class ServingEngine:
                     self.finished.append(req)
                     continue
                 req.status = ACTIVE
-                self.slot_req[slot] = req
+                self.pool.slot_req[slot] = req
             else:                   # long prompt: first chunk only
                 req.status = ACTIVE
-                self.slot_req[slot] = req
-                self._prefilling[slot] = (take, budget)
+                self.pool.slot_req[slot] = req
+                self.pool.prefilling[slot] = (take, budget)
 
     def _continue_chunks(self):
         """Advance every mid-prefill slot by one <= C-token chunk (one
@@ -808,8 +677,8 @@ class ServingEngine:
         fin_v = np.zeros((B,), bool)
         bud_v = np.ones((B,), np.int32)
         plan = []                                  # (slot, start, c, budget)
-        for slot, (start, budget) in self._prefilling.items():
-            req = self.slot_req[slot]
+        for slot, (start, budget) in self.pool.prefilling.items():
+            req = self.pool.slot_req[slot]
             plen = len(req.prompt)
             c = min(plen - start, C)
             toks[slot, :c] = req.prompt[start:start + c]
@@ -819,8 +688,8 @@ class ServingEngine:
             bud_v[slot] = budget
             plan.append((slot, start, c, budget))
 
-        self.cache, self._state, first = self._jit_chunk_step(
-            self.params, self.cache, self._state, jnp.asarray(toks),
+        self.pool.cache, self.pool.state, first = self.executor.chunk_step(
+            self.pool.cache, self.pool.state, jnp.asarray(toks),
             jnp.asarray(pos), jnp.asarray(take_idx), jnp.asarray(fin_v),
             jnp.asarray(bud_v))
         arr = self._fetch(first)
@@ -830,9 +699,9 @@ class ServingEngine:
         self._stall_tokens += C                    # one batched chunk call
         now = self._now()
         for slot, start, c, budget in plan:
-            req = self.slot_req[slot]
+            req = self.pool.slot_req[slot]
             if start + c == len(req.prompt):       # prompt complete
-                del self._prefilling[slot]
+                del self.pool.prefilling[slot]
                 tok = int(arr[slot])
                 req.output = [tok]
                 req.t_first_token = now
@@ -841,17 +710,18 @@ class ServingEngine:
                     req.status = DONE
                     req.t_done = now
                     self.finished.append(req)
-                    self.slot_req[slot] = None
+                    self.pool.release(slot)
             else:
-                self._prefilling[slot] = (start + c, budget)
+                self.pool.prefilling[slot] = (start + c, budget)
 
     def _admit_one(self, req, slot: int, plen: int, budget: int, pad: int):
         """One right-padded batch-1 prefill+insert call and its bookkeeping
         (shared by the chunk-padded and pow2-bucketed sequential paths)."""
+        req.t_admit = self._now()
         toks = np.zeros((1, pad), np.int32)
         toks[0, :plen] = req.prompt
-        self.cache, self._state, first = self._jit_prefill_insert(
-            self.params, self.cache, self._state, jnp.asarray(toks),
+        self.pool.cache, self.pool.state, first = self.executor.prefill_insert(
+            self.pool.cache, self.pool.state, jnp.asarray(toks),
             jnp.int32(slot), jnp.int32(plen), jnp.int32(budget))
         tok = int(self._fetch(first))
         self.prefill_tokens += plen
@@ -866,7 +736,7 @@ class ServingEngine:
             self.finished.append(req)
         else:
             req.status = ACTIVE
-            self.slot_req[slot] = req
+            self.pool.slot_req[slot] = req
 
     def _admit_padded(self, free):
         """Per-request admission for non-packable architectures: prompts
@@ -884,7 +754,7 @@ class ServingEngine:
     def _next_request(self, slot: int) -> Optional[tuple]:
         """Pop the next admissible queued request and its padded prompt, or
         None (sequential baseline paths)."""
-        if self.slot_req[slot] is not None:
+        if self.pool.slot_req[slot] is not None:
             return None
         nxt = self._pop_admissible()
         if nxt is None:
@@ -904,21 +774,18 @@ class ServingEngine:
             self._admit_one(req, slot, plen, budget, toks.shape[1])
 
     def _admit_host(self):
-        if not hasattr(self, "_slot_pos"):
-            B = self.ecfg.max_batch
-            self._slot_pos = np.zeros(B, np.int32)
-            self._slot_budget = np.zeros(B, np.int32)
-            self._last_token = np.zeros(B, np.int32)
+        host = self.pool.ensure_host()
         for slot in range(self.ecfg.max_batch):
             nxt = self._next_request(slot)
             if nxt is None:
                 continue
             req, toks, plen, budget = nxt
-            logits, pcache = self._jit_prefill(
-                self.params, jnp.asarray(toks), jnp.int32(plen))
-            self.cache = self._jit_insert(self.cache, pcache, jnp.int32(slot),
-                                          jnp.int32(plen))
-            first = self._sample(logits)
+            req.t_admit = self._now()
+            logits, pcache = self.executor.prefill(jnp.asarray(toks),
+                                                   jnp.int32(plen))
+            self.pool.cache = self.executor.insert(
+                self.pool.cache, pcache, jnp.int32(slot), jnp.int32(plen))
+            first, self._key = self.executor.sample_host(logits, self._key)
             self.prefill_tokens += plen
             self.prefill_calls += 1
             self._stall_tokens += toks.shape[1]
@@ -931,22 +798,16 @@ class ServingEngine:
                 self.finished.append(req)
                 continue
             req.status = ACTIVE
-            self.slot_req[slot] = req
-            self._slot_pos[slot] = plen
-            self._slot_budget[slot] = budget - 1
-            self._last_token[slot] = int(first[0])
-
-    def _sample(self, logits: jax.Array) -> np.ndarray:
-        if self.ecfg.temperature <= 0.0:
-            return self._fetch(jnp.argmax(logits, axis=-1))
-        self._key, sub = jax.random.split(self._key)
-        return self._fetch(jax.random.categorical(
-            sub, logits / self.ecfg.temperature, axis=-1))
+            self.pool.slot_req[slot] = req
+            host["slot_pos"][slot] = plen
+            host["slot_budget"][slot] = budget - 1
+            host["last_token"][slot] = int(first[0])
 
     # -- crash safety ---------------------------------------------------------
     @classmethod
     def restore(cls, cfg: ModelConfig, params, ckpt_dir: str, *,
                 ecfg: Optional[EngineConfig] = None, mesh=None,
+                scheduler: Optional[Scheduler] = None,
                 replay: bool = True) -> "ServingEngine":
         """Revive an engine from its newest intact snapshot in
         ``ckpt_dir`` (written by ``repro.serving.checkpoint``), resuming
@@ -955,7 +816,7 @@ class ServingEngine:
         :func:`repro.serving.checkpoint.restore_engine`."""
         from repro.serving.checkpoint import restore_engine
         return restore_engine(cfg, params, ckpt_dir, ecfg=ecfg, mesh=mesh,
-                              replay=replay)
+                              scheduler=scheduler, replay=replay)
 
     # -- stats ---------------------------------------------------------------
     def _failure_stats(self) -> dict:
@@ -981,6 +842,17 @@ class ServingEngine:
             return {"finished": 0, **self._failure_stats()}
         lat = [r.t_done - r.t_enqueue for r in done]
         ttft = [r.t_first_token - r.t_enqueue for r in done]
+        # per-token cadence after the first token (needs >= 2 tokens);
+        # queue wait is pure scheduling delay (enqueue → slot assignment),
+        # separable from prefill/decode service time.  t_admit may be
+        # unset (0.0) on requests restored from pre-layering snapshots.
+        tpot = [(r.t_done - r.t_first_token) / (len(r.output) - 1)
+                for r in done if len(r.output) > 1]
+        qwait = [r.t_admit - r.t_enqueue for r in done if r.t_admit > 0.0]
+        lat_p = _percentiles(lat)
+        ttft_p = _percentiles(ttft)
+        tpot_p = _percentiles(tpot)
+        qwait_p = _percentiles(qwait)
         toks = sum(len(r.output) for r in done)
         span = max(r.t_done for r in done) - min(r.t_enqueue for r in done)
         return {
@@ -989,6 +861,20 @@ class ServingEngine:
             "tokens_per_s": toks / max(span, 1e-9),
             "mean_latency_s": float(np.mean(lat)),
             "mean_ttft_s": float(np.mean(ttft)),
+            "mean_tpot_s": float(np.mean(tpot)) if tpot else 0.0,
+            "mean_queue_wait_s": float(np.mean(qwait)) if qwait else 0.0,
+            "latency_p50_s": lat_p[0],
+            "latency_p95_s": lat_p[1],
+            "latency_p99_s": lat_p[2],
+            "ttft_p50_s": ttft_p[0],
+            "ttft_p95_s": ttft_p[1],
+            "ttft_p99_s": ttft_p[2],
+            "tpot_p50_s": tpot_p[0],
+            "tpot_p95_s": tpot_p[1],
+            "tpot_p99_s": tpot_p[2],
+            "queue_wait_p50_s": qwait_p[0],
+            "queue_wait_p95_s": qwait_p[1],
+            "queue_wait_p99_s": qwait_p[2],
             "decode_steps": self.decode_steps,
             "host_transfers": self.host_transfers,
             "host_bytes": self.host_bytes,

@@ -1,0 +1,147 @@
+"""Slot-pool layer: the slotted (optionally quantised) KV cache, the
+per-slot decode state, and every piece of slot-lifecycle bookkeeping.
+
+One :class:`SlotPool` owns everything whose lifetime is "a slot":
+
+- the device KV cache built by ``models.transformer.init_cache`` —
+  bf16 rows, or int8 / packed-int4 code + f32 scale leaves under
+  ``kv_bits`` — sharded when a ``shard_ctx`` is provided
+  (``parallel.sharding.cache_shardings``);
+- the fused-path device state (last token, position, budget, liveness
+  per slot, plus the threaded PRNG key);
+- the lazily-created host-path arrays of the ``fused=False`` baseline;
+- host bookkeeping: which ``Request`` occupies each slot, chunked-
+  prefill progress (``prefilling``: slot → (next_prompt_pos, budget))
+  and the anomaly-quarantine counters.
+
+The engine allocates/frees slots through this object; the executor
+transforms ``(cache, state)`` and hands them back; the checkpoint plane
+serialises the pool through :meth:`array_tree` / :meth:`meta` and
+restores it through :meth:`load_array_tree` / :meth:`load_meta` — the
+engine's private fields are no longer part of the snapshot contract.
+The array-tree layout (``cache/...``, ``state/...``, ``host/...`` flat
+keys) is exactly the pre-layering snapshot format, so checkpoints
+written by the monolithic engine restore bit-exactly through this API
+(pinned by ``tests/test_serving_checkpoint.py``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import transformer as T
+
+
+class SlotPool:
+    def __init__(self, cfg: ModelConfig, ecfg, *, shard_ctx=None):
+        B, S = ecfg.max_batch, ecfg.kv_len
+        self.cfg, self.ecfg = cfg, ecfg
+        self.cache = T.init_cache(cfg, B, S, dtype=jnp.bfloat16,
+                                  kv_bits=ecfg.kv_bits)
+        if shard_ctx is not None:
+            from repro.parallel.sharding import cache_shardings
+            shardings = cache_shardings(
+                jax.eval_shape(lambda: self.cache), shard_ctx)
+            self.cache = jax.device_put(self.cache, shardings)
+
+        # fused-path device-resident per-slot state
+        self.state = {
+            "tokens": jnp.zeros((B,), jnp.int32),
+            "pos": jnp.zeros((B,), jnp.int32),
+            "budget": jnp.zeros((B,), jnp.int32),
+            "live": jnp.zeros((B,), bool),
+            "key": jax.random.PRNGKey(ecfg.seed),
+        }
+        # host bookkeeping: slot occupancy, chunked-prefill progress,
+        # anomaly-quarantine counters
+        self.slot_req: list = [None] * B
+        self.prefilling: dict[int, tuple[int, int]] = {}
+        self.anomalies: list[int] = [0] * B
+        # host-path (fused=False) arrays, created on first admission
+        self.host: Optional[dict[str, np.ndarray]] = None
+
+    # -- slot lifecycle ----------------------------------------------------
+    def free_slots(self) -> list[int]:
+        """Free slot indices, ascending (allocation order is index order —
+        the pre-layering engine's behaviour, kept for bit-identity)."""
+        return [i for i in range(self.ecfg.max_batch)
+                if self.slot_req[i] is None]
+
+    def occupied(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def decoding(self) -> list:
+        """Requests in slots that are actively decoding (occupied and not
+        mid-prefill) — the set a prefill burst would preempt."""
+        return [r for i, r in enumerate(self.slot_req)
+                if r is not None and i not in self.prefilling]
+
+    def ensure_host(self) -> dict[str, np.ndarray]:
+        if self.host is None:
+            B = self.ecfg.max_batch
+            self.host = {"slot_pos": np.zeros(B, np.int32),
+                         "slot_budget": np.zeros(B, np.int32),
+                         "last_token": np.zeros(B, np.int32)}
+        return self.host
+
+    def release(self, slot: int) -> None:
+        """Free a slot whose request finished (continuous batching)."""
+        self.slot_req[slot] = None
+
+    def kill(self, slot: int) -> None:
+        """Free slot ``slot`` and silence its device row so the decode
+        sweep never advances a dead request again."""
+        self.slot_req[slot] = None
+        self.prefilling.pop(slot, None)
+        self.anomalies[slot] = 0
+        if self.ecfg.fused:
+            self.state["live"] = self.state["live"].at[slot].set(False)
+        elif self.host is not None:
+            self.host["slot_budget"][slot] = 0
+
+    # -- serialization API (repro.serving.checkpoint) ----------------------
+    def array_tree(self) -> dict:
+        """Every array leaf of the pool, in the snapshot tree layout
+        (``cache``/``state`` and, once created, ``host``).  Leaves are
+        the live device arrays — callers copy (``np.asarray``) before
+        mutating or donating."""
+        tree: dict = {"cache": self.cache, "state": self.state}
+        if self.host is not None:
+            tree["host"] = dict(self.host)
+        return tree
+
+    def array_template(self, with_host: bool) -> dict:
+        """A structure-matching template for ``ckpt.unflatten_tree`` —
+        fresh zero host arrays when the snapshot carries them."""
+        tree: dict = {"cache": self.cache, "state": self.state}
+        if with_host:
+            B = self.ecfg.max_batch
+            tree["host"] = {"slot_pos": np.zeros(B, np.int32),
+                            "slot_budget": np.zeros(B, np.int32),
+                            "last_token": np.zeros(B, np.int32)}
+        return tree
+
+    def load_array_tree(self, tree: dict) -> None:
+        """Adopt restored leaves: device pytrees are re-placed on device,
+        host arrays stay host-side numpy."""
+        self.cache = jax.device_put(tree["cache"])
+        self.state = jax.device_put(tree["state"])
+        if "host" in tree:
+            self.host = {k: np.array(v) for k, v in tree["host"].items()}
+
+    def meta(self) -> dict:
+        """JSON-safe slot bookkeeping for the snapshot meta record."""
+        return {
+            "prefilling": [[int(s), int(start), int(budget)]
+                           for s, (start, budget) in self.prefilling.items()],
+            "slot_anomalies": list(self.anomalies),
+        }
+
+    def load_meta(self, prefilling, slot_anomalies) -> None:
+        self.prefilling = {int(s): (int(start), int(budget))
+                           for s, start, budget in prefilling}
+        self.anomalies = list(slot_anomalies)

@@ -1,0 +1,171 @@
+"""Admission + slot policy layer: who is admitted next, and whether
+prefill may preempt decode this iteration.
+
+This module is deliberately JAX-free: a scheduler sees only host-side
+request bookkeeping (uids, priorities, timestamps, token counts) and
+returns decisions, so policies are unit-testable against a fake executor
+(`tests/test_scheduler.py`) and swappable without touching device code.
+
+The engine consults its scheduler at exactly two seams:
+
+1. **selection** — ``select(queue, now)`` returns the *index* into the
+   admission queue of the next request to admit (``None`` = admit
+   nothing this iteration).  The engine pops that entry and runs its
+   admission mechanics (packing, padding, slot assignment) unchanged —
+   policy decides *who*, the engine decides *how*.
+2. **preemption gating** — ``allow_prefill(decoding, now)`` is asked
+   before any prefill work (packed admission or a chunked-prefill
+   continuation) when slots are actively decoding: prefill stalls every
+   decoding slot for roughly one chunk, so an SLO-aware policy may defer
+   it while decode slack is too thin.  The engine only asks when there
+   is both decode work to preempt and prefill work to run; it never
+   gates an idle pool (no deadlock by policy).
+
+``FifoScheduler`` reproduces the pre-layering engine bit-for-bit:
+selection is strict FIFO and prefill is always allowed.
+``SloScheduler`` adds priority classes with per-class TTFT/TPOT targets,
+least-slack-first ordering, aging (starvation-freeness), and slack-gated
+chunked-prefill preemption of decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Protocol, Sequence, runtime_checkable
+
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """The policy contract the engine drives (see module docstring).
+
+    ``queue`` entries and ``decoding`` entries are ``Request``-shaped:
+    the policy may read ``uid``, ``priority``, ``t_enqueue``,
+    ``t_first_token`` and ``output`` (emitted-token list) — nothing
+    else, and it must mutate nothing."""
+
+    def select(self, queue: Sequence, now: float) -> Optional[int]:
+        """Index into ``queue`` of the next request to admit, or None."""
+        ...
+
+    def allow_prefill(self, decoding: Sequence, now: float) -> bool:
+        """May prefill preempt the ``decoding`` slots this iteration?"""
+        ...
+
+    def observe_prefill(self, dt_s: float) -> None:
+        """Measured wall time of one admission/chunk burst (the stall a
+        preemption actually costs) — feeds the policy's cost estimate."""
+        ...
+
+
+class FifoScheduler:
+    """Strict FIFO admission, prefill always allowed — bit-identical to
+    the pre-layering monolithic engine under every workload."""
+
+    def select(self, queue: Sequence, now: float) -> Optional[int]:
+        return 0 if queue else None
+
+    def allow_prefill(self, decoding: Sequence, now: float) -> bool:
+        return True
+
+    def observe_prefill(self, dt_s: float) -> None:
+        pass
+
+
+@dataclasses.dataclass(frozen=True)
+class SloClass:
+    """Service targets for one priority class (seconds are derived from
+    the ms fields; ``inf`` = no target)."""
+    ttft_ms: float = math.inf     # queue + first-token deadline
+    tpot_ms: float = math.inf     # per-token cadence once decoding
+
+    @property
+    def ttft_s(self) -> float:
+        return self.ttft_ms / 1e3
+
+    @property
+    def tpot_s(self) -> float:
+        return self.tpot_ms / 1e3
+
+
+class SloScheduler:
+    """SLO-aware admission: priority classes, least-TTFT-slack-first
+    ordering, aging, and slack-gated prefill preemption of decode.
+
+    **Selection.**  Requests order by *effective priority* (the submitted
+    ``priority`` plus one level per ``aging_s`` seconds waited — a
+    starving low-priority request eventually outranks fresh high-priority
+    arrivals, so no class is starved forever), then by TTFT slack
+    (``t_enqueue + ttft_target - now``, most-overdue first), then by uid
+    (FIFO within a class).
+
+    **Preemption gating.**  A prefill burst stalls every decoding slot
+    for about one chunk; ``allow_prefill`` permits it only when the
+    tightest decoding slot can absorb the estimated stall without
+    missing its TPOT cadence: slot ``i``'s next token is due at
+    ``t_first_token + n_emitted x tpot_s`` and the stall estimate is an
+    EWMA of measured admission bursts (``observe_prefill``).  Decode
+    slack can stay negative under sustained overload, so after
+    ``max_defer`` consecutive deferrals prefill runs anyway — admission
+    is throttled, never starved.
+    """
+
+    def __init__(self, classes: Optional[dict[int, SloClass]] = None,
+                 *, default: SloClass = SloClass(), aging_s: float = 0.0,
+                 max_defer: int = 8, ewma: float = 0.5):
+        if max_defer < 1:
+            raise ValueError(f"max_defer must be >= 1, got {max_defer}")
+        if not 0.0 < ewma <= 1.0:
+            raise ValueError(f"ewma must be in (0, 1], got {ewma}")
+        self.classes = dict(classes or {})
+        self.default = default
+        self.aging_s = aging_s
+        self.max_defer = max_defer
+        self.ewma = ewma
+        self._stall_est_s = 0.0       # EWMA of measured admission bursts
+        self._defers = 0              # consecutive gated iterations
+
+    def class_of(self, priority: int) -> SloClass:
+        return self.classes.get(priority, self.default)
+
+    # -- selection ---------------------------------------------------------
+    def _rank(self, req, now: float):
+        wait = now - req.t_enqueue
+        eff = req.priority
+        if self.aging_s > 0 and wait > 0:
+            eff += int(wait / self.aging_s)
+        slack = req.t_enqueue + self.class_of(req.priority).ttft_s - now
+        return (-eff, slack, req.uid)
+
+    def select(self, queue: Sequence, now: float) -> Optional[int]:
+        if not queue:
+            return None
+        return min(range(len(queue)), key=lambda i: self._rank(queue[i], now))
+
+    # -- preemption gating -------------------------------------------------
+    def _decode_slack_s(self, decoding: Sequence, now: float) -> float:
+        """Seconds until the tightest decoding slot misses its TPOT
+        cadence (inf when no decoding slot carries a TPOT target)."""
+        slack = math.inf
+        for req in decoding:
+            tpot = self.class_of(req.priority).tpot_s
+            if math.isinf(tpot):
+                continue
+            due = req.t_first_token + len(req.output) * tpot
+            slack = min(slack, due - now)
+        return slack
+
+    def allow_prefill(self, decoding: Sequence, now: float) -> bool:
+        if self._decode_slack_s(decoding, now) >= self._stall_est_s:
+            self._defers = 0
+            return True
+        self._defers += 1
+        if self._defers >= self.max_defer:   # bounded deferral: admission
+            self._defers = 0                 # is throttled, never starved
+            return True
+        return False
+
+    def observe_prefill(self, dt_s: float) -> None:
+        if self._stall_est_s <= 0.0:
+            self._stall_est_s = dt_s
+        else:
+            self._stall_est_s += self.ewma * (dt_s - self._stall_est_s)

@@ -1,0 +1,281 @@
+"""Layered serving stack: refactor-equivalence pins and the new seams.
+
+The scheduler/executor/pool split must be behaviour-preserving by
+construction: under the default config (FIFO, no SLOs) token streams,
+``stats()`` and checkpoint round-trips are bit-identical to the
+pre-layering monolithic engine.  The fixtures in ``tests/data/`` were
+generated AT HEAD (before any refactoring):
+
+- ``head_token_streams.json`` — golden token streams + deterministic
+  stats pins for 8 engine configs (greedy, seeded sampling, int8/int4
+  pools, chunked prefill, the sequential and host baselines);
+- ``head_ckpt/`` + ``head_ckpt_expected.json`` — a snapshot directory
+  written by the HEAD engine mid-decode (journal tail included), which
+  must restore bit-exactly through the refactored layers
+  (snapshot-format compatibility).
+
+Plus coverage for the new surface: stats percentiles, queue-wait
+separation (``t_admit``), scheduler injection, and the streaming
+frontend + workload layers.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduce_config
+from repro.models import transformer as T
+from repro.serving.engine import (DONE, EngineConfig, REJECTED,
+                                  ServingEngine)
+from repro.serving.frontend import ServingFrontend
+from repro.serving.scheduler import FifoScheduler, Scheduler, SloScheduler
+from repro.serving.workload import make_workload
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+# engine kwargs per golden case, exactly as the fixture generator ran at
+# HEAD (defaults: max_batch=2, kv_len=48, max_new_tokens=6, impl="ref")
+GOLDEN_CASES = {
+    "greedy": {},
+    "sampled": {"temperature": 0.8, "seed": 3},
+    "kv8": {"kv_bits": 8},
+    "w8kv8": {"weight_bits": 8, "kv_bits": 8},
+    "w4kv4": {"weight_bits": 4, "kv_bits": 4},
+    "chunked": {"prefill_chunk": 8, "max_new_tokens": 4},
+    "unpacked": {"packed": False},
+    "hostpath": {"fused": False},
+}
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduce_config(get_config("qwen2.5-3b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(0),
+                           param_dtype=jnp.float32)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(os.path.join(DATA, "head_token_streams.json")) as f:
+        return json.load(f)
+
+
+def _drain(cfg, params, *, scheduler=None, **kw):
+    defaults = dict(max_batch=2, kv_len=48, max_new_tokens=6, impl="ref")
+    defaults.update(kw)
+    eng = ServingEngine(cfg, params, EngineConfig(**defaults),
+                        scheduler=scheduler)
+    rng = np.random.default_rng(7)
+    for i in range(6):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=3 + 2 * i))
+    eng.run_until_drained()
+    outs = {str(r.uid): list(map(int, r.output))
+            for r in sorted(eng.finished, key=lambda r: r.uid)}
+    return eng, outs
+
+
+# ---------------------------------------------------------------------------
+# tentpole pin: bit-identical token streams + stats vs the HEAD monolith
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", sorted(GOLDEN_CASES))
+def test_token_streams_bit_identical_to_head(small_model, golden, case):
+    cfg, params = small_model
+    eng, outs = _drain(cfg, params, **GOLDEN_CASES[case])
+    want = golden["cases"][case]
+    assert outs == want["outputs"]
+    s = eng.stats()
+    for key, val in want["stats"].items():
+        got = s[key]
+        if key == "active_slots_hist":
+            got = {str(k): v for k, v in got.items()}
+        assert got == val, f"stats[{key!r}]: {got} != {val}"
+
+
+def test_explicit_fifo_scheduler_is_the_default(small_model, golden):
+    """Injecting FifoScheduler() by hand changes nothing (it IS the
+    default policy)."""
+    cfg, params = small_model
+    _, outs = _drain(cfg, params, scheduler=FifoScheduler())
+    assert outs == golden["cases"]["greedy"]["outputs"]
+
+
+def test_slo_scheduler_without_targets_matches_fifo_outputs(small_model,
+                                                            golden):
+    """SloScheduler with no targets and uniform priority degrades to
+    FIFO ordering (rank falls back to uid) — same tokens per uid."""
+    cfg, params = small_model
+    _, outs = _drain(cfg, params, scheduler=SloScheduler())
+    assert outs == golden["cases"]["greedy"]["outputs"]
+
+
+# ---------------------------------------------------------------------------
+# satellite pin: a HEAD-written snapshot restores bit-exactly (format compat)
+# ---------------------------------------------------------------------------
+
+def test_head_checkpoint_restores_bit_exact(small_model, tmp_path):
+    import shutil
+    cfg, params = small_model
+    with open(os.path.join(DATA, "head_ckpt_expected.json")) as f:
+        expected = json.load(f)
+    assert expected["model"] == cfg.name
+    # restore from a copy: the fixture directory itself must stay pristine
+    ckdir = str(tmp_path / "head_ckpt")
+    shutil.copytree(os.path.join(DATA, "head_ckpt"), ckdir)
+    eng = ServingEngine.restore(cfg, params, ckdir)
+    assert eng.restores == 1
+    assert eng.replayed_requests == 1        # journal tail (uid 3)
+    eng.run_until_drained()
+    outs = {str(r.uid): list(map(int, r.output)) for r in eng.finished}
+    assert outs == expected["expected_outputs"]
+    s = eng.stats()
+    for key, val in expected["stats_pins"].items():
+        assert s[key] == val, f"stats[{key!r}]: {s[key]} != {val}"
+
+
+def test_restore_accepts_scheduler_passthrough(small_model, tmp_path):
+    import shutil
+    cfg, params = small_model
+    ckdir = str(tmp_path / "head_ckpt")
+    shutil.copytree(os.path.join(DATA, "head_ckpt"), ckdir)
+    eng = ServingEngine.restore(cfg, params, ckdir,
+                                scheduler=SloScheduler())
+    assert isinstance(eng.scheduler, SloScheduler)
+    assert isinstance(eng.scheduler, Scheduler)   # protocol conformance
+    eng.run_until_drained()
+    assert len(eng.finished) == 4
+
+
+# ---------------------------------------------------------------------------
+# satellite: stats percentiles + queue-wait separation
+# ---------------------------------------------------------------------------
+
+def test_stats_percentiles_and_queue_wait(small_model):
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_batch=2, kv_len=48,
+                                     max_new_tokens=4, impl="ref"))
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=6))
+    eng.run_until_drained()
+    s = eng.stats()
+    for base in ("latency", "ttft", "tpot", "queue_wait"):
+        p50, p95, p99 = (s[f"{base}_p50_s"], s[f"{base}_p95_s"],
+                         s[f"{base}_p99_s"])
+        assert 0.0 <= p50 <= p95 <= p99
+    # percentiles bracket the mean and the p50 is the median
+    assert s["latency_p50_s"] <= s["latency_p99_s"]
+    assert s["mean_tpot_s"] > 0.0
+    # queue wait is separable from service: every request was admitted
+    # at or after enqueue, and waiting <= total latency
+    assert 0.0 <= s["mean_queue_wait_s"] <= s["mean_latency_s"]
+    for r in eng.finished:
+        assert r.t_enqueue <= r.t_admit <= r.t_done
+
+
+def test_t_admit_reflects_queueing_under_contention(small_model):
+    """With one slot, the 2nd request's queue wait includes the 1st
+    request's service time — t_admit separates scheduling delay."""
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_batch=1, kv_len=48,
+                                     max_new_tokens=4, impl="ref"))
+    rng = np.random.default_rng(1)
+    first = eng.submit(rng.integers(0, cfg.vocab_size, size=6))
+    second = eng.submit(rng.integers(0, cfg.vocab_size, size=6))
+    eng.run_until_drained()
+    assert first.t_admit < second.t_admit
+    assert second.t_admit >= first.t_done  # slot freed before re-admission
+
+
+# ---------------------------------------------------------------------------
+# frontend + workload layers
+# ---------------------------------------------------------------------------
+
+def test_frontend_streams_tokens_incrementally(small_model):
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_batch=2, kv_len=48,
+                                     max_new_tokens=5, impl="ref"))
+    fe = ServingFrontend(eng)
+    rng = np.random.default_rng(2)
+    seen: list[tuple[int, int]] = []
+    streams = [fe.submit(rng.integers(0, cfg.vocab_size, size=5),
+                         on_token=lambda st, tok: seen.append((st.uid, tok)))
+               for _ in range(3)]
+    fe.drain()
+    for st in streams:
+        assert st.done and st.status == DONE
+        assert st.tokens == st.request.output
+        assert len(st.tokens) == 5
+    # callbacks saw exactly the union of all streams' tokens, in order
+    for uid in (0, 1, 2):
+        assert [t for u, t in seen if u == uid] == streams[uid].tokens
+
+
+def test_stream_iterator_pumps_to_completion(small_model):
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_batch=1, kv_len=48,
+                                     max_new_tokens=4, impl="ref"))
+    fe = ServingFrontend(eng)
+    rng = np.random.default_rng(3)
+    a = fe.submit(rng.integers(0, cfg.vocab_size, size=4))
+    b = fe.submit(rng.integers(0, cfg.vocab_size, size=4))
+    got_a = list(a)                       # iterating drives the engine
+    assert got_a == a.request.output and len(got_a) == 4
+    got_b = list(b)
+    assert got_b == b.request.output and len(got_b) == 4
+
+
+def test_frontend_rejected_stream_ends_immediately(small_model):
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_batch=1, kv_len=48,
+                                     max_new_tokens=2, impl="ref",
+                                     max_queue=1))
+    fe = ServingFrontend(eng)
+    rng = np.random.default_rng(4)
+    fe.submit(rng.integers(0, cfg.vocab_size, size=4))
+    shed = fe.submit(rng.integers(0, cfg.vocab_size, size=4))
+    assert shed.status == REJECTED and shed.done
+    assert list(shed) == []
+    fe.drain()
+
+
+def test_frontend_play_replays_workload_on_fake_clock(small_model):
+    """play() submits each arrival when the (injected) clock reaches its
+    due time and drains everything — no real sleeping."""
+    cfg, params = small_model
+
+    class FakeClock:
+        def __init__(self):
+            self.t = 100.0
+
+        def __call__(self):
+            return self.t
+
+        def sleep(self, dt):
+            self.t += max(dt, 1e-3)      # sleeping advances virtual time
+
+    clk = FakeClock()
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_batch=2, kv_len=48,
+                                     max_new_tokens=3, impl="ref",
+                                     clock=clk))
+    fe = ServingFrontend(eng, sleep=clk.sleep)
+    wl = make_workload(5, rate_rps=4.0, seed=11, hi_fraction=0.4,
+                       min_len=4, max_len=8, vocab=cfg.vocab_size,
+                       max_new_tokens=3)
+    streams = fe.play(wl)
+    assert len(streams) == 5
+    assert all(st.done and st.status == DONE for st in streams)
+    assert all(len(st.tokens) == 3 for st in streams)
+    # priorities flowed through to the engine requests
+    assert ([st.request.priority for st in streams] ==
+            [a.priority for a in wl])
