@@ -71,15 +71,20 @@ def check_schema(rec: dict) -> None:
             assert key in m["cosim"], f"{arch} cosim missing {key!r}"
 
 
-def _pcts(xs) -> tuple[float, float, float]:
+def _pcts(xs) -> tuple:
+    """(p50, p95, p99), or ``(None, None, None)`` for an empty sample
+    class — the record stores JSON null, never a fake 0 s latency."""
     if not xs:
-        return (0.0, 0.0, 0.0)
+        return (None, None, None)
     p = np.percentile(np.asarray(xs, np.float64), (50.0, 95.0, 99.0))
     return (float(p[0]), float(p[1]), float(p[2]))
 
 
 def _class_stats(reqs) -> dict:
     ttft = [r.t_first_token - r.t_enqueue for r in reqs]
+    # gen_len <= 1 requests have no per-token cadence sample (TPOT is a
+    # difference over len(output) - 1 intervals) — they are excluded, and
+    # a class with none left reports null
     tpot = [(r.t_done - r.t_first_token) / (len(r.output) - 1)
             for r in reqs if len(r.output) > 1]
     qwait = [r.t_admit - r.t_enqueue for r in reqs if r.t_admit > 0.0]
@@ -88,7 +93,7 @@ def _class_stats(reqs) -> dict:
     return {"n": len(reqs),
             "ttft_p50_s": t50, "ttft_p95_s": t95, "ttft_p99_s": t99,
             "tpot_p50_s": d50, "tpot_p95_s": d95, "tpot_p99_s": d99,
-            "mean_queue_wait_s": float(np.mean(qwait)) if qwait else 0.0}
+            "mean_queue_wait_s": float(np.mean(qwait)) if qwait else None}
 
 
 def _warm_drain(engine, cfg, *, n: int, min_len: int, max_len: int,
@@ -206,7 +211,11 @@ def run_model(arch: str, *, loads, n: int, hi_fraction: float,
     return {"capacity_rps": capacity,
             "curves": curves,
             "hi_p99_ttft_s": {"fifo": hi_fifo, "slo": hi_slo},
-            "slo_wins_hi_p99_ttft": bool(hi_slo < hi_fifo),
+            # an empty hi class at the overload point (null percentile)
+            # cannot claim a win in either direction
+            "slo_wins_hi_p99_ttft": bool(
+                hi_fifo is not None and hi_slo is not None
+                and hi_slo < hi_fifo),
             "cosim": cosim}
 
 
@@ -284,6 +293,12 @@ def main():
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
 
+    def ms(v):
+        return None if v is None else v * 1e3
+
+    def ms_s(v):
+        return "—" if v is None else f"{v * 1e3:.0f}"
+
     rows = []
     for arch, m in models.items():
         for sched in ("fifo", "slo"):
@@ -293,18 +308,18 @@ def main():
                     "load_x": pt["load_x"],
                     "offered_rps": round(pt["offered_rps"], 2),
                     "hi_ttft_p99_ms":
-                        pt["classes"]["hi"]["ttft_p99_s"] * 1e3,
+                        ms(pt["classes"]["hi"]["ttft_p99_s"]),
                     "lo_ttft_p99_ms":
-                        pt["classes"]["lo"]["ttft_p99_s"] * 1e3,
+                        ms(pt["classes"]["lo"]["ttft_p99_s"]),
                     "hi_tpot_p99_ms":
-                        pt["classes"]["hi"]["tpot_p99_s"] * 1e3,
+                        ms(pt["classes"]["hi"]["tpot_p99_s"]),
                 })
     emit(rows, "capacity")
     for arch, m in models.items():
         hp = m["hi_p99_ttft_s"]
         print(f"{arch}: capacity {m['capacity_rps']:.2f} req/s · overload "
-              f"hi-class p99 TTFT {hp['fifo']*1e3:.0f} ms (fifo) -> "
-              f"{hp['slo']*1e3:.0f} ms (slo) · "
+              f"hi-class p99 TTFT {ms_s(hp['fifo'])} ms (fifo) -> "
+              f"{ms_s(hp['slo'])} ms (slo) · "
               f"{'SLO wins' if m['slo_wins_hi_p99_ttft'] else 'NO WIN'}")
     print(f"-> {args.out}")
 

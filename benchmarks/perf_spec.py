@@ -1,0 +1,312 @@
+"""Speculative-decoding benchmark: Plane-A k-token draft+verify serving
+throughput and acceptance accounting, plus the Plane-B acceptance sweep
+and the NoI question speculation raises — does the optimal fabric change
+when decode arithmetic intensity rises?
+
+Variants (fused ``ServingEngine`` on the reduced config, greedy decode
+over identical prompt sets):
+
+- ``baseline``  — ``spec_k=0``: plain one-token decode (the PR 8 engine);
+- ``spec8_k4``  — self-speculation, ``spec_k=4``, int8 self-draft;
+- ``spec4_k4``  — self-speculation, ``spec_k=4``, int4 self-draft (cheaper
+                  drafts, lower acceptance);
+- ``spec8_k2``  — shallower draft run (``spec_k=2``, int8).
+
+Greedy speculative decoding is **lossless by construction** — accepted
+drafts equal the target argmax and the bonus token *is* the target argmax
+— so every variant's token streams must match the baseline exactly
+(``exact_parity == 1.0`` is schema-gated, not a soft metric).  The win is
+cadence: ``spec_tokens_per_step`` (tokens committed per slot per target
+weight stream) must exceed 1 for the int8 draft, i.e. one weight stream
+now buys more than one token.
+
+The Plane-B section sweeps the acceptance-parameterised traffic model
+(``spec_decode_step_phases``): fabric bytes per *committed* token must
+fall monotonically in the acceptance rate (schema-gated), crossing below
+the plain-decode line once the draft run amortises the verify overhead.
+The NoI section replays the measured baseline and speculative mixes
+through ``optimize_generation_noi`` at identical search budgets — same
+recipe as every other NoI comparison — and reports both Pareto fronts so
+the fabric question is answered on measured, not assumed, acceptance.
+
+    PYTHONPATH=src python -m benchmarks.perf_spec [--smoke]
+
+Results: ``experiments/BENCH_spec.json`` (``BENCH_spec_smoke.json`` with
+``--smoke`` so CI never clobbers the recorded full run); rendered by
+``benchmarks/report.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+# name -> (spec_k, spec_draft_bits); spec_k=0 is the non-speculative pin
+VARIANTS = {
+    "baseline": (0, 0),
+    "spec8_k4": (4, 8),
+    "spec4_k4": (4, 4),
+    "spec8_k2": (2, 8),
+}
+
+_VARIANT_KEYS = {"spec_k", "spec_draft_bits", "tokens", "tokens_per_s",
+                 "decode_steps", "exact_parity", "prefix_parity",
+                 "spec_acceptance", "spec_tokens_per_step"}
+_SWEEP_KEYS = {"acceptance", "tokens_per_step", "step_gb", "gb_per_token",
+               "reduction_vs_plain"}
+_NOI_KEYS = {"spec_k", "spec_acceptance", "spec_tokens_per_step",
+             "fabric_gb_per_token", "front", "best_mu"}
+
+
+def check_schema(rec: dict) -> None:
+    """Assert the BENCH_spec.json record shape (CI bit-rot gate)."""
+    for key in ("bench", "arch", "backend", "smoke", "results",
+                "planeb_sweep", "noi"):
+        assert key in rec, f"missing top-level key {key!r}"
+    for name in VARIANTS:
+        row = rec["results"][name]
+        missing = _VARIANT_KEYS - set(row)
+        assert not missing, f"variant {name!r} missing {missing}"
+        # greedy speculation is lossless: accepted drafts and the bonus
+        # token are the target argmax — any mismatch is an engine bug
+        assert row["exact_parity"] == 1.0, \
+            f"variant {name!r} diverged from the baseline greedy stream"
+    spec8 = rec["results"]["spec8_k4"]
+    assert spec8["spec_tokens_per_step"] is not None \
+        and spec8["spec_tokens_per_step"] > 1.0, \
+        "int8 self-draft must commit >1 token per target weight stream"
+    sweep = rec["planeb_sweep"]
+    assert len(sweep) >= 3, "acceptance sweep needs >= 3 points"
+    for row in sweep:
+        missing = _SWEEP_KEYS - set(row)
+        assert not missing, f"sweep row missing {missing}"
+    gbs = [row["gb_per_token"] for row in sweep]
+    assert all(a > b for a, b in zip(gbs, gbs[1:])), \
+        "fabric bytes per committed token must fall monotonically in " \
+        f"acceptance, got {gbs}"
+    for name in ("baseline", "spec8_k4"):
+        row = rec["noi"][name]
+        missing = _NOI_KEYS - set(row)
+        assert not missing, f"noi {name!r} missing {missing}"
+        assert row["front"], f"noi {name!r} archive is empty"
+
+
+def _prompts(cfg, requests: int, prompt_len: int):
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, cfg.vocab_size, size=prompt_len)
+            for _ in range(requests)]
+
+
+def _drain(cfg, params, prompts, *, spec_k: int, spec_draft_bits: int,
+           impl: str, max_batch: int, kv_len: int, max_new_tokens: int,
+           repeat: int = 3):
+    """Drain the prompt set; returns (outputs, stats, best timing)."""
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=max_batch, kv_len=kv_len, max_new_tokens=max_new_tokens,
+        impl=impl, spec_k=spec_k, spec_draft="self",
+        spec_draft_bits=spec_draft_bits))
+
+    def once():
+        n0, s0 = len(eng.finished), eng.decode_steps
+        for p in prompts:
+            eng.submit(p)
+        t0 = time.perf_counter()
+        eng.run_until_drained()
+        dt = time.perf_counter() - t0
+        done = sorted(eng.finished[n0:], key=lambda r: r.uid)
+        toks = sum(len(r.output) for r in done)
+        return [tuple(r.output) for r in done], toks, eng.decode_steps - s0, dt
+
+    outputs, *_ = once()               # warm-up drain: compiles + the record
+    best = None
+    for _ in range(repeat):
+        _, toks, steps, dt = once()
+        if best is None or toks / dt > best[0] / best[2]:
+            best = (toks, steps, dt)
+    return outputs, eng.stats(), best
+
+
+def _parity(ref, out) -> tuple[float, float]:
+    import numpy as np
+
+    exact = float(np.mean([a == b for a, b in zip(ref, out)]))
+    prefix = float(np.mean([
+        sum(x == y for x, y in zip(a, b)) / max(len(a), 1)
+        for a, b in zip(ref, out)]))
+    return exact, prefix
+
+
+def acceptance_sweep(arch: str, prompt_len: int, batch: int, *,
+                     spec_k: int, draft_bits: int) -> list[dict]:
+    """Full-size Plane-B sweep: fabric bytes per committed token of one
+    speculative step as the per-draft acceptance rate rises.  The step's
+    traffic is acceptance-independent (rejected rows are invalidated
+    host-side); acceptance only scales what the step yields — so the
+    per-token curve is ``step_bytes / (batch * E[tokens])``."""
+    import dataclasses
+
+    from repro.config import get_config
+    from repro.core.traffic import (Workload, decode_step_phases,
+                                    spec_decode_step_phases,
+                                    spec_tokens_per_step,
+                                    total_traffic_bytes)
+
+    w = Workload.from_config(get_config(arch), seq_len=prompt_len)
+    draft_w = (dataclasses.replace(w, weight_bits=draft_bits)
+               if draft_bits in (4, 8) else w)
+    step_b = total_traffic_bytes(spec_decode_step_phases(
+        w, prompt_len, batch, spec_k=spec_k, draft_w=draft_w))
+    plain_b = total_traffic_bytes(decode_step_phases(w, prompt_len, batch))
+    rows = []
+    for acc in (0.0, 0.25, 0.5, 0.75, 0.9, 1.0):
+        e = spec_tokens_per_step(spec_k, acc)
+        per_tok = step_b / (batch * e)
+        rows.append({
+            "acceptance": acc,
+            "tokens_per_step": e,
+            "step_gb": step_b / 2**30,
+            "gb_per_token": per_tok / 2**30,
+            "reduction_vs_plain": (plain_b / batch) / per_tok,
+        })
+    return rows
+
+
+def noi_comparison(arch: str, stats_by_variant: dict, chiplets: int, *,
+                   iterations: int, ls_steps: int) -> dict:
+    """Replay the measured baseline and speculative mixes through the one
+    seeded NoI search recipe and report both Pareto fronts — the 'does
+    the optimal fabric change' answer at identical search budgets."""
+    from repro.config import get_config
+    from repro.core.cosim import (generation_phases, mix_from_stats,
+                                  optimize_generation_noi)
+    from repro.core.traffic import total_traffic_bytes
+
+    cfg = get_config(arch)
+    out = {}
+    for name in ("baseline", "spec8_k4"):
+        mix = mix_from_stats(stats_by_variant[name])
+        phases = generation_phases(cfg, mix)
+        toks = max(mix.prefill_tokens + mix.decode_tokens, 1)
+        res, _ = optimize_generation_noi(cfg, mix, chiplets,
+                                         iterations=iterations,
+                                         ls_steps=ls_steps, seed=0)
+        front = sorted((float(f[0]), float(f[1]))
+                       for f in res.archive.objs)
+        out[name] = {
+            "spec_k": mix.spec_k,
+            "spec_acceptance": mix.spec_acceptance,
+            "spec_tokens_per_step": mix.expected_tokens_per_step,
+            "fabric_gb_per_token": total_traffic_bytes(phases) / toks / 2**30,
+            "front": [list(f) for f in front],
+            "best_mu": front[0][0] if front else None,
+        }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI (seconds, still writes JSON)")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--kv-len", type=int, default=96)
+    ap.add_argument("--max-new-tokens", type=int, default=24)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--impl", default="ref",
+                    help="attention impl for the drains (flash = Pallas)")
+    ap.add_argument("--chiplets", type=int, default=64)
+    ap.add_argument("--planeb-prompt-len", type=int, default=512)
+    ap.add_argument("--planeb-batch", type=int, default=8)
+    ap.add_argument("--noi-iterations", type=int, default=3)
+    ap.add_argument("--noi-ls-steps", type=int, default=12)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = os.path.join(
+            EXPERIMENTS,
+            "BENCH_spec_smoke.json" if args.smoke else "BENCH_spec.json")
+    if args.smoke:
+        args.max_batch, args.kv_len = 2, 64
+        args.max_new_tokens, args.prompt_len, args.requests = 6, 8, 3
+        args.planeb_prompt_len, args.planeb_batch = 64, 4
+        args.noi_iterations, args.noi_ls_steps = 1, 4
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import emit
+    from repro.config import get_config, reduce_config
+    from repro.models import transformer as T
+
+    cfg = reduce_config(get_config(args.arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(0),
+                           param_dtype=jnp.float32)
+    prompts = _prompts(cfg, args.requests, args.prompt_len)
+    shape = dict(impl=args.impl, max_batch=args.max_batch,
+                 kv_len=args.kv_len, max_new_tokens=args.max_new_tokens,
+                 repeat=2 if args.smoke else 3)
+
+    results, stats_by_variant = {}, {}
+    base_out = None
+    for name, (k, bits) in VARIANTS.items():
+        out, stats, (toks, steps, dt) = _drain(
+            cfg, params, prompts, spec_k=k, spec_draft_bits=bits, **shape)
+        base_out = out if name == "baseline" else base_out
+        exact, prefix = _parity(base_out, out)
+        stats_by_variant[name] = stats
+        results[name] = {
+            "spec_k": k, "spec_draft_bits": bits, "tokens": toks,
+            "tokens_per_s": toks / max(dt, 1e-9),
+            "decode_steps": steps,
+            "exact_parity": exact, "prefix_parity": prefix,
+            "spec_acceptance": stats.get("spec_acceptance"),
+            "spec_tokens_per_step": stats.get("spec_tokens_per_step"),
+        }
+
+    rec = {
+        "bench": "spec",
+        "arch": args.arch,
+        "backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+        "impl": args.impl,
+        "max_batch": args.max_batch, "kv_len": args.kv_len,
+        "max_new_tokens": args.max_new_tokens,
+        "prompt_len": args.prompt_len, "requests": args.requests,
+        "results": results,
+        "planeb_sweep": acceptance_sweep(args.arch, args.planeb_prompt_len,
+                                         args.planeb_batch, spec_k=4,
+                                         draft_bits=8),
+        "noi": noi_comparison(args.arch, stats_by_variant, args.chiplets,
+                              iterations=args.noi_iterations,
+                              ls_steps=args.noi_ls_steps),
+        "planeb_shape": {"chiplets": args.chiplets,
+                         "prompt_len": args.planeb_prompt_len,
+                         "batch": args.planeb_batch},
+    }
+    check_schema(rec)
+    os.makedirs(EXPERIMENTS, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+
+    emit([{"variant": k, **v} for k, v in results.items()], "spec_serving")
+    emit(rec["planeb_sweep"], "spec_acceptance_sweep")
+    emit([{"variant": k,
+           "fabric_gb_per_token": v["fabric_gb_per_token"],
+           "best_mu": v["best_mu"], "front_size": len(v["front"])}
+          for k, v in rec["noi"].items()], "spec_noi")
+    up = (results["spec8_k4"]["tokens_per_s"]
+          / max(results["baseline"]["tokens_per_s"], 1e-9))
+    print(f"spec8_k4 decode uplift: {up:.2f}x, acceptance "
+          f"{results['spec8_k4']['spec_acceptance']}, -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

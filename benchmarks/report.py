@@ -477,21 +477,24 @@ def capacity_table() -> str:
         for sched in r["schedulers"]:
             for pt in m["curves"][sched]:
                 hi, lo = pt["classes"]["hi"], pt["classes"]["lo"]
+                # percentile fields are None (not 0.0) when a class saw no
+                # finished requests / no multi-token requests at this load
+                # point — render "—", never a fake 0 ms latency
                 out.append(
                     f"| {arch} | {sched} | {pt['load_x']:g}× | "
                     f"{pt['offered_rps']:.0f} | "
-                    f"{hi['ttft_p50_s']*1e3:.1f} / "
-                    f"{hi['ttft_p99_s']*1e3:.1f} | "
-                    f"{lo['ttft_p99_s']*1e3:.1f} | "
-                    f"{hi['tpot_p99_s']*1e3:.2f} |")
+                    f"{_ms(hi.get('ttft_p50_s'), '{:.1f}')} / "
+                    f"{_ms(hi.get('ttft_p99_s'), '{:.1f}')} | "
+                    f"{_ms(lo.get('ttft_p99_s'), '{:.1f}')} | "
+                    f"{_ms(hi.get('tpot_p99_s'), '{:.2f}')} |")
     out.append("")
     for arch, m in r["models"].items():
         hp = m["hi_p99_ttft_s"]
         verdict = "**SLO wins**" if m["slo_wins_hi_p99_ttft"] else "no win"
         out.append(
             f"- {arch}: capacity {m['capacity_rps']:.0f} req/s · overload "
-            f"hi-class p99 TTFT {hp['fifo']*1e3:.0f} ms (fifo) → "
-            f"{hp['slo']*1e3:.0f} ms (slo) — {verdict}")
+            f"hi-class p99 TTFT {_ms(hp.get('fifo'), '{:.0f}')} ms (fifo) → "
+            f"{_ms(hp.get('slo'), '{:.0f}')} ms (slo) — {verdict}")
     out.append("")
     out.append("Overload mix → Plane-B co-sim (SLO run, measured episode "
                "mix through `cosim_from_engine`):")
@@ -506,10 +509,60 @@ def capacity_table() -> str:
     return "\n".join(out)
 
 
+def spec_table() -> str:
+    """Render experiments/BENCH_spec.json (benchmarks.perf_spec)."""
+    path = os.path.normpath(os.path.join(DRYRUN, "..", "BENCH_spec.json"))
+    if not os.path.exists(path):
+        return ("(no BENCH_spec.json — run "
+                "`python -m benchmarks.perf_spec`)")
+    r = _load_json(path)
+    if r is None:
+        return ("(BENCH_spec.json is malformed — re-run "
+                "`python -m benchmarks.perf_spec`)")
+    out = [f"backend={r['backend']} · {r['arch']} (reduced) · "
+           f"slots={r.get('max_batch')} · kv_len={r.get('kv_len')} · "
+           f"max_new={r.get('max_new_tokens')}"
+           + (" · SMOKE" if r.get("smoke") else ""),
+           "",
+           "| variant | k | draft bits | tok/s | decode steps | exact | "
+           "acceptance | tok/weight-stream |",
+           "|---|---|---|---|---|---|---|---|"]
+    for name, v in r["results"].items():
+        out.append(
+            f"| {name} | {v['spec_k']} | {v['spec_draft_bits']} | "
+            f"{v['tokens_per_s']:.0f} | {v['decode_steps']} | "
+            f"{v['exact_parity']:.2f} | "
+            f"{_opt(v.get('spec_acceptance'), '{:.3f}')} | "
+            f"{_opt(v.get('spec_tokens_per_step'), '{:.2f}')} |")
+    out += ["", "Acceptance sweep (full-size, fabric GB per committed "
+            "token — one k=4 int8-draft step amortised over E[tokens]):",
+            "",
+            "| acceptance | E[tok/step] | GB/token | vs plain decode |",
+            "|---|---|---|---|"]
+    for row in r["planeb_sweep"]:
+        out.append(f"| {row['acceptance']:.2f} | "
+                   f"{row['tokens_per_step']:.2f} | "
+                   f"{row['gb_per_token']:.3f} | "
+                   f"{row['reduction_vs_plain']:.2f}× |")
+    out += ["", "NoI search on the measured mixes (same seeded budget):", ""]
+    for name, v in r["noi"].items():
+        out.append(
+            f"- {name}: fabric {v['fabric_gb_per_token']:.3f} GB/token · "
+            f"best μ {_opt(v.get('best_mu'), '{:.3f}')} · "
+            f"front size {len(v['front'])}")
+    return "\n".join(out)
+
+
 def _opt(v, fmt: str) -> str:
     """Format an optional number ('—' for the None a disconnected or
     unroutable sweep records)."""
     return "—" if v is None else fmt.format(v)
+
+
+def _ms(v, fmt: str) -> str:
+    """Format an optional seconds value as milliseconds ('—' when the
+    sample class was empty and the record holds null)."""
+    return "—" if v is None else fmt.format(v * 1e3)
 
 
 def _render(fn, *args) -> str:
@@ -545,6 +598,8 @@ def main():
     print(_render(cosim_table) + "\n")
     print("### Quantised serving (benchmarks.perf_quant)\n")
     print(_render(quant_table) + "\n")
+    print("### Speculative decoding (benchmarks.perf_spec)\n")
+    print(_render(spec_table) + "\n")
     print("### Resilience under faults and overload "
           "(benchmarks.perf_resilience)\n")
     print(_render(resilience_table) + "\n")

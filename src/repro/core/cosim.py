@@ -39,7 +39,8 @@ from repro.core.noi import (NoIEval, evaluate_noi, mesh_baseline_eval,
 from repro.core.simulator import (CALIB, Calib, _decode_positions,
                                   simulate_generation)
 from repro.core.traffic import (Phase, Workload, decode_step_phases,
-                                prefill_phases)
+                                prefill_phases, spec_decode_step_phases,
+                                spec_tokens_per_step)
 
 ARCHS = ("2.5D-HI", "HAIMA_chiplet", "TransPIM_chiplet")
 
@@ -64,6 +65,25 @@ class EpisodeMix:
     max_stall_tokens: int = 0     # max prefill tokens between decode steps
     weight_bits: int = 16         # measured serving precision (16 = fp) —
     kv_bits: int = 16             #   scales the Plane-B weight/KV byte terms
+    # speculative decoding — measured from the engine's spec counters
+    # (all zero when speculation was off, leaving the mix bit-identical
+    # to the pre-speculation model)
+    spec_k: int = 0               # draft depth per speculative step
+    spec_acceptance: float = 0.0  # measured per-draft acceptance rate
+    spec_tokens: float = 0.0      # measured E[committed tokens]/slot-step
+    spec_draft_bits: int = 0      # self-draft precision (0 = serving bits)
+
+    @property
+    def expected_tokens_per_step(self) -> float:
+        """Tokens one slot commits per decode iteration: the measured
+        speculative yield when the engine recorded one, the analytic
+        ``spec_tokens_per_step`` curve as fallback, 1.0 without
+        speculation."""
+        if self.spec_k <= 0:
+            return 1.0
+        if self.spec_tokens > 0:
+            return min(float(self.spec_tokens), self.spec_k + 1.0)
+        return spec_tokens_per_step(self.spec_k, self.spec_acceptance)
 
     @property
     def requests(self) -> int:
@@ -131,7 +151,17 @@ def mix_from_stats(stats: dict) -> EpisodeMix:
                       active_hist=hist,
                       max_stall_tokens=int(stats.get("max_stall_tokens", 0)),
                       weight_bits=int(stats.get("weight_bits", 16)),
-                      kv_bits=int(stats.get("kv_bits", 16)))
+                      kv_bits=int(stats.get("kv_bits", 16)),
+                      # spec keys exist only when the engine ran with
+                      # spec_k > 0 (stats dormancy contract); rate/yield
+                      # may be None when nothing was drafted yet
+                      spec_k=int(stats.get("spec_k", 0) or 0),
+                      spec_acceptance=float(stats.get("spec_acceptance")
+                                            or 0.0),
+                      spec_tokens=float(stats.get("spec_tokens_per_step")
+                                        or 0.0),
+                      spec_draft_bits=int(stats.get("spec_draft_bits", 0)
+                                          or 0))
 
 
 def _resolve(cfg) -> ModelConfig:
@@ -212,6 +242,12 @@ def cosim_from_engine(engine, cfg=None, n_chiplets: int = 64,
     occupancy unless ``batch`` overrides it."""
     mix = mix_from_stats(engine.stats())
     cfg = _resolve(cfg) if cfg is not None else engine.cfg
+    spec = {}
+    if mix.spec_k:
+        spec = {"spec_k": mix.spec_k,
+                "spec_acceptance": mix.spec_acceptance,
+                "spec_tokens_per_step": mix.expected_tokens_per_step,
+                "spec_draft_bits": mix.spec_draft_bits}
     return {"mix": {"requests": mix.requests,
                     "prefill_tokens": mix.prefill_tokens,
                     "decode_tokens": mix.decode_tokens,
@@ -223,6 +259,7 @@ def cosim_from_engine(engine, cfg=None, n_chiplets: int = 64,
                     "mean_active_slots": mix.mean_active_slots,
                     "effective_batch": mix.effective_batch,
                     "active_slots_hist": dict(mix.active_hist),
+                    **spec,
                     "episodes": [dataclasses.asdict(e) for e in mix.episodes]},
             "archs": cosim_mix(cfg, mix, n_chiplets, archs, calib=calib,
                                batch=batch)}
@@ -295,10 +332,34 @@ def generation_phases(cfg, mix: EpisodeMix, *, samples: int = 1,
         base, rem = divmod(steps, len(positions))
         for i, pos in enumerate(positions):
             per_pos = base + (1 if i < rem else 0)
-            for p in decode_step_phases(w, pos, batch):
-                phases.append(_scale_phase(p, 1.0 / batch,
+            if mix.spec_k > 0:
+                # speculative serving: each committed token carries a
+                # 1/(batch * E[tokens/step]) share of one draft+verify
+                # step — the weight stream amortises over both the batch
+                # and the accepted draft run
+                step_phases = spec_decode_step_phases(
+                    w, pos, batch, spec_k=mix.spec_k,
+                    draft_w=_draft_workload(w, mix))
+                share = 1.0 / (batch * mix.expected_tokens_per_step)
+            else:
+                step_phases = decode_step_phases(w, pos, batch)
+                share = 1.0 / batch
+            for p in step_phases:
+                phases.append(_scale_phase(p, share,
                                            p.repeat * per_pos * ep.count))
     return phases
+
+
+def _draft_workload(w: Workload, mix: EpisodeMix) -> Workload:
+    """Draft-pass workload of a self-speculating mix: the target dims at
+    the measured draft precision (``spec_draft_bits=0`` means the draft
+    ran at serving precision — the workload itself).  Draft-*model*
+    speculation replays at the same dims (conservative upper bound); pass
+    an explicit ``draft_w`` to ``spec_decode_step_phases`` directly for
+    the small-model accounting."""
+    if mix.spec_draft_bits in (4, 8):
+        return dataclasses.replace(w, weight_bits=mix.spec_draft_bits)
+    return w
 
 
 def generation_objective(cfg, mix: EpisodeMix, n_chiplets: int,

@@ -56,6 +56,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import numbers
+from typing import Optional
 
 from repro.config import ModelConfig
 
@@ -323,6 +324,113 @@ def decode_step_phases(w: Workload, kv_pos, batch: int = 1) -> list[Phase]:
         "lm_head_dec",                    # every generated token pays the head
         reram_flops=B * 2.0 * D * w.vocab,
         mc_reram_bytes=B * (D + w.vocab) * BYTES,
+    ))
+    return phases
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: k-token draft + verify steps (acceptance-amortised)
+# ---------------------------------------------------------------------------
+
+def spec_tokens_per_step(spec_k: int, acceptance: float) -> float:
+    """Expected tokens committed per slot by one speculative step.
+
+    With per-draft acceptance probability ``a`` the leading accepted run
+    has length ``n`` with ``P(n >= j) = a^j``, so ``E[n] = sum a^j``; the
+    verify pass always contributes one extra token (the correction /
+    bonus token), hence ``E[committed] = 1 + sum_{j=1..k} a^j``.  At
+    ``a=0`` this is 1 (plain decode cadence, every draft wasted); at
+    ``a=1`` it is ``k+1``."""
+    if spec_k < 0:
+        raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+    if not 0.0 <= acceptance <= 1.0:
+        raise ValueError(f"acceptance must be in [0, 1], got {acceptance}")
+    return 1.0 + sum(acceptance ** j for j in range(1, spec_k + 1))
+
+
+def spec_decode_step_phases(w: Workload, kv_pos, batch: int = 1, *,
+                            spec_k: int, draft_w: Optional[Workload] = None,
+                            ) -> list[Phase]:
+    """One speculative decode step: ``spec_k`` draft decode steps plus a
+    single ``(spec_k+1)``-token verify pass over ``batch`` KV slots.
+
+    The draft passes are plain ``decode_step_phases`` executions of the
+    draft workload (``draft_w`` — defaults to ``w`` itself, i.e.
+    self-speculation at serving precision; pass
+    ``dataclasses.replace(w, weight_bits=8)`` for a quantised self-draft
+    or a small-model workload for draft-model speculation) at successive
+    KV depths ``pos .. pos+spec_k-1``.
+
+    The verify pass is where speculation beats plain decode: the target
+    weight stream (W_KQV + output projection per decoder layer) is paid
+    **once** while activations, KV-cache reads and KV row commits scale
+    with the ``spec_k+1`` in-stream tokens per slot — so the
+    bytes-per-committed-token falls as acceptance rises (divide this
+    step's traffic by ``batch * spec_tokens_per_step(spec_k, a)``).
+    Rejected rows are invalidated host-side (index writes, no fabric
+    stream), so the verify commit traffic is the same whether drafts are
+    accepted or not — acceptance only changes what the step *yields*.
+
+    ``decode_step_phases`` and ``transformer_phases`` are untouched: at
+    ``spec_k=0`` with no draft this returns exactly the plain step's
+    phases (Table-4 / batch-1 calibration pins are preserved)."""
+    if spec_k < 0:
+        raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+    if w.enc_dec:
+        raise ValueError("speculative decode models decoder-only stacks "
+                         "(the serving engine's packable contract)")
+    if spec_k == 0:
+        return decode_step_phases(w, kv_pos, batch)
+    positions = _decode_batch_positions(kv_pos, batch)
+    B = len(positions)
+    dw = draft_w if draft_w is not None else w
+    phases: list[Phase] = []
+    # -- draft: spec_k plain decode steps of the draft workload ----------
+    for j in range(spec_k):
+        dpos = [p + j for p in positions]
+        for p in decode_step_phases(dw, dpos, B):
+            phases.append(dataclasses.replace(p, name=f"draft{j}_{p.name}"))
+    # -- verify: T in-stream tokens per slot, target weights once --------
+    T = spec_k + 1
+    sum_pos = sum(positions)
+    D, F, k = w.d_model, w.d_ff, w.n_dec_layers
+    kv_frac = w.kv_frac
+    # row j of the in-stream block attends its slot's pos+j cached rows
+    attend = T * sum_pos + B * T * (T - 1) // 2
+    kv_read = kv_cache_bytes_per_layer(w, attend)
+    kv_write = kv_cache_bytes_per_layer(w, T)        # T fresh rows per slot
+    w_kqv = w.weight_dram_bytes(D, (1 + 2 * kv_frac) * D)  # once per step
+    phases.append(Phase(
+        "verify_embed",
+        reram_flops=B * T * 2.0 * D,
+        reram_pipe_bytes=B * T * D * BYTES,
+        mc_reram_bytes=B * T * D * BYTES,
+    ))
+    phases.append(Phase(
+        "verify_kqv",                     # weights once, T commits per slot
+        sm_flops=B * T * 2.0 * D * D * (1 + 2 * kv_frac),
+        dram_bytes=w_kqv + B * T * D * BYTES + B * kv_write,
+        sm_mc_bytes=B * T * D * (1 + 2 * kv_frac) * BYTES + B * kv_write,
+        repeat=k,
+    ))
+    phases.append(Phase(
+        "verify_score",                   # each in-stream row reads the cache
+        sm_flops=2.0 * attend * D * 2 + B * T * 2.0 * D * D,
+        dram_bytes=w.weight_dram_bytes(D, D) + kv_read,
+        sm_mc_bytes=B * T * 2 * D * BYTES,
+        repeat=k,
+    ))
+    phases.append(Phase(
+        "verify_ff",
+        reram_flops=B * T * 2.0 * D * F * 2,
+        mc_reram_bytes=B * T * 2 * D * BYTES,
+        reram_pipe_bytes=B * T * F * BYTES,
+        repeat=k,
+    ))
+    phases.append(Phase(
+        "verify_lm_head",                 # logits at all T positions
+        reram_flops=B * T * 2.0 * D * w.vocab,
+        mc_reram_bytes=B * T * (D + w.vocab) * BYTES,
     ))
     return phases
 

@@ -502,6 +502,28 @@ def chunk_prefill_step(params, cfg: ModelConfig, cache, tokens, pos, take_idx,
     return logits, {"stack": caches}
 
 
+def verify_step(params, cfg: ModelConfig, cache, tokens, pos, *, impl="auto",
+                compute_dtype=jnp.bfloat16):
+    """Batched multi-position scoring step (speculative-decoding verify).
+
+    Identical mechanics to :func:`chunk_prefill_step` — ``tokens`` (B, C)
+    are written into each row's cache at explicit absolute positions
+    ``pos`` (B, C) (-1 = pad / inactive row) and attend to the pre-write
+    cache plus the in-stream block — but the logits are kept at **every**
+    chunk position instead of one ``take_idx`` gather: one call scores all
+    k draft tokens of a speculative step (logits at in-stream index ``i``
+    are the target's distribution for the token *after* ``tokens[:, i]``).
+    Returns (logits (B, C, V), cache).
+    """
+    h = embed_tokens(params, cfg, tokens, jnp.maximum(pos, 0), compute_dtype)
+    h, caches, _ = run_stack(params["stack"], h, cfg=cfg,
+                             groups=build_groups(cfg), mode="chunk", pos=pos,
+                             caches=cache["stack"], impl=impl, causal=True)
+    h = M.apply_norm(params["final_norm"], h)
+    logits = unembed(params, cfg, h)                        # (B, C, V)
+    return logits, {"stack": caches}
+
+
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, impl="auto",
                 compute_dtype=jnp.bfloat16):
     """One decode step.  tokens (B,), pos (B,) -> (logits (B, V), cache)."""

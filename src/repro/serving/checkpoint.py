@@ -54,6 +54,7 @@ previous one instead of refusing to serve.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import json
 import os
 import sys
@@ -81,8 +82,12 @@ _ECHO_FIELDS = ("max_batch", "kv_len", "max_new_tokens", "temperature",
                 "eos_token", "impl", "seed", "fused", "packed",
                 "prefill_chunk", "decode_chunk", "weight_bits",
                 "weight_group", "kv_bits", "deadline_ms", "max_queue",
-                "anomaly_retries")
+                "anomaly_retries", "spec_k", "spec_draft",
+                "spec_draft_bits")
 _POLICY_FIELDS = ("deadline_ms", "max_queue", "anomaly_retries")
+# dataclass defaults, the comparison fallback for echo fields a snapshot
+# written by an older engine does not carry (it ran with the default)
+_ECFG_DEFAULTS = {f.name: f.default for f in dataclasses.fields(EngineConfig)}
 
 
 def _warn(msg: str) -> None:
@@ -143,6 +148,11 @@ def _engine_meta(engine: ServingEngine) -> dict:
         "failed": [_req_to_dict(r) for r in engine.failed],
         "rejected": [_req_to_dict(r) for r in engine.rejected],
         **engine.pool.meta(),        # prefilling + slot_anomalies
+        # adaptive scheduler state (SloScheduler's EWMA stall estimate +
+        # deferral counter) — restoring it keeps post-restore admission
+        # order identical to the uninterrupted run
+        "scheduler": (engine.scheduler.state_dict()
+                      if hasattr(engine.scheduler, "state_dict") else {}),
         "counters": {
             "host_transfers": engine.host_transfers,
             "host_bytes": engine.host_bytes,
@@ -155,6 +165,10 @@ def _engine_meta(engine: ServingEngine) -> dict:
             "checkpoints_written": engine.checkpoints_written,
             "restores": engine.restores,
             "replayed_requests": engine.replayed_requests,
+            "spec_steps": engine.spec_steps,
+            "spec_drafted": engine.spec_drafted,
+            "spec_accepted": engine.spec_accepted,
+            "spec_committed": engine.spec_committed,
             "active_slot_hist": {str(k): int(v)
                                  for k, v in engine.active_slot_hist.items()},
         },
@@ -257,10 +271,13 @@ def _check_config(meta: dict, cfg_name: str, ecfg: EngineConfig) -> None:
     for f in _ECHO_FIELDS:
         if f in _POLICY_FIELDS:      # operational policy may change
             continue
-        if meta["engine"][f] != getattr(ecfg, f):
+        # a snapshot from an engine predating field f ran with its
+        # default — compare against that, keeping old snapshots restorable
+        snap_val = meta["engine"].get(f, _ECFG_DEFAULTS[f])
+        if snap_val != getattr(ecfg, f):
             raise ValueError(
                 f"engine config mismatch on {f!r}: snapshot has "
-                f"{meta['engine'][f]!r}, restore got {getattr(ecfg, f)!r} — "
+                f"{snap_val!r}, restore got {getattr(ecfg, f)!r} — "
                 f"a bit-exact resume needs the snapshot's value")
 
 
@@ -285,7 +302,8 @@ def read_journal(ckpt_dir: str) -> list[dict]:
 
 def restore_engine(cfg, params, ckpt_dir: str, *,
                    ecfg: Optional[EngineConfig] = None, mesh=None,
-                   scheduler=None, replay: bool = True) -> ServingEngine:
+                   scheduler=None, replay: bool = True,
+                   draft=None) -> ServingEngine:
     """Revive a :class:`ServingEngine` from its newest intact snapshot.
 
     ``ecfg=None`` rebuilds the engine config from the snapshot's echo
@@ -303,7 +321,8 @@ def restore_engine(cfg, params, ckpt_dir: str, *,
     arrays, meta, name = load_newest_intact(ckpt_dir)
     if ecfg is None:
         ecfg = EngineConfig(**meta["engine"])
-    engine = ServingEngine(cfg, params, ecfg, mesh=mesh, scheduler=scheduler)
+    engine = ServingEngine(cfg, params, ecfg, mesh=mesh, scheduler=scheduler,
+                           draft=draft)
     _check_config(meta, engine.cfg.name, engine.ecfg)
 
     host = any(k.startswith("host/") for k in arrays)
@@ -333,9 +352,19 @@ def restore_engine(cfg, params, ckpt_dir: str, *,
     engine._stall_tokens = c["stall_tokens"]
     engine.checkpoints_written = c["checkpoints_written"]
     engine.replayed_requests = c["replayed_requests"]
+    # speculative-decoding acceptance counters (.get: absent from
+    # snapshots written before the speculative engine existed)
+    engine.spec_steps = int(c.get("spec_steps", 0))
+    engine.spec_drafted = int(c.get("spec_drafted", 0))
+    engine.spec_accepted = int(c.get("spec_accepted", 0))
+    engine.spec_committed = int(c.get("spec_committed", 0))
     engine.active_slot_hist = collections.Counter(
         {int(k): int(v) for k, v in c["active_slot_hist"].items()})
     engine.restores = c["restores"] + 1
+    # adaptive scheduler state: .get keeps pre-scheduler-state snapshots
+    # restorable (their policies start cold, exactly as they used to)
+    if hasattr(engine.scheduler, "load_state_dict"):
+        engine.scheduler.load_state_dict(meta.get("scheduler", {}))
 
     if replay:
         tail = sorted((e for e in read_journal(ckpt_dir)

@@ -103,6 +103,19 @@ class EngineConfig:
     #   logits go non-finite is frozen (no token, no pos/budget advance)
     #   and retried this many times before only that request is failed —
     #   the rest of the batch keeps decoding
+    spec_k: int = 0               # speculative decoding: draft this many
+    #   tokens per step and verify them in ONE batched multi-position call
+    #   (0 = off — token streams and stats() bit-identical to the
+    #   non-speculative engine).  Requires the fused+packed path,
+    #   decode_chunk == 1 and a packable stack; spec_k+1 must fit the
+    #   smallest cache ring (min(window, kv_len))
+    spec_draft: str = "self"      # "self": a quantised copy of the engine's
+    #   own serving params drafts (precision spec_draft_bits); "model": a
+    #   separate small draft model passed as ServingEngine(draft=(cfg,
+    #   params)), with its own KV pool kept in lockstep
+    spec_draft_bits: int = 8      # self-draft precision (8 / 4; 0 = draft
+    #   with the serving params themselves — greedy acceptance rate 1,
+    #   the bit-identity test configuration)
     clock: Callable[[], float] = time.monotonic
     #   the engine's time source for request timestamps and deadline
     #   arithmetic — injectable so deadline/eviction tests advance a fake
@@ -168,17 +181,20 @@ def _bucket_len(plen: int, kv_len: int) -> int:
     return min(b, kv_len)
 
 
-def _percentiles(xs) -> tuple[float, float, float]:
-    """(p50, p95, p99) of a sample list; zeros when empty."""
+def _percentiles(xs) -> tuple:
+    """(p50, p95, p99) of a sample list.  An empty class yields
+    ``(None, None, None)`` — *absent*, not 0.0: a zero here used to be
+    rendered by ``report.py`` as a real 0 ms latency."""
     if not xs:
-        return (0.0, 0.0, 0.0)
+        return (None, None, None)
     p = np.percentile(np.asarray(xs, np.float64), (50.0, 95.0, 99.0))
     return (float(p[0]), float(p[1]), float(p[2]))
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, ecfg: Optional[EngineConfig] = None,
-                 *, mesh=None, scheduler: Optional[Scheduler] = None):
+                 *, mesh=None, scheduler: Optional[Scheduler] = None,
+                 draft: Optional[tuple] = None):
         # NOTE: default built per-instance — a dataclass default argument
         # would be one shared mutable EngineConfig across all engines.
         self.cfg = cfg
@@ -187,6 +203,31 @@ class ServingEngine:
             raise ValueError(f"weight_bits must be 0, 4 or 8, got {ecfg.weight_bits}")
         if ecfg.kv_bits not in (0, 4, 8):
             raise ValueError(f"kv_bits must be 0, 4 or 8, got {ecfg.kv_bits}")
+        if ecfg.spec_k:
+            if ecfg.spec_k < 0:
+                raise ValueError(f"spec_k must be >= 0, got {ecfg.spec_k}")
+            if not (ecfg.fused and ecfg.packed):
+                raise ValueError("speculative decoding requires the "
+                                 "fused=True, packed=True path")
+            if ecfg.decode_chunk != 1:
+                raise ValueError("spec_k > 0 requires decode_chunk == 1 "
+                                 "(the spec step IS the multi-token step)")
+            if ecfg.spec_draft not in ("self", "model"):
+                raise ValueError(f"spec_draft must be 'self' or 'model', "
+                                 f"got {ecfg.spec_draft!r}")
+            if ecfg.spec_draft_bits not in (0, 4, 8):
+                raise ValueError(f"spec_draft_bits must be 0, 4 or 8, "
+                                 f"got {ecfg.spec_draft_bits}")
+            caps = [ecfg.kv_len] + [cfg.window for k in cfg.layer_kinds
+                                    if k == "local"]
+            if ecfg.spec_k + 1 > min(caps):
+                raise ValueError(
+                    f"spec_k+1 ({ecfg.spec_k + 1}) exceeds the smallest "
+                    f"cache ring ({min(caps)}): the saved-column rollback "
+                    f"needs unique ring indices")
+            if ecfg.spec_draft == "model" and draft is None:
+                raise ValueError(
+                    "spec_draft='model' needs draft=(draft_cfg, draft_params)")
 
         # the three layers: policy / device programs / slot lifecycle
         self.scheduler: Scheduler = scheduler if scheduler is not None \
@@ -237,6 +278,31 @@ class ServingEngine:
                           and not cfg.n_experts
                           and not cfg.cross_attn_decoder
                           and not cfg.n_encoder_layers)
+
+        # speculative decoding wiring: acceptance accounting + (for
+        # draft-model speculation) the draft params/cache attachment
+        self.spec_steps = 0          # speculative steps run (== weight streams)
+        self.spec_drafted = 0        # draft tokens proposed (spec_k per step/row)
+        self.spec_accepted = 0       # draft tokens the verify pass accepted
+        self.spec_committed = 0      # tokens actually committed (accepted
+        #                              prefix + the correction token, after
+        #                              budget/eos/depth caps)
+        if ecfg.spec_k:
+            if not self._packable:
+                raise ValueError(
+                    "speculative decoding needs a packable stack (attention-"
+                    "only, no MoE/cross/encoder) — the verify step reuses "
+                    "the segmented-prefill chunk path")
+            if ecfg.spec_draft == "model":
+                dcfg, dparams = draft
+                if dcfg.vocab_size != cfg.vocab_size:
+                    raise ValueError(
+                        f"draft vocab ({dcfg.vocab_size}) != target vocab "
+                        f"({cfg.vocab_size})")
+                if not all(k in ("global", "local") for k in dcfg.layer_kinds):
+                    raise ValueError("draft model must be attention-only")
+                self.executor.set_draft(dcfg, dparams)
+                self.pool.init_draft(dcfg)
 
         # seed-compat sampling key (fused=False host path)
         self._key = jax.random.PRNGKey(ecfg.seed)
@@ -374,6 +440,8 @@ class ServingEngine:
         the slot pool.  Returns the number of occupied slots."""
         if self.ecfg.deadline_ms > 0:
             self._evict_expired()
+        if self.ecfg.spec_k:
+            return self._step_spec()
         if self.ecfg.fused:
             return self._step_fused()
         return self._step_host()
@@ -500,6 +568,73 @@ class ServingEngine:
                     req.t_done = now
                     self.finished.append(req)
                     self.pool.release(i)     # slot freed → continuous batching
+        return self.pool.occupied()
+
+    def _step_spec(self) -> int:
+        """One speculative iteration: admission (same packed path), then a
+        single draft+verify step over the slot pool.  One device→host
+        transfer — a packed ``(spec_k+1, 4, B)`` of (token | -1, done,
+        anomaly, n_accepted) — commits up to ``spec_k + 1`` tokens per
+        slot per weight stream."""
+        t0 = time.perf_counter()
+        calls0 = self.prefill_calls
+        if self._prefill_allowed():
+            self._admit_packed()
+        dt = time.perf_counter() - t0
+        self.prefill_time += dt
+        if self.prefill_calls > calls0:
+            self.scheduler.observe_prefill(dt)
+        occupied = self.pool.occupied()
+        if occupied == len(self.pool.prefilling):
+            self._stall_tokens = 0
+            return occupied
+        self.pool.cache, dcache, self.pool.state, packed = \
+            self.executor.spec_step(self.pool.cache, self.pool.state,
+                                    self.pool.draft_cache)
+        if self.pool.draft_cache is not None:
+            self.pool.draft_cache = dcache
+        arr = self._fetch(packed)                 # ONE d2h transfer
+        self.decode_steps += 1                    # one target weight stream
+        self.spec_steps += 1
+        self.max_stall_tokens = max(self.max_stall_tokens, self._stall_tokens)
+        self._stall_tokens = 0
+        now = self._now()
+        K = self.ecfg.spec_k
+        # occupancy accounting mirrors the fused step: slots that committed
+        # a token this iteration (frozen/anomalous slots are not active)
+        self.active_slot_hist[int((arr[0, 0] >= 0).sum())] += 1
+        for i, req in enumerate(self.pool.slot_req):
+            if req is None or i in self.pool.prefilling:
+                continue
+            if arr[0, 2, i]:                      # non-finite verify logits:
+                # the device restored all spec_k+1 columns and left the
+                # state untouched — identical retry semantics to the fused
+                # step's frozen slots
+                self.pool.anomalies[i] += 1
+                if self.pool.anomalies[i] > self.ecfg.anomaly_retries:
+                    self._fail(req, FAILED_ANOMALY, now)
+                    self.pool.kill(i)
+                continue
+            if arr[0, 0, i] < 0:
+                continue
+            self.pool.anomalies[i] = 0
+            self.spec_drafted += K
+            self.spec_accepted += int(arr[0, 3, i])
+            for it in range(arr.shape[0]):        # committed prefix, in order
+                if arr[it, 0, i] < 0:
+                    break
+                tok = int(arr[it, 0, i])
+                if not req.output:
+                    req.t_first_token = now
+                req.output.append(tok)
+                self.spec_committed += 1
+                if arr[it, 1, i]:
+                    req.done = True
+                    req.status = DONE
+                    req.t_done = now
+                    self.finished.append(req)
+                    self.pool.release(i)
+                    break
         return self.pool.occupied()
 
     def _step_host(self) -> int:
@@ -662,6 +797,7 @@ class ServingEngine:
                     continue
                 req.status = ACTIVE
                 self.pool.slot_req[slot] = req
+                self._draft_ingest(req, slot)
             else:                   # long prompt: first chunk only
                 req.status = ACTIVE
                 self.pool.slot_req[slot] = req
@@ -711,8 +847,25 @@ class ServingEngine:
                     req.t_done = now
                     self.finished.append(req)
                     self.pool.release(slot)
+                else:
+                    self._draft_ingest(req, slot)
             else:
                 self.pool.prefilling[slot] = (start + c, budget)
+
+    def _draft_ingest(self, req, slot: int) -> None:
+        """Draft-model speculation: mirror a completed prompt into the
+        draft-model KV pool (one padded batch-1 draft prefill + insert) so
+        the draft decodes with the same context as the target.  No-op for
+        self-speculation (shared cache)."""
+        if self.pool.draft_cache is None:
+            return
+        plen = len(req.prompt)
+        pad = self._pad_len(plen)
+        toks = np.zeros((1, pad), np.int32)
+        toks[0, :plen] = req.prompt
+        self.pool.draft_cache = self.executor.draft_prefill(
+            self.pool.draft_cache, jnp.asarray(toks), jnp.int32(slot),
+            jnp.int32(plen))
 
     def _admit_one(self, req, slot: int, plen: int, budget: int, pad: int):
         """One right-padded batch-1 prefill+insert call and its bookkeeping
@@ -808,7 +961,8 @@ class ServingEngine:
     def restore(cls, cfg: ModelConfig, params, ckpt_dir: str, *,
                 ecfg: Optional[EngineConfig] = None, mesh=None,
                 scheduler: Optional[Scheduler] = None,
-                replay: bool = True) -> "ServingEngine":
+                replay: bool = True, draft: Optional[tuple] = None
+                ) -> "ServingEngine":
         """Revive an engine from its newest intact snapshot in
         ``ckpt_dir`` (written by ``repro.serving.checkpoint``), resuming
         mid-decode bit-identically and replaying journal-tail requests
@@ -816,7 +970,8 @@ class ServingEngine:
         :func:`repro.serving.checkpoint.restore_engine`."""
         from repro.serving.checkpoint import restore_engine
         return restore_engine(cfg, params, ckpt_dir, ecfg=ecfg, mesh=mesh,
-                              scheduler=scheduler, replay=replay)
+                              scheduler=scheduler, replay=replay,
+                              draft=draft)
 
     # -- stats ---------------------------------------------------------------
     def _failure_stats(self) -> dict:
@@ -855,14 +1010,40 @@ class ServingEngine:
         qwait_p = _percentiles(qwait)
         toks = sum(len(r.output) for r in done)
         span = max(r.t_done for r in done) - min(r.t_enqueue for r in done)
+        # speculative-decoding acceptance accounting — keys present only
+        # when spec_k > 0, so the dormant engine's stats() stay
+        # bit-identical to the non-speculative engine's
+        spec: dict = {}
+        if self.ecfg.spec_k:
+            spec = {
+                "spec_k": self.ecfg.spec_k,
+                "spec_draft": self.ecfg.spec_draft,
+                "spec_draft_bits": self.ecfg.spec_draft_bits,
+                "spec_steps": self.spec_steps,
+                "spec_drafted": self.spec_drafted,
+                "spec_accepted": self.spec_accepted,
+                "spec_committed": self.spec_committed,
+                # per-draft acceptance probability (the Plane-B traffic
+                # model's alpha) and tokens committed per slot per target
+                # weight stream (the amortisation the fabric sees;
+                # drafted / spec_k == participating row-steps)
+                "spec_acceptance": (self.spec_accepted / self.spec_drafted
+                                    if self.spec_drafted else None),
+                "spec_tokens_per_step": (
+                    self.spec_committed * self.ecfg.spec_k / self.spec_drafted
+                    if self.spec_drafted else None),
+            }
         return {
             "finished": len(done),
             "tokens": toks,
             "tokens_per_s": toks / max(span, 1e-9),
             "mean_latency_s": float(np.mean(lat)),
             "mean_ttft_s": float(np.mean(ttft)),
-            "mean_tpot_s": float(np.mean(tpot)) if tpot else 0.0,
-            "mean_queue_wait_s": float(np.mean(qwait)) if qwait else 0.0,
+            # empty sample classes report None (absent), never a fake 0.0:
+            # every finished request with gen_len <= 1 has no TPOT sample,
+            # and pre-layering snapshots may carry no t_admit stamps
+            "mean_tpot_s": float(np.mean(tpot)) if tpot else None,
+            "mean_queue_wait_s": float(np.mean(qwait)) if qwait else None,
             "latency_p50_s": lat_p[0],
             "latency_p95_s": lat_p[1],
             "latency_p99_s": lat_p[2],
@@ -898,5 +1079,6 @@ class ServingEngine:
             # {n_active_slots: decode iterations at that occupancy} — the
             # measured continuous-batching utilisation of the slot pool
             "active_slots_hist": dict(sorted(self.active_slot_hist.items())),
+            **spec,
             **self._failure_stats(),
         }

@@ -55,6 +55,25 @@ class Executor:
         self.host_transfers = 0
         self.host_bytes = 0
 
+        # -- speculative decoding (dormant unless ecfg.spec_k > 0) ----------
+        # self-speculation drafts with a quantised copy of the serving
+        # params (spec_draft_bits; 0 = the serving params themselves);
+        # draft-model speculation gets its (cfg, params) via set_draft()
+        self.draft_cfg = cfg
+        self.draft_params = None
+        if getattr(ecfg, "spec_k", 0) > 0:
+            if ecfg.spec_draft == "self":
+                if ecfg.spec_draft_bits:
+                    from repro.quant.core import quantize_params
+                    self.draft_params = quantize_params(
+                        params, ecfg.spec_draft_bits, group=ecfg.weight_group)
+                else:
+                    self.draft_params = self.params
+            self.jit_spec_step = jax.jit(self._spec_step_fn,
+                                         donate_argnums=(2, 3, 4))
+            self.jit_draft_prefill = jax.jit(self._draft_prefill_fn,
+                                             donate_argnums=(1,))
+
         # -- fused path ------------------------------------------------------
         self.jit_step = jax.jit(self._fused_step_fn, donate_argnums=(1, 2))
         self.jit_prefill_insert = jax.jit(self._prefill_insert_fn,
@@ -91,6 +110,25 @@ class Executor:
 
     def chunk_step(self, cache, state, *args):
         return self.jit_chunk_step(self.params, cache, state, *args)
+
+    def spec_step(self, cache, state, dcache=None):
+        """One speculative decode step: draft ``spec_k`` tokens, verify
+        them in a single batched multi-position call, commit the accepted
+        prefix and roll back the rest.  ``dcache`` is the draft-model KV
+        pool (None for self-speculation, which shares ``cache``)."""
+        return self.jit_spec_step(self.params, self.draft_params, cache,
+                                  dcache, state)
+
+    def set_draft(self, draft_cfg, draft_params):
+        """Attach a separate draft model (spec_draft='model')."""
+        self.draft_cfg = draft_cfg
+        self.draft_params = draft_params
+
+    def draft_prefill(self, dcache, tokens, slot, length):
+        """Mirror a completed prompt into the draft-model cache (one
+        padded batch-1 draft prefill + slot insert)."""
+        return self.jit_draft_prefill(self.draft_params, dcache, tokens,
+                                      slot, length)
 
     def decode(self, cache, tokens, pos):
         return self.jit_decode(self.params, cache, tokens, pos)
@@ -296,6 +334,204 @@ class Executor:
                 "key": key,
             }
         return cache, state, jnp.where(final, nxt, -1)
+
+    # -- jitted cores: speculative decoding -----------------------------------
+    def _spec_cols(self, cache, p):
+        """Snapshot the ``spec_k + 1`` cache columns at ring indices
+        ``(p + j) % cap`` of every leaf — everything a speculative step can
+        write — so the rollback can scatter the pre-step bytes back for
+        rejected positions.  Exact under ring aliasing because
+        ``spec_k + 1 <= cap`` (validated at engine init) keeps the gathered
+        indices of a row unique."""
+        K1 = self.ecfg.spec_k + 1
+        jj = jnp.arange(K1, dtype=jnp.int32)
+
+        def take(pool):
+            cap = pool.shape[2]
+            ring = (p[:, None] + jj[None, :]) % cap          # (B, K1)
+            bidx = jnp.arange(pool.shape[1])[:, None]
+            return pool[:, bidx, ring]                       # (R, B, K1, ...)
+
+        return jax.tree_util.tree_map(take, cache)
+
+    def _spec_restore(self, cache, saved, p, mask):
+        """Scatter saved columns back where ``mask`` (B, spec_k+1) is set —
+        the jitted truncate-on-reject (and the pre-verify scratch wipe), one
+        donation-friendly scatter per leaf."""
+        K1 = self.ecfg.spec_k + 1
+        jj = jnp.arange(K1, dtype=jnp.int32)
+
+        def put(pool, sv):
+            cap = pool.shape[2]
+            ring = (p[:, None] + jj[None, :]) % cap
+            bidx = jnp.arange(pool.shape[1])[:, None]
+            cur = pool[:, bidx, ring]
+            m = mask.reshape((1,) + mask.shape + (1,) * (cur.ndim - 3))
+            return pool.at[:, bidx, ring].set(jnp.where(m, sv, cur))
+
+        return jax.tree_util.tree_map(put, cache, saved)
+
+    def _spec_step_fn(self, params, dparams, cache, dcache, state):
+        """The speculative analogue of ``_fused_step_fn``: K sequential
+        draft decode steps (draft params / draft cache), one batched
+        ``verify_step`` scoring ``[t0, d_1..d_K]`` at positions
+        ``p..p+K``, greedy or rejection-sampling acceptance, then a
+        saved-column rollback of everything past the committed prefix.
+
+        Commit accounting per live row: with ``n`` accepted drafts the step
+        commits ``c = m + 1`` tokens ``[d_1..d_m, t_next]`` where
+        ``m = min(n, budget-1, kv_len-1-pos, eos_idx)`` — the cache ends
+        valid through ``pos + m`` (the K/V of every committed *input*) and
+        the last committed token becomes the new pending token at
+        ``pos + c``, exactly the invariant the non-speculative step
+        maintains one token at a time.  Rows whose verify logits are
+        non-finite are frozen bit-exactly (all K+1 columns restored, state
+        untouched) and flagged on the anomaly channel.
+
+        Returns ``(cache, dcache, state, packed)`` with ``packed`` a
+        ``(spec_k+1, 4, B)`` int32 of (token | -1, done, anomaly,
+        n_accepted) — still one host transfer per step."""
+        ecfg = self.ecfg
+        K, B = ecfg.spec_k, ecfg.max_batch
+        K1 = K + 1
+        live, p, t0 = state["live"], state["pos"], state["tokens"]
+        self_draft = dcache is None
+        jidx = jnp.arange(K1, dtype=jnp.int32)
+
+        with activate_plan(self._plan):
+            saved = self._spec_cols(cache, p)
+            if not self_draft:
+                dsaved = self._spec_cols(dcache, p)
+
+            # -- draft: K sequential decode steps at draft precision --------
+            def dstep(carry, _):
+                dc, tok, dpos, key = carry
+                pos_w = jnp.where(live, dpos, -1)
+                logits, dc = T.decode_step(dparams, self.draft_cfg, dc, tok,
+                                           pos_w, impl=ecfg.impl)
+                nxt, key = self._sample_dev(logits, key)
+                return (dc, nxt, dpos + 1, key), (nxt, logits)
+
+            dc0 = cache if self_draft else dcache
+            (dc1, _, _, key), (dtoks, dlogits) = jax.lax.scan(
+                dstep, (dc0, t0, p, state["key"]), None, length=K)
+            dtoks = dtoks.T                                  # (B, K)
+            dlogits = jnp.swapaxes(dlogits, 0, 1)            # (B, K, V)
+            if self_draft:
+                # wipe the draft's scratch K/V: the verify chunk requires
+                # every valid cache position strictly below the in-stream
+                # block's, and the restore returns the exact pre-draft bytes
+                cache = self._spec_restore(
+                    dc1, saved, p, jnp.broadcast_to(live[:, None], (B, K1)))
+            else:
+                dcache = dc1
+
+            # -- verify: score [t0, d_1..d_K] in one chunk call -------------
+            vtoks = jnp.concatenate([t0[:, None], dtoks], axis=1)   # (B, K1)
+            vpos = jnp.where(live[:, None], p[:, None] + jidx[None, :], -1)
+            vlogits, cache = T.verify_step(params, self.cfg, cache, vtoks,
+                                           vpos, impl=ecfg.impl)
+
+            bad = ~jnp.all(jnp.isfinite(vlogits), axis=(1, 2))      # (B,)
+            ok = live & ~bad
+
+            # -- acceptance -------------------------------------------------
+            if ecfg.temperature <= 0.0:
+                tgt = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)
+                acc = dtoks == tgt[:, :K]
+                n = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1),
+                            axis=1)
+                t_next = jnp.take_along_axis(tgt, n[:, None], axis=1)[:, 0]
+            else:
+                # rejection sampling (Leviathan et al.): accept d_j iff
+                # u * q(d_j) <= p(d_j); on first reject resample from the
+                # normalised residual max(p - q, 0); q := 0 past the drafts
+                # so full acceptance samples from the final target dist
+                tau = ecfg.temperature
+                qd = jax.nn.softmax(dlogits.astype(jnp.float32) / tau, -1)
+                pt = jax.nn.softmax(vlogits.astype(jnp.float32) / tau, -1)
+                q_at = jnp.take_along_axis(qd, dtoks[..., None], -1)[..., 0]
+                p_at = jnp.take_along_axis(pt[:, :K], dtoks[..., None],
+                                           -1)[..., 0]
+                key, ku, kr = jax.random.split(key, 3)
+                u = jax.random.uniform(ku, (B, K))
+                acc = u * q_at <= p_at
+                n = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1),
+                            axis=1)
+                p_n = jnp.take_along_axis(pt, n[:, None, None], axis=1)[:, 0]
+                qpad = jnp.concatenate([qd, jnp.zeros_like(pt[:, :1])], 1)
+                q_n = jnp.take_along_axis(qpad, n[:, None, None],
+                                          axis=1)[:, 0]
+                res = jnp.maximum(p_n - q_n, 0.0)
+                res = res / jnp.maximum(res.sum(-1, keepdims=True), 1e-30)
+                t_next = jax.random.categorical(
+                    kr, jnp.log(jnp.maximum(res, 1e-30)), axis=-1
+                ).astype(jnp.int32)
+
+            # -- commit bound: budget, cache depth, eos ---------------------
+            comm = jnp.concatenate([dtoks, jnp.zeros((B, 1), jnp.int32)], 1)
+            comm = jnp.where(jidx[None, :] == n[:, None], t_next[:, None],
+                             comm)
+            m = jnp.minimum(n, state["budget"] - 1)
+            m = jnp.minimum(m, ecfg.kv_len - 1 - p)
+            eos_idx = jnp.full((B,), K1, jnp.int32)
+            if ecfg.eos_token >= 0:
+                eos_idx = jnp.min(jnp.where(comm == ecfg.eos_token,
+                                            jidx[None, :], K1), axis=1)
+                m = jnp.minimum(m, eos_idx)
+            m = jnp.maximum(m, 0)
+
+            # -- rollback past the committed prefix -------------------------
+            mask = live[:, None] & ((jidx[None, :] > m[:, None])
+                                    | bad[:, None])
+            cache = self._spec_restore(cache, saved, p, mask)
+            if not self_draft:
+                # full acceptance leaves the draft cache one entry short
+                # (input d_K at pos p+K was never drafted): one catch-up
+                # decode step writes it, logits discarded
+                cu_pos = jnp.where(ok & (m == K), p + K, -1)
+                _, dcache = T.decode_step(dparams, self.draft_cfg, dcache,
+                                          dtoks[:, K - 1], cu_pos,
+                                          impl=ecfg.impl)
+                dcache = self._spec_restore(dcache, dsaved, p, mask)
+
+            # -- state update ----------------------------------------------
+            c = jnp.where(ok, m + 1, 0)
+            t_last = jnp.take_along_axis(comm, m[:, None], axis=1)[:, 0]
+            pos_new = p + c
+            budget_new = state["budget"] - c
+            done = ok & ((budget_new <= 0) | (pos_new >= ecfg.kv_len)
+                         | (eos_idx <= m))
+            state = {
+                "tokens": jnp.where(ok, t_last, state["tokens"]),
+                "pos": pos_new,
+                "budget": budget_new,
+                "live": live & ~done,
+                "key": key,
+            }
+
+            # -- packed host array (K+1, 4, B) ------------------------------
+            tok_rows = jnp.where((jidx[:, None] <= m[None, :]) & ok[None, :],
+                                 comm.T, -1)
+            done_rows = ((jidx[:, None] == m[None, :])
+                         & done[None, :]).astype(jnp.int32)
+            row0 = (jidx[:, None] == 0)
+            anom_rows = jnp.where(row0, (live & bad)[None, :], False)
+            acc_rows = jnp.where(row0 & ok[None, :], n[None, :], 0)
+            packed = jnp.stack([tok_rows, done_rows,
+                                anom_rows.astype(jnp.int32), acc_rows],
+                               axis=1)
+        return cache, dcache, state, packed
+
+    def _draft_prefill_fn(self, dparams, dcache, tokens, slot, length):
+        """Batch-1 prompt prefill through the *draft* model, inserted into
+        the draft KV pool — keeps the draft cache in lockstep with the
+        target when a separate draft model speculates."""
+        with activate_plan(self._prefill_plan):
+            _, pcache = T.prefill(dparams, self.draft_cfg, {"tokens": tokens},
+                                  impl=self.ecfg.impl,
+                                  kv_cap=self.ecfg.kv_len, length=length)
+        return self._insert_fn(dcache, pcache, slot, length)
 
     # -- jitted cores: seed-compat path ---------------------------------------
     def _decode_fn(self, params, cache, tokens, pos):

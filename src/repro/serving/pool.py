@@ -63,6 +63,17 @@ class SlotPool:
         self.anomalies: list[int] = [0] * B
         # host-path (fused=False) arrays, created on first admission
         self.host: Optional[dict[str, np.ndarray]] = None
+        # draft-model speculation: a second slot-pool cache with the
+        # *draft* config's geometry, maintained in lockstep with the
+        # target cache by the executor's speculative step (absent for
+        # self-speculation, which shares the target cache)
+        self.draft_cache = None
+
+    def init_draft(self, draft_cfg: ModelConfig) -> None:
+        """Allocate the draft-model KV pool (same slot count / depth as the
+        target pool; always fp — the draft is cheap by construction)."""
+        self.draft_cache = T.init_cache(draft_cfg, self.ecfg.max_batch,
+                                        self.ecfg.kv_len, dtype=jnp.bfloat16)
 
     # -- slot lifecycle ----------------------------------------------------
     def free_slots(self) -> list[int]:
@@ -92,6 +103,34 @@ class SlotPool:
         """Free a slot whose request finished (continuous batching)."""
         self.slot_req[slot] = None
 
+    def truncate(self, slot: int, keep_len: int) -> None:
+        """Invalidate every cache entry of ``slot`` at positions >=
+        ``keep_len`` (``pos`` leaves are the single source of validity, so
+        flipping them to -1 is a complete logical rollback — stale k/v or
+        code/scale rows behind an invalid ``pos`` are never attendable).
+        Host-side sibling of the jitted speculative step's in-program
+        rollback, used to truncate rejected tokens from a slot."""
+        def cut(path, leaf):
+            if str(getattr(path[-1], "key", "")) != "pos":
+                return leaf
+            row = leaf[:, slot]                       # (repeats, cap)
+            row = jnp.where(row >= keep_len, -1, row)
+            return leaf.at[:, slot].set(row)
+
+        self.cache = jax.tree_util.tree_map_with_path(cut, self.cache)
+        if self.draft_cache is not None:
+            self.draft_cache = jax.tree_util.tree_map_with_path(
+                cut, self.draft_cache)
+
+    def valid_len(self, slot: int) -> int:
+        """1 + the highest valid cache position of ``slot`` (0 = empty) —
+        the committed-prefix length a rollback truncated the slot to."""
+        longest = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(self.cache)[0]:
+            if str(getattr(path[-1], "key", "")) == "pos":
+                longest = max(longest, int(jnp.max(leaf[:, slot])) + 1)
+        return longest
+
     def kill(self, slot: int) -> None:
         """Free slot ``slot`` and silence its device row so the decode
         sweep never advances a dead request again."""
@@ -110,6 +149,8 @@ class SlotPool:
         the live device arrays — callers copy (``np.asarray``) before
         mutating or donating."""
         tree: dict = {"cache": self.cache, "state": self.state}
+        if self.draft_cache is not None:
+            tree["draft"] = self.draft_cache
         if self.host is not None:
             tree["host"] = dict(self.host)
         return tree
@@ -118,6 +159,8 @@ class SlotPool:
         """A structure-matching template for ``ckpt.unflatten_tree`` —
         fresh zero host arrays when the snapshot carries them."""
         tree: dict = {"cache": self.cache, "state": self.state}
+        if self.draft_cache is not None:
+            tree["draft"] = self.draft_cache
         if with_host:
             B = self.ecfg.max_batch
             tree["host"] = {"slot_pos": np.zeros(B, np.int32),
@@ -130,6 +173,8 @@ class SlotPool:
         host arrays stay host-side numpy."""
         self.cache = jax.device_put(tree["cache"])
         self.state = jax.device_put(tree["state"])
+        if "draft" in tree:
+            self.draft_cache = jax.device_put(tree["draft"])
         if "host" in tree:
             self.host = {k: np.array(v) for k, v in tree["host"].items()}
 

@@ -70,6 +70,13 @@ class FifoScheduler:
     def observe_prefill(self, dt_s: float) -> None:
         pass
 
+    # -- checkpoint plumbing (FIFO carries no adaptive state) --------------
+    def state_dict(self) -> dict:
+        return {}
+
+    def load_state_dict(self, state: dict) -> None:
+        pass
+
 
 @dataclasses.dataclass(frozen=True)
 class SloClass:
@@ -169,3 +176,18 @@ class SloScheduler:
             self._stall_est_s = dt_s
         else:
             self._stall_est_s += self.ewma * (dt_s - self._stall_est_s)
+
+    # -- checkpoint plumbing ------------------------------------------------
+    def state_dict(self) -> dict:
+        """Adaptive policy state a crash would otherwise lose.  The EWMA
+        stall estimate gates preemption and the deferral counter is
+        mid-burst state — dropping either changes which iteration admits
+        next after a restore, so SLO admission order would diverge from
+        the uninterrupted run.  (Aging needs no extra state here: it is
+        derived from each request's ``t_enqueue``, which restores with
+        the request.)"""
+        return {"stall_est_s": self._stall_est_s, "defers": self._defers}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._stall_est_s = float(state.get("stall_est_s", 0.0))
+        self._defers = int(state.get("defers", 0))

@@ -178,6 +178,30 @@ def test_stats_percentiles_and_queue_wait(small_model):
         assert r.t_enqueue <= r.t_admit <= r.t_done
 
 
+def test_single_token_requests_report_null_tpot_not_zero(small_model):
+    """max_new_tokens=1 makes every TPOT sample degenerate (gen_len <= 1
+    has no inter-token gap).  The stats must say *no data* — None for the
+    mean and every percentile — not a fake 0.0 that renders as a real
+    0 ms latency in the benchmark tables; and the record must still be
+    JSON-serialisable for the BENCH writers."""
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_batch=2, kv_len=48,
+                                     max_new_tokens=1, impl="ref"))
+    rng = np.random.default_rng(5)
+    for _ in range(3):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=5))
+    eng.run_until_drained()
+    s = eng.stats()
+    assert s["finished"] == 3 and s["tokens"] == 3
+    assert s["mean_tpot_s"] is None
+    for p in ("tpot_p50_s", "tpot_p95_s", "tpot_p99_s"):
+        assert s[p] is None
+    # other latency families still carry real samples
+    assert s["latency_p50_s"] > 0.0 and s["mean_latency_s"] > 0.0
+    json.dumps(s)                       # None serialises; no NaN leaks
+
+
 def test_t_admit_reflects_queueing_under_contention(small_model):
     """With one slot, the 2nd request's queue wait includes the 1st
     request's service time — t_admit separates scheduling delay."""
@@ -279,3 +303,50 @@ def test_frontend_play_replays_workload_on_fake_clock(small_model):
     # priorities flowed through to the engine requests
     assert ([st.request.priority for st in streams] ==
             [a.priority for a in wl])
+
+
+def test_play_overload_submits_late_arrivals_in_order(small_model):
+    """Overload replay pins: when the engine falls behind the arrival
+    process, every overdue arrival is still submitted in arrival order,
+    the replay never asks for a negative sleep, and each request's
+    ``t_enqueue`` is stamped from the engine clock at its *actual*
+    submission (>= its due time — an overdue arrival cannot be
+    back-dated)."""
+    cfg, params = small_model
+
+    class FakeClock:
+        def __init__(self):
+            self.t = 100.0
+            self.sleeps: list[float] = []
+
+        def __call__(self):
+            return self.t
+
+        def sleep(self, dt):
+            self.sleeps.append(dt)
+            self.t += max(dt, 1e-3)
+
+    clk = FakeClock()
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_batch=1, kv_len=48,
+                                     max_new_tokens=4, impl="ref",
+                                     clock=clk))
+    fe = ServingFrontend(eng, sleep=clk.sleep)
+    # a rate far beyond one slot's service capability: most arrivals are
+    # overdue by the time their predecessors drain
+    wl = make_workload(8, rate_rps=200.0, seed=13, hi_fraction=0.5,
+                       min_len=4, max_len=6, vocab=cfg.vocab_size,
+                       max_new_tokens=4)
+    t0 = clk()
+    streams = fe.play(wl)
+    assert len(streams) == 8 and all(st.done for st in streams)
+    assert all(dt >= 0.0 for dt in clk.sleeps)
+    by_t = sorted(wl, key=lambda a: a.t)
+    # submissions happened in arrival order: uid order == due-time order
+    uids = [st.request.uid for st in streams]
+    assert uids == sorted(uids)
+    assert [len(st.request.prompt) for st in streams] == \
+        [len(a.prompt) for a in by_t]
+    # the engine clock stamped each submission at or after its due time
+    for st, a in zip(streams, by_t):
+        assert st.request.t_enqueue >= t0 + a.t - 1e-9

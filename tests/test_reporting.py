@@ -168,3 +168,26 @@ def test_resilience_table_renders_full_record(monkeypatch, tmp_path):
     assert "Fault-aware vs fault-oblivious" in out
     assert "Engine overload" in out
     assert "goodput" in out
+
+
+def test_report_renders_null_latencies_as_dash():
+    """Empty-class percentiles are recorded as null (never 0.0); the
+    table renderers must print them as '—', not format None (TypeError)
+    or a fake 0 ms latency."""
+    from benchmarks.report import _ms, _opt
+
+    assert _ms(None, "{:.1f}") == "—"
+    assert _ms(0.0125, "{:.1f}") == "12.5"
+    assert _opt(None, "{:.3f}") == "—"
+    assert _opt(2.5, "{:.1f}×") == "2.5×"
+
+
+def test_capacity_percentiles_of_empty_class_are_null():
+    """perf_capacity._pcts on an empty sample returns (None, None, None)
+    — the BENCH record holds nulls, never zeros that render as real
+    latencies."""
+    from benchmarks.perf_capacity import _pcts
+
+    assert _pcts([]) == (None, None, None)
+    p50, p95, p99 = _pcts([0.1, 0.2, 0.3])
+    assert 0.1 <= p50 <= p95 <= p99 <= 0.3

@@ -1,0 +1,324 @@
+"""Speculative decoding: lossless greedy streams, saved-column KV
+rollback, chunked-prefill interaction, dormancy, and the Plane-B
+acceptance-parameterised traffic model.
+
+Greedy speculation is lossless by construction — accepted drafts equal
+the target argmax at their position and the bonus/correction token *is*
+the target argmax after the accepted prefix — so every greedy spec drain
+must reproduce the non-speculative token streams bit-for-bit, whatever
+the draft quality.  The draft only changes *cadence* (decode steps,
+acceptance counters), never content.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduce_config
+from repro.models import transformer as T
+from repro.serving.engine import EngineConfig, ServingEngine
+
+# every engine-servable zoo model (decoder-only, packable): the
+# acceptance-1 bit-identity contract must hold on all of them
+SERVABLE = ("llama2-7b", "gpt-j", "gemma2-9b", "qwen2.5-3b")
+
+_MODELS = {}
+
+
+def _model(arch: str):
+    if arch not in _MODELS:
+        cfg = reduce_config(get_config(arch))
+        _MODELS[arch] = (cfg, T.init_params(cfg, jax.random.PRNGKey(0),
+                                            param_dtype=jnp.float32))
+    return _MODELS[arch]
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    return _model("qwen2.5-3b")
+
+
+def _drain(cfg, params, *, n_req=4, draft=None, **kw):
+    defaults = dict(max_batch=2, kv_len=48, max_new_tokens=6, impl="ref")
+    defaults.update(kw)
+    eng = ServingEngine(cfg, params, EngineConfig(**defaults), draft=draft)
+    rng = np.random.default_rng(7)
+    for i in range(n_req):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=3 + 2 * i))
+    eng.run_until_drained()
+    outs = {r.uid: list(map(int, r.output))
+            for r in sorted(eng.finished, key=lambda r: r.uid)}
+    return eng, outs
+
+
+def _tree_equal(a, b) -> bool:
+    fa = jax.tree_util.tree_leaves_with_path(a)
+    fb = dict(jax.tree_util.tree_leaves_with_path(b))
+    return all(np.array_equal(np.asarray(x), np.asarray(fb[k]))
+               for k, x in fa)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: greedy speculative streams are bit-identical to plain decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", SERVABLE)
+def test_acceptance_one_bit_identical_streams(arch):
+    """spec_draft_bits=0 drafts with the serving params themselves, so the
+    verify pass accepts every draft (acceptance exactly 1) and the spec
+    engine must emit the plain engine's streams in ~1/(k+1) the steps."""
+    cfg, params = _model(arch)
+    base, want = _drain(cfg, params)
+    eng, outs = _drain(cfg, params, spec_k=4, spec_draft_bits=0)
+    assert outs == want
+    s = eng.stats()
+    assert s["spec_acceptance"] == 1.0
+    assert s["spec_tokens_per_step"] == pytest.approx(5.0)
+    assert eng.decode_steps < base.decode_steps
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_lossy_self_draft_streams_still_exact(small_model, bits):
+    """int8/int4 self-drafts mispredict, but greedy acceptance commits
+    only target-argmax tokens — the streams stay exact while the
+    acceptance rate (and step count) degrades."""
+    cfg, params = small_model
+    _, want = _drain(cfg, params)
+    eng, outs = _drain(cfg, params, spec_k=4, spec_draft_bits=bits)
+    assert outs == want
+    s = eng.stats()
+    assert 0.0 <= s["spec_acceptance"] <= 1.0
+    # prefill emits each request's first token; spec steps commit the rest
+    assert s["spec_committed"] == s["tokens"] - s["finished"]
+
+
+def test_draft_model_speculation_streams_exact(small_model):
+    """A separate (here: 1-layer, randomly initialised — worst-case)
+    draft model drives the same lossless greedy contract through the
+    draft-cache ingest/rollback path."""
+    cfg, params = small_model
+    dcfg = dataclasses.replace(cfg, n_layers=1, name=cfg.name + "-draft")
+    dparams = T.init_params(dcfg, jax.random.PRNGKey(9),
+                            param_dtype=jnp.float32)
+    _, want = _drain(cfg, params)
+    eng, outs = _drain(cfg, params, spec_k=3, spec_draft="model",
+                       draft=(dcfg, dparams))
+    assert outs == want
+    assert eng.pool.draft_cache is not None
+    assert eng.stats()["spec_draft"] == "model"
+
+
+def test_quantized_target_with_spec_streams_exact(small_model):
+    """Speculation composes with the quantised serving path: the w8kv8
+    engine's own greedy streams are the reference."""
+    cfg, params = small_model
+    _, want = _drain(cfg, params, weight_bits=8, kv_bits=8)
+    _, outs = _drain(cfg, params, weight_bits=8, kv_bits=8,
+                     spec_k=4, spec_draft_bits=4)
+    assert outs == want
+
+
+# ---------------------------------------------------------------------------
+# rollback: rejected drafts leave the slot pool bit-identical
+# ---------------------------------------------------------------------------
+
+def test_spec_step_touches_only_committed_columns(small_model):
+    """One draft+verify step against a live slot: every cache column
+    outside the committed ring range ``p .. p+m`` must come back
+    byte-identical to the pre-step pool — the saved-column restore
+    erased the drafts' speculative writes beyond the accepted prefix
+    (and the step never touched anything else)."""
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=1, kv_len=48, max_new_tokens=8, impl="ref",
+        spec_k=4, spec_draft_bits=4))
+    rng = np.random.default_rng(7)
+    eng.submit(rng.integers(0, cfg.vocab_size, size=5))
+    eng.step()                            # admission + prefill
+    assert eng.pool.occupied() == 1
+    p = eng.pool.valid_len(0)
+    pre = {k: np.asarray(v).copy() for k, v in
+           jax.tree_util.tree_leaves_with_path(eng.pool.cache)}
+    c0 = eng.spec_committed
+    eng.step()                            # one speculative step
+    m = eng.spec_committed - c0 - 1       # accepted drafts (commit = m+1)
+    assert 0 <= m <= 4
+    post = dict(jax.tree_util.tree_leaves_with_path(eng.pool.cache))
+    for key, before in pre.items():
+        after = np.asarray(post[key])
+        cap = before.shape[2]             # axis 2 is the ring for all leaves
+        touched = {(p + j) % cap for j in range(m + 1)}
+        for c in range(cap):
+            if c not in touched:
+                assert np.array_equal(before[:, :, c], after[:, :, c]), \
+                    f"column {c} of {jax.tree_util.keystr(key)} changed"
+
+
+def test_rejection_rollback_quantized_pool_positions_identical(small_model):
+    """The kv8 pool quantises from chunk-mode f32 values whose last-ulp
+    can differ from the decode path, so full byte-identity is not the
+    contract there — but the *validity* plane (per-layer pos leaves) and
+    the emitted streams must match the plain kv8 engine exactly.
+    ``max_batch=1`` pins slot assignment: with more slots the faster
+    spec drain legally admits requests into different slots."""
+    cfg, params = small_model
+    base, want = _drain(cfg, params, kv_bits=8, max_batch=1)
+    eng, outs = _drain(cfg, params, kv_bits=8, max_batch=1,
+                       spec_k=4, spec_draft_bits=4)
+    assert outs == want
+    pos_a = [(k, v) for k, v in
+             jax.tree_util.tree_leaves_with_path(eng.pool.cache)
+             if "pos" in jax.tree_util.keystr(k)]
+    pos_b = dict(jax.tree_util.tree_leaves_with_path(base.pool.cache))
+    assert pos_a
+    for k, v in pos_a:
+        assert np.array_equal(np.asarray(v), np.asarray(pos_b[k]))
+
+
+def test_saved_column_restore_roundtrip_byte_exact(small_model):
+    """The device rollback primitive itself: corrupt the spec_k+1 ring
+    columns of a live cache, then restore from the saved columns — the
+    cache must come back byte-identical everywhere."""
+    cfg, params = small_model
+    eng, _ = _drain(cfg, params, spec_k=4, spec_draft_bits=0)
+    ex = eng.executor
+    cache = eng.pool.cache
+    B = eng.ecfg.max_batch
+    p = jnp.asarray(np.arange(B) % 7 + 3, jnp.int32)
+    ones = jnp.ones((B, eng.ecfg.spec_k + 1), bool)
+    saved = ex._spec_cols(cache, p)
+    garbage = jax.tree_util.tree_map(lambda a: a * 0 - 1, saved)
+    corrupted = ex._spec_restore(cache, garbage, p, ones)
+    restored = ex._spec_restore(corrupted, saved, p, ones)
+    assert not _tree_equal(corrupted, cache)
+    assert _tree_equal(restored, cache)
+
+
+# ---------------------------------------------------------------------------
+# scheduling interactions: chunked prefill, temperature, dormancy
+# ---------------------------------------------------------------------------
+
+def test_spec_through_chunked_prefill_keeps_stall_invariant(small_model):
+    """spec_k composes with chunked prefill: streams match the chunked
+    baseline and no admission burst stalls decode for more than two
+    chunk budgets (one continuation + one packed admission per step)."""
+    cfg, params = small_model
+    _, want = _drain(cfg, params, n_req=6, prefill_chunk=8,
+                     max_new_tokens=4)
+    eng, outs = _drain(cfg, params, n_req=6, prefill_chunk=8,
+                       max_new_tokens=4, spec_k=4, spec_draft_bits=0)
+    assert outs == want
+    assert eng.stats()["max_stall_tokens"] <= 2 * 8
+
+
+def test_spec_temperature_rejection_sampling_drains(small_model):
+    """The temperature path (rejection sampling + residual resample) is
+    distributional, not stream-pinned: it must drain every request with
+    full budgets and sane acceptance accounting."""
+    cfg, params = small_model
+    eng, outs = _drain(cfg, params, temperature=0.8, seed=3,
+                       spec_k=4, spec_draft_bits=8)
+    assert len(outs) == 4
+    assert all(len(v) == 6 for v in outs.values())
+    s = eng.stats()
+    assert 0.0 <= s["spec_acceptance"] <= 1.0
+    assert s["spec_committed"] == s["tokens"] - s["finished"]
+
+
+def test_spec_dormant_stats_carry_no_spec_keys(small_model):
+    """spec_k=0 engines must not grow stats keys — the dormancy half of
+    the bit-identity contract (the golden fixtures pin the streams)."""
+    cfg, params = small_model
+    eng, _ = _drain(cfg, params)
+    assert not any(k.startswith("spec_") for k in eng.stats())
+    spec_eng, _ = _drain(cfg, params, spec_k=2, spec_draft_bits=0)
+    assert "spec_acceptance" in spec_eng.stats()
+
+
+def test_spec_config_validation():
+    cfg, params = _model("qwen2.5-3b")
+    with pytest.raises(ValueError, match="fused"):
+        ServingEngine(cfg, params, EngineConfig(
+            max_batch=2, kv_len=48, packed=False, spec_k=2))
+    with pytest.raises(ValueError, match="decode_chunk"):
+        ServingEngine(cfg, params, EngineConfig(
+            max_batch=2, kv_len=48, decode_chunk=2, spec_k=2))
+    with pytest.raises(ValueError, match="ring"):
+        ServingEngine(cfg, params, EngineConfig(
+            max_batch=2, kv_len=4, spec_k=4))
+    with pytest.raises(ValueError, match="draft"):
+        ServingEngine(cfg, params, EngineConfig(
+            max_batch=2, kv_len=48, spec_k=2, spec_draft="model"))
+
+
+# ---------------------------------------------------------------------------
+# Plane B: acceptance-parameterised traffic + cosim threading
+# ---------------------------------------------------------------------------
+
+def test_spec_tokens_per_step_curve():
+    from repro.core.traffic import spec_tokens_per_step
+
+    assert spec_tokens_per_step(4, 0.0) == 1.0
+    assert spec_tokens_per_step(4, 1.0) == 5.0
+    es = [spec_tokens_per_step(4, a) for a in (0.0, 0.3, 0.6, 0.9, 1.0)]
+    assert all(a < b for a, b in zip(es, es[1:]))
+    with pytest.raises(ValueError):
+        spec_tokens_per_step(4, 1.5)
+
+
+def test_spec_step_phases_k0_identity_and_monotone_bytes():
+    """spec_k=0 returns the plain decode step unchanged (the PR 3-5
+    batch pins stay pinned), and fabric bytes per committed token fall
+    monotonically in acceptance at fixed step traffic."""
+    from repro.core.traffic import (Workload, decode_step_phases,
+                                    spec_decode_step_phases,
+                                    spec_tokens_per_step,
+                                    total_traffic_bytes)
+
+    w = Workload.from_config(get_config("llama2-7b"), seq_len=128)
+    assert (spec_decode_step_phases(w, 64, 4, spec_k=0)
+            == decode_step_phases(w, 64, 4))
+    dw = dataclasses.replace(w, weight_bits=8)
+    step = total_traffic_bytes(
+        spec_decode_step_phases(w, 64, 4, spec_k=4, draft_w=dw))
+    per_tok = [step / (4 * spec_tokens_per_step(4, a))
+               for a in (0.0, 0.25, 0.5, 0.75, 1.0)]
+    assert all(a > b for a, b in zip(per_tok, per_tok[1:]))
+    # the verify pass streams target weights once: a whole spec step must
+    # cost less than k+1 separate target steps plus k draft steps
+    plain = total_traffic_bytes(decode_step_phases(w, 64, 4))
+    assert step < (2 * 4 + 1) * plain
+
+
+def test_spec_step_phases_reject_enc_dec():
+    from repro.core.traffic import Workload, spec_decode_step_phases
+
+    w = Workload.from_config(get_config("whisper-large-v3"), seq_len=32)
+    with pytest.raises(ValueError, match="decoder-only"):
+        spec_decode_step_phases(w, 8, 1, spec_k=2)
+
+
+def test_cosim_threads_measured_acceptance(small_model):
+    """cosim_from_engine on a speculative drain carries the measured
+    acceptance into the mix, and generation_phases swaps the decode
+    segment to draft+verify phases."""
+    from repro.core.cosim import (cosim_from_engine, generation_phases,
+                                  mix_from_stats)
+
+    cfg, params = small_model
+    eng, _ = _drain(cfg, params, spec_k=4, spec_draft_bits=8)
+    out = cosim_from_engine(eng, "qwen2.5-3b", n_chiplets=36)
+    assert out["mix"]["spec_k"] == 4
+    assert 0.0 <= out["mix"]["spec_acceptance"] <= 1.0
+    assert 1.0 <= out["mix"]["spec_tokens_per_step"] <= 5.0
+    mix = mix_from_stats(eng.stats())
+    names = {p.name for p in generation_phases("qwen2.5-3b", mix)}
+    assert any(n.startswith("verify_") for n in names)
+    # the dormant engine's mix carries no speculation
+    base, _ = _drain(cfg, params)
+    mix0 = mix_from_stats(base.stats())
+    assert mix0.spec_k == 0 and mix0.expected_tokens_per_step == 1.0
+    names0 = {p.name for p in generation_phases("qwen2.5-3b", mix0)}
+    assert not any(n.startswith(("verify_", "draft")) for n in names0)
