@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow verify bench-serving bench-capacity bench-cosim bench-quant bench-resilience bench-recovery bench-spec bench-smoke report
+.PHONY: test test-slow verify bench-serving bench-capacity bench-cosim bench-quant bench-resilience bench-recovery bench-spec bench-calib bench-smoke report
 
 test:               ## tier-1 test suite (everything, slow included)
 	$(PY) -m pytest -x -q
@@ -30,7 +30,10 @@ bench-recovery:     ## chaos kill+restore + MTTR-aware NoI search -> experiments
 bench-spec:         ## speculative decoding: engine uplift + acceptance sweep + NoI comparison -> experiments/BENCH_spec.json
 	$(PY) -m benchmarks.perf_spec
 
-bench-smoke:        ## tiny-config serving+capacity+cosim+quant+resilience+recovery+spec benchmarks; assert the JSON report schemas
+bench-calib:        ## measured-cost calibration: profile kernels, fit Plane-B rates, pin residuals -> experiments/BENCH_calib.json
+	$(PY) -m benchmarks.perf_calib
+
+bench-smoke:        ## tiny-config serving+capacity+cosim+quant+resilience+recovery+spec+calib benchmarks; assert the JSON report schemas
 	$(PY) -m benchmarks.perf_serving --smoke
 	$(PY) -m benchmarks.perf_capacity --smoke
 	$(PY) -m benchmarks.perf_cosim --smoke
@@ -38,6 +41,7 @@ bench-smoke:        ## tiny-config serving+capacity+cosim+quant+resilience+recov
 	$(PY) -m benchmarks.perf_resilience --smoke
 	$(PY) -m benchmarks.perf_recovery --smoke
 	$(PY) -m benchmarks.perf_spec --smoke
+	$(PY) -m benchmarks.perf_calib --smoke
 
 # slow-marked tests run in their own non-blocking CI job (test-slow)
 verify:             ## CI gate: fast tests + bench smokes (schema-checked)

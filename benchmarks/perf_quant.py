@@ -38,7 +38,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 
 EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
 
@@ -96,6 +95,8 @@ def _drain(cfg, params, prompts, *, weight_bits: int, kv_bits: int,
     """Drain the prompt set; returns (outputs per request, best timing)."""
     from repro.serving.engine import EngineConfig, ServingEngine
 
+    from benchmarks.common import drain_best
+
     eng = ServingEngine(cfg, params, EngineConfig(
         max_batch=max_batch, kv_len=kv_len, max_new_tokens=max_new_tokens,
         impl=impl, weight_bits=weight_bits, kv_bits=kv_bits))
@@ -104,20 +105,16 @@ def _drain(cfg, params, prompts, *, weight_bits: int, kv_bits: int,
         n0, s0 = len(eng.finished), eng.decode_steps
         for p in prompts:
             eng.submit(p)
-        t0 = time.perf_counter()
         eng.run_until_drained()
-        dt = time.perf_counter() - t0
         done = sorted(eng.finished[n0:], key=lambda r: r.uid)
         toks = sum(len(r.output) for r in done)
-        return [tuple(r.output) for r in done], toks, eng.decode_steps - s0, dt
+        return [tuple(r.output) for r in done], toks, eng.decode_steps - s0
 
-    outputs, *_ = once()               # warm-up drain: compiles + the record
-    best = None
-    for _ in range(repeat):
-        _, toks, steps, dt = once()
-        if best is None or toks / dt > best[0] / best[2]:
-            best = (toks, steps, dt)
-    return outputs, best
+    # warm-up drain (compiles + the parity record) + best-of-repeat —
+    # the shared serving-benchmark methodology (benchmarks.common)
+    warm, (_, toks, steps), dt, _ = drain_best(
+        once, repeat=repeat, score=lambda r, dt: r[1] / dt)
+    return warm[0], (toks, steps, dt)
 
 
 def _parity(ref, out) -> tuple[float, float]:

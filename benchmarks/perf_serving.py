@@ -38,7 +38,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 
 EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
 
@@ -77,6 +76,8 @@ def run_engine(cfg, params, *, fused: bool, impl: str, max_batch: int,
     import numpy as np
     from repro.serving.engine import EngineConfig, ServingEngine
 
+    from benchmarks.common import drain_best
+
     eng = ServingEngine(cfg, params, EngineConfig(
         max_batch=max_batch, kv_len=kv_len, max_new_tokens=max_new_tokens,
         impl=impl, fused=fused, decode_chunk=decode_chunk))
@@ -86,19 +87,14 @@ def run_engine(cfg, params, *, fused: bool, impl: str, max_batch: int,
         for _ in range(requests):
             eng.submit(rng.integers(0, cfg.vocab_size, size=prompt_len))
         tok0, byte0, step0 = _tokens(eng), eng.host_bytes, eng.decode_steps
-        t0 = time.perf_counter()
         eng.run_until_drained()
-        dt = time.perf_counter() - t0
         return (_tokens(eng) - tok0, eng.decode_steps - step0,
-                eng.host_bytes - byte0, dt)
+                eng.host_bytes - byte0)
 
-    drain()                        # warm-up: all compiles happen here
-    best = None
-    for _ in range(repeat):        # repeated timed drains, keep the best
-        toks, steps, bytes_, dt = drain()
-        if best is None or toks / dt > best[0] / best[3]:
-            best = (toks, steps, bytes_, dt)
-    toks, steps, bytes_, dt = best
+    # warm-up (all compiles) + best-of-repeat steady-state drains —
+    # shared methodology, timed by the calibration plane's micro-timer
+    _, (toks, steps, bytes_), dt, _ = drain_best(
+        drain, repeat=repeat, score=lambda r, dt: r[0] / dt)
     return {
         "fused": fused,
         "impl": impl,
@@ -120,6 +116,8 @@ def run_prefill_workload(cfg, params, *, packed: bool, impl: str,
     deltas — same methodology as the decode workload."""
     import numpy as np
     from repro.serving.engine import EngineConfig, ServingEngine
+
+    from benchmarks.common import drain_best
 
     eng = ServingEngine(cfg, params, EngineConfig(
         max_batch=max_batch, kv_len=kv_len, max_new_tokens=max_new_tokens,
@@ -147,12 +145,10 @@ def run_prefill_workload(cfg, params, *, packed: bool, impl: str,
                                    - min(r.t_enqueue for r in done), 1e-9)),
         }
 
-    drain()                        # warm-up: all compiles happen here
-    best = None
-    for _ in range(repeat):
-        s = drain()
-        if best is None or s["prefill_tokens_per_s"] > best["prefill_tokens_per_s"]:
-            best = s
+    # warm-up + best-of-repeat (scored by the engine's own prefill
+    # counters — the drain's wall time is not the prefill-bound metric)
+    _, best, _, _ = drain_best(
+        drain, repeat=repeat, score=lambda r, dt: r["prefill_tokens_per_s"])
     return {
         "packed": packed,
         "impl": impl,

@@ -553,6 +553,74 @@ def spec_table() -> str:
     return "\n".join(out)
 
 
+def calib_table() -> str:
+    """Render experiments/BENCH_calib.json (benchmarks.perf_calib): the
+    fitted per-phase cost models, the measured-vs-analytical gap, and the
+    calibration error bar attached to every co-sim headline."""
+    path = os.path.normpath(os.path.join(DRYRUN, "..", "BENCH_calib.json"))
+    if not os.path.exists(path):
+        return "(no BENCH_calib.json — run `python -m benchmarks.perf_calib`)"
+    r = _load_json(path)
+    if r is None:
+        return ("(BENCH_calib.json is malformed — re-run "
+                "`python -m benchmarks.perf_calib`)")
+    bar = r["error_bar_rel"]
+    out = [f"backend={r['backend']} · interpret={r['interpret']} · "
+           f"{r['n_samples']} samples · pinned tolerance "
+           f"{r['tolerance_rel']}"
+           + (" · SMOKE" if r.get("smoke") else ""),
+           "",
+           "| phase | plane | term | rate/s | launch µs | rate ±CI95 | r² | "
+           "held-out max err | log₁₀(meas/analytical) |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    fits = r["table"]["fits"]
+    for kind, e in r["phase_errors"].items():
+        f = fits[kind]
+        out.append(
+            f"| {kind} | {e['plane']} | {e['term']} | {f['rate']:.2e} | "
+            f"{f['intercept_s'] * 1e6:.1f} | "
+            f"{_opt(f.get('rate_ci95_rel'), '±{:.0%}')} | {f['r2']:.3f} | "
+            f"{f['heldout_max_rel_err']:.3f} | "
+            f"{e['log10_measured_over_analytical']:+.2f} |")
+    cal = r["calib"]
+    out += ["",
+            f"measured calib (opt-in, default analytical path untouched): "
+            f"sm_efficiency {cal['default']['sm_efficiency']:.2e} → "
+            f"{cal['measured']['sm_efficiency']:.2e} · reram_fill "
+            f"{cal['default']['reram_fill']:.2e} → "
+            f"{cal['measured']['reram_fill']:.2e}"]
+    c = r["cosim"]
+    out += [f"replay ({c['model']}, {c['chiplets']} chiplets): decode "
+            f"{c['default']['decode_step_ms']:.2f} ms/step analytical vs "
+            f"{c['measured']['decode_step_ms']:.2f} ms/step under the "
+            f"measured ({r['backend']}) rates "
+            f"({c['decode_step_rel_delta']:+.1%})"]
+    tr = r["engine_trace"]
+    out += [f"engine trace: {tr['trace_iterations']} iterations · decode "
+            f"step {_ms(tr.get('trace_decode_step_s'), '{:.2f}')} ms mean / "
+            f"{_ms(tr.get('trace_decode_step_p95_s'), '{:.2f}')} ms p95 · "
+            f"prefill {tr['trace_prefill_s'] * 1e3:.0f} ms · d2h "
+            f"{tr['trace_d2h_s'] * 1e3:.0f} ms total"]
+    # every co-sim headline gets the calibration error bar: the worst
+    # held-out residual of any fitted phase bounds how literally the
+    # analytical ms/step numbers should be read
+    cpath = os.path.normpath(os.path.join(DRYRUN, "..", "BENCH_cosim.json"))
+    cr = _load_json(cpath) if os.path.exists(cpath) else None
+    if cr:
+        rows = []
+        for name, m in cr["models"].items():
+            hi = m["archs"]["2.5D-HI"]
+            step = hi["decode_step_ms"]
+            rows.append(f"{name} {step:.2f} ±{step * bar:.2f}")
+        out += ["",
+                f"co-sim decode ms/step headlines ± calibration error bar "
+                f"(±{bar:.0%}): " + "; ".join(rows)]
+    else:
+        out += ["", f"calibration error bar ±{bar:.0%} (no BENCH_cosim.json "
+                "to qualify — run `python -m benchmarks.perf_cosim`)"]
+    return "\n".join(out)
+
+
 def _opt(v, fmt: str) -> str:
     """Format an optional number ('—' for the None a disconnected or
     unroutable sweep records)."""
@@ -596,6 +664,8 @@ def main():
     print(_render(capacity_table) + "\n")
     print("### Generation co-simulation (benchmarks.perf_cosim)\n")
     print(_render(cosim_table) + "\n")
+    print("### Measured-cost calibration (benchmarks.perf_calib)\n")
+    print(_render(calib_table) + "\n")
     print("### Quantised serving (benchmarks.perf_quant)\n")
     print(_render(quant_table) + "\n")
     print("### Speculative decoding (benchmarks.perf_spec)\n")

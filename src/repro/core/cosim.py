@@ -72,6 +72,12 @@ class EpisodeMix:
     spec_acceptance: float = 0.0  # measured per-draft acceptance rate
     spec_tokens: float = 0.0      # measured E[committed tokens]/slot-step
     spec_draft_bits: int = 0      # self-draft precision (0 = serving bits)
+    # measured wall clock from the engine tracer (EngineConfig(trace=),
+    # repro.profile) — all zero when tracing was off, leaving the mix
+    # bit-identical to the untraced model
+    measured_step_s: float = 0.0     # mean decode-iteration wall time
+    measured_prefill_s: float = 0.0  # total admission wall time
+    measured_d2h_s: float = 0.0      # total device→host fetch wall time
 
     @property
     def expected_tokens_per_step(self) -> float:
@@ -161,7 +167,14 @@ def mix_from_stats(stats: dict) -> EpisodeMix:
                       spec_tokens=float(stats.get("spec_tokens_per_step")
                                         or 0.0),
                       spec_draft_bits=int(stats.get("spec_draft_bits", 0)
-                                          or 0))
+                                          or 0),
+                      # trace keys exist only when the engine ran with
+                      # EngineConfig(trace=True) (same dormancy contract)
+                      measured_step_s=float(stats.get("trace_decode_step_s")
+                                            or 0.0),
+                      measured_prefill_s=float(stats.get("trace_prefill_s")
+                                               or 0.0),
+                      measured_d2h_s=float(stats.get("trace_d2h_s") or 0.0))
 
 
 def _resolve(cfg) -> ModelConfig:
@@ -248,6 +261,15 @@ def cosim_from_engine(engine, cfg=None, n_chiplets: int = 64,
                 "spec_acceptance": mix.spec_acceptance,
                 "spec_tokens_per_step": mix.expected_tokens_per_step,
                 "spec_draft_bits": mix.spec_draft_bits}
+    measured = {}
+    if mix.measured_step_s > 0:
+        # the engine ran with the tracer on: carry the measured step
+        # times next to the measured mix, so every simulated
+        # decode_step_s has its Plane-A wall-clock counterpart in the
+        # same record (keys absent when tracing was off — dormancy)
+        measured = {"measured_step_s": mix.measured_step_s,
+                    "measured_prefill_s": mix.measured_prefill_s,
+                    "measured_d2h_s": mix.measured_d2h_s}
     return {"mix": {"requests": mix.requests,
                     "prefill_tokens": mix.prefill_tokens,
                     "decode_tokens": mix.decode_tokens,
@@ -260,6 +282,7 @@ def cosim_from_engine(engine, cfg=None, n_chiplets: int = 64,
                     "effective_batch": mix.effective_batch,
                     "active_slots_hist": dict(mix.active_hist),
                     **spec,
+                    **measured,
                     "episodes": [dataclasses.asdict(e) for e in mix.episodes]},
             "archs": cosim_mix(cfg, mix, n_chiplets, archs, calib=calib,
                                batch=batch)}

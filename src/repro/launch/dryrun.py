@@ -115,12 +115,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         # caches, scan-stacked weights) that do not exist on TPU — they are
         # measured from the HLO and reported separately below.
 
-        ca = compiled.cost_analysis() or {}
-        if isinstance(ca, (list, tuple)):  # older jax returns [dict]
-            ca = ca[0] if ca else {}
         hlo = compiled.as_text()
         from repro.roofline.hlo import (cpu_bf16_promotion_bytes,
-                                        cpu_bf16_promotion_bytes_serving)
+                                        cpu_bf16_promotion_bytes_serving,
+                                        normalize_cost_analysis)
+        ca = normalize_cost_analysis(compiled.cost_analysis())
         if shape.kind == "train":
             promo = cpu_bf16_promotion_bytes(hlo)
         else:
@@ -138,8 +137,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
             t_lower_s=round(t_lower, 2), t_compile_s=round(t_compile, 2),
             n_devices=n_dev, accum=accum,
             memory=mem,
-            xla_cost_analysis={"flops": ca.get("flops", 0.0),
-                               "bytes": ca.get("bytes accessed", 0.0)},
+            xla_cost_analysis=ca,
             roofline=dataclasses.asdict(rep),
         )
         if save_hlo:

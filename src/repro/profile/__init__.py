@@ -1,0 +1,31 @@
+"""Measured-cost calibration plane: profile-and-replay (ROADMAP item 4).
+
+``bench``     — deterministic micro-timer for the real Pallas kernels and
+                the jitted executor step (warmup/compile split, injectable
+                clock, interpret-mode aware on CPU).
+``costmodel`` — affine least-squares fits of phase time in the
+                ``core.traffic`` byte/FLOP terms, with held-out residuals
+                and confidence intervals in a versioned
+                ``CalibrationTable``.
+``calibrate`` — maps fitted rates onto ``simulator.Calib`` rate constants
+                behind an explicit ``calib=`` opt-in, and reports
+                analytical-vs-measured error per phase.
+
+The default analytical path is untouched: nothing here runs unless a
+caller times kernels and passes the resulting ``Calib`` explicitly.
+"""
+from repro.profile.bench import (Sample, Timing, executor_samples,
+                                 interpret_default, kernel_samples, measure)
+from repro.profile.calibrate import (error_bar_rel, measured_calib,
+                                     phase_error_report)
+from repro.profile.costmodel import (CALIBRATION_VERSION, CalibrationTable,
+                                     PhaseFit, build_table, fit_phase,
+                                     fit_samples)
+
+__all__ = [
+    "Sample", "Timing", "measure", "interpret_default",
+    "kernel_samples", "executor_samples",
+    "CALIBRATION_VERSION", "PhaseFit", "CalibrationTable",
+    "fit_phase", "fit_samples", "build_table",
+    "measured_calib", "phase_error_report", "error_bar_rel",
+]

@@ -1,0 +1,356 @@
+"""Deterministic kernel/phase micro-timer — the Plane-A side of the
+measured-cost calibration plane (ROADMAP item 4).
+
+Methodology
+-----------
+Every timed case is a zero-argument jitted callable.  It runs ``warmup``
+calls first — XLA compilation and Pallas tracing happen there and the
+first call's wall time is reported separately as ``compile_s`` — then
+``repeat`` steady-state calls, each synchronised through
+``jax.block_until_ready`` so asynchronous dispatch cannot leak device
+work out of the timed region.  The statistic handed to the cost-model
+fit is the steady-state *minimum*: timing noise on a shared machine is
+strictly additive, so min-of-k is the stable estimator (the same
+best-of-``repeat`` convention the ``benchmarks/perf_*`` drains use).
+
+The clock is injectable (``clock=``), mirroring ``EngineConfig(clock=)``,
+so tests drive the timer with a fake clock and assert the bookkeeping
+deterministically.  On anything that is not a TPU the Pallas kernels run
+through the interpreter (``interpret=True`` — ``interpret_default()``);
+rates fitted there calibrate the interpreter as a backend, which is
+exactly the backend the CPU CI lane replays.
+
+Every :class:`Sample` carries the ``core.traffic`` byte/FLOP terms of
+its invocation next to the measured seconds, so ``profile.costmodel``
+can fit time as an affine model *in the analytical regressors* — the
+whole point of the calibration plane is that Plane B and the fits share
+one vocabulary of terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_config, reduce_config
+from repro.core import traffic
+from repro.core.traffic import Workload
+
+__all__ = [
+    "Timing", "Sample", "measure", "interpret_default",
+    "kernel_samples", "executor_samples",
+]
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode unless a real TPU backend is attached."""
+    return jax.default_backend() != "tpu"
+
+
+def _sync(x):
+    return jax.block_until_ready(x)
+
+
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    """One timed case: compile/trace cost split from steady state."""
+    compile_s: float              # first call (includes jit + Pallas trace)
+    times_s: tuple[float, ...]    # steady-state calls, in order
+
+    @property
+    def best_s(self) -> float:
+        return min(self.times_s)
+
+    @property
+    def median_s(self) -> float:
+        ts = sorted(self.times_s)
+        return ts[len(ts) // 2]
+
+
+def measure(fn: Callable[[], object], *, warmup: int = 1, repeat: int = 3,
+            clock: Callable[[], float] = time.perf_counter,
+            sync: Optional[Callable] = _sync) -> Timing:
+    """Time ``fn`` with the warmup/steady-state split described above."""
+    if warmup < 1 or repeat < 1:
+        raise ValueError("measure needs warmup >= 1 and repeat >= 1")
+    compile_s = 0.0
+    for i in range(warmup):
+        t0 = clock()
+        out = fn()
+        if sync is not None:
+            sync(out)
+        dt = clock() - t0
+        if i == 0:
+            compile_s = dt
+    times = []
+    for _ in range(repeat):
+        t0 = clock()
+        out = fn()
+        if sync is not None:
+            sync(out)
+        times.append(clock() - t0)
+    return Timing(compile_s=compile_s, times_s=tuple(times))
+
+
+@dataclasses.dataclass(frozen=True)
+class Sample:
+    """One timed grid point with its analytical regressors.
+
+    ``bytes_term``/``flops_term`` are computed from the *same*
+    ``core.traffic`` formulas Plane B charges for the matching phase, so
+    a fit against them yields directly comparable effective rates.
+    """
+    kind: str          # phase class ("decode_attn", "prefill_attn", ...)
+    arch: str
+    params: dict       # grid point (batch, kv len, seq, dims, ...)
+    bytes_term: float
+    flops_term: float
+    seconds: float     # steady-state best
+    compile_s: float
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Sample":
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# kernel grid: decode attention (fp / kv8 / kv4), segmented prefill,
+# fused dequant-matmul — the real Pallas kernels, timed
+# ---------------------------------------------------------------------------
+
+def _decode_case(cfg, batch: int, skv: int, kv_bits: int, *,
+                 interpret: bool, key) -> tuple[Callable, float, float]:
+    """Build a jitted decode-attention invocation + its traffic terms."""
+    from repro.kernels.flash_attention.decode import (flash_decode_fwd,
+                                                      flash_decode_quant_fwd)
+    from repro.quant.core import quantize_kv
+
+    Hq, Hkv, hd = cfg.n_heads, max(cfg.n_kv_heads or cfg.n_heads, 1), cfg.head_dim
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (batch, 1, Hq, hd), jnp.bfloat16)
+    k = jax.random.normal(kk, (batch, skv, Hkv, hd), jnp.bfloat16)
+    v = jax.random.normal(kv, (batch, skv, Hkv, hd), jnp.bfloat16)
+    q_pos = jnp.full((batch, 1), skv - 1, jnp.int32)
+    kv_pos = jnp.broadcast_to(jnp.arange(skv, dtype=jnp.int32), (batch, skv))
+    # one KV block per (slot, head): the interpreter's per-grid-point
+    # overhead (full-pool reslicing) is then constant per case and the
+    # steady-state time tracks the streamed bytes linearly — the regime
+    # the affine cost model assumes
+    block_k = min(skv, 1024)
+
+    if kv_bits:
+        k_q, k_s = quantize_kv(k, kv_bits)
+        v_q, v_s = quantize_kv(v, kv_bits)
+
+        def call():
+            return flash_decode_quant_fwd(
+                q, k_q, k_s, v_q, v_s, kv_bits=kv_bits, q_pos=q_pos,
+                kv_pos=kv_pos, block_k=block_k, interpret=interpret)
+    else:
+        def call():
+            return flash_decode_fwd(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                                    block_k=block_k, interpret=interpret)
+
+    # regressors: the per-layer KV stream Plane B charges for score_dec —
+    # traffic.kv_cache_bytes_per_layer at the pool depth, once per slot
+    w = Workload.from_config(cfg, seq_len=skv, kv_bits=kv_bits or 16)
+    bytes_term = batch * traffic.kv_cache_bytes_per_layer(w, skv)
+    flops_term = 4.0 * batch * Hq * skv * hd       # QK^T + PV, one query row
+    return jax.jit(call), bytes_term, flops_term
+
+
+def _prefill_case(cfg, batch: int, seq: int, *, seg_len: int,
+                  interpret: bool, key) -> tuple[Callable, float, float]:
+    """Segmented (packed-prompt) prefill attention + traffic terms."""
+    from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+    Hq, hd = cfg.n_heads, cfg.head_dim
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (batch, Hq, seq, hd), jnp.bfloat16)
+    k = jax.random.normal(kk, (batch, Hq, seq, hd), jnp.bfloat16)
+    v = jax.random.normal(kv, (batch, Hq, seq, hd), jnp.bfloat16)
+    seg = jnp.broadcast_to(
+        jnp.arange(seq, dtype=jnp.int32) // seg_len, (batch, seq))
+    # single-block sweep per (stream, head) — same rationale as the
+    # decode case: constant grid overhead, work tracks the S^2 term
+    blk = min(seq, 512)
+
+    def call():
+        return flash_attention_fwd(q, k, v, segments=seg, causal=True,
+                                   block_q=blk, block_k=blk,
+                                   interpret=interpret)
+
+    # regressors: the full-sequence score phase transformer_phases
+    # charges.  Segmentation only tightens the mask *inside* computed
+    # blocks — the kernel still sweeps the causal S^2 block grid, so the
+    # work term is quadratic in S regardless of how many prompts are
+    # packed (causal halving is a constant; constants live in the rate)
+    w = Workload.from_config(cfg, seq_len=seq)
+    score = next(p for p in traffic.transformer_phases(w)
+                 if p.name == "score")
+    flops_term = batch * score.sm_flops
+    bytes_term = batch * traffic.phase_bytes(score)
+    return jax.jit(call), bytes_term, flops_term
+
+
+def _qmm_case(cfg, m: int, k_dim: int, n_dim: int, bits: int, *,
+              interpret: bool, key) -> tuple[Callable, float, float]:
+    """Fused dequant-matmul (weight-streaming regime) + traffic terms."""
+    from repro.quant.core import quantize
+    from repro.quant.kernel import quant_matmul_pallas
+
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (m, k_dim), jnp.bfloat16)
+    qt = quantize(jax.random.normal(kw, (k_dim, n_dim), jnp.float32), bits)
+    # single-block invocation (same rationale as the attention cases):
+    # constant grid overhead, steady-state time tracks the streamed
+    # weight bytes linearly
+    bm, bn, bk = min(8, m), min(512, n_dim), min(512, k_dim)
+
+    def call():
+        return quant_matmul_pallas(x, qt.q, qt.scale, bits=bits,
+                                   bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+    # regressors: the streamed-weight bytes Plane B charges for a
+    # quantised (K, N) projection (codes + f32 scale plane)
+    w = Workload.from_config(cfg, seq_len=m, weight_bits=bits)
+    bytes_term = w.weight_dram_bytes(k_dim, n_dim)
+    flops_term = 2.0 * m * k_dim * n_dim
+    return jax.jit(call), bytes_term, flops_term
+
+
+def kernel_samples(archs: Sequence[str] = ("bert-base", "gpt-j"), *,
+                   batches: Sequence[int] = (1, 2),
+                   kv_lens: Sequence[int] = (128, 256, 384),
+                   kv_bits: Sequence[int] = (0, 8, 4),
+                   prefill_lens: Sequence[int] = (128, 256),
+                   seg_len: int = 64,
+                   qmm_shapes: Sequence[tuple[int, int]] = ((128, 256),
+                                                           (256, 256),
+                                                           (256, 512)),
+                   qmm_m: int = 8,
+                   qmm_bits: Sequence[int] = (8,),
+                   warmup: int = 1, repeat: int = 3,
+                   clock: Callable[[], float] = time.perf_counter,
+                   interpret: Optional[bool] = None,
+                   seed: int = 0) -> list[Sample]:
+    """Time the real Pallas kernels across a zoo x batch x KV-position
+    grid and return one :class:`Sample` per grid point.
+
+    Kinds produced: ``decode_attn`` / ``decode_attn_kv8`` /
+    ``decode_attn_kv4`` (pool depth = the KV-position axis),
+    ``prefill_attn`` (segmented packed prompts), ``dequant_matmul``.
+    """
+    interp = interpret_default() if interpret is None else interpret
+    key = jax.random.PRNGKey(seed)
+    out: list[Sample] = []
+    for arch in archs:
+        cfg = reduce_config(get_config(arch))
+        for bits in kv_bits:
+            kind = "decode_attn" + (f"_kv{bits}" if bits else "")
+            for batch in batches:
+                for skv in kv_lens:
+                    key, sub = jax.random.split(key)
+                    fn, b, f = _decode_case(cfg, batch, skv, bits,
+                                            interpret=interp, key=sub)
+                    t = measure(fn, warmup=warmup, repeat=repeat, clock=clock)
+                    out.append(Sample(kind, arch,
+                                      {"batch": batch, "kv_len": skv,
+                                       "kv_bits": bits or 16},
+                                      b, f, t.best_s, t.compile_s))
+        for batch in batches:
+            for seq in prefill_lens:
+                key, sub = jax.random.split(key)
+                fn, b, f = _prefill_case(cfg, batch, seq, seg_len=seg_len,
+                                         interpret=interp, key=sub)
+                t = measure(fn, warmup=warmup, repeat=repeat, clock=clock)
+                out.append(Sample("prefill_attn", arch,
+                                  {"batch": batch, "seq": seq,
+                                   "seg_len": seg_len},
+                                  b, f, t.best_s, t.compile_s))
+        for bits in qmm_bits:
+            for (k_dim, n_dim) in qmm_shapes:
+                key, sub = jax.random.split(key)
+                fn, b, f = _qmm_case(cfg, qmm_m, k_dim, n_dim, bits,
+                                     interpret=interp, key=sub)
+                t = measure(fn, warmup=warmup, repeat=repeat, clock=clock)
+                out.append(Sample("dequant_matmul", arch,
+                                  {"m": qmm_m, "k": k_dim, "n": n_dim,
+                                   "bits": bits},
+                                  b, f, t.best_s, t.compile_s))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# executor grid: the jitted fused decode-step program, timed end to end
+# ---------------------------------------------------------------------------
+
+def executor_samples(archs: Sequence[str] = ("bert-base",), *,
+                     batches: Sequence[int] = (1, 2, 4),
+                     kv_len: int = 128, prompt_len: int = 16,
+                     impl: str = "ref",
+                     warmup: int = 1, repeat: int = 3,
+                     steps_per_call: int = 8,
+                     clock: Callable[[], float] = time.perf_counter,
+                     seed: int = 0) -> list[Sample]:
+    """Time the engine's jitted ``fused_step`` program (decode step over
+    the slot pool — the thing a serving decode iteration actually runs).
+
+    The buffers are donated by ``jit_step``, so each timed call chains
+    the returned cache/state into the next; slot positions advance one
+    token per step and the byte regressor is evaluated at the midpoint
+    of the timed window.  Each timed call runs ``steps_per_call`` chained
+    steps and reports the per-step time: a single step is sub-millisecond
+    on CPU, so amortising scheduler jitter over the chain is what keeps
+    the latency-floor fit's residuals inside the pinned tolerance.
+    """
+    import repro.models.transformer as T
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    out: list[Sample] = []
+    for arch in archs:
+        cfg = reduce_config(get_config(arch))
+        for batch in batches:
+            params = T.init_params(cfg, jax.random.PRNGKey(seed),
+                                   param_dtype=jnp.bfloat16)
+            eng = ServingEngine(cfg, params, EngineConfig(
+                max_batch=batch, kv_len=kv_len,
+                max_new_tokens=kv_len - prompt_len - 2,
+                impl=impl, fused=True, packed=True, seed=seed))
+            for i in range(batch):
+                eng.submit([(7 * i + j) % 97 + 1 for j in range(prompt_len)])
+            eng.step()                      # admit + first decode step
+            calls = {"n": 0}
+
+            def call(calls=calls, eng=eng):
+                calls["n"] += 1
+                packed = None
+                for _ in range(steps_per_call):
+                    c, s, packed = eng.executor.fused_step(eng.pool.cache,
+                                                           eng.pool.state)
+                    eng.pool.cache, eng.pool.state = c, s
+                return packed
+
+            t = measure(call, warmup=warmup, repeat=repeat, clock=clock)
+            t = Timing(compile_s=t.compile_s,
+                       times_s=tuple(x / steps_per_call for x in t.times_s))
+            # positions at the midpoint of the steady-state window
+            mid = (prompt_len + 1
+                   + steps_per_call * (warmup + repeat // 2))
+            w = Workload.from_config(cfg, seq_len=kv_len)
+            phases = traffic.decode_step_phases(w, [mid] * batch,
+                                                batch=batch)
+            bytes_term = traffic.total_traffic_bytes(phases)
+            flops_term = sum(p.repeat * (p.sm_flops + p.reram_flops)
+                             for p in phases)
+            out.append(Sample("executor_step", arch,
+                              {"batch": batch, "kv_len": kv_len,
+                               "pos": mid, "impl": impl},
+                              bytes_term, flops_term, t.best_s, t.compile_s))
+    return out

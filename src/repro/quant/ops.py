@@ -10,7 +10,6 @@ fp weights never in HBM), a reference dequant+matmul elsewhere.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.parallel import constrain
 from repro.quant import kernel as _kernel

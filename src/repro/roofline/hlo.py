@@ -347,6 +347,50 @@ def analyze_hlo_text(text: str, num_devices: int = 1) -> HloCost:
     return cost
 
 
+_OPERAND_BYTES_RE = re.compile(r"^bytes accessed(\d+)\{\}$")
+_UTILIZATION_RE = re.compile(r"^utilization(\d+)\{\}$")
+
+
+def normalize_cost_analysis(ca) -> dict:
+    """Normalise ``Compiled.cost_analysis()`` into a structured dict.
+
+    XLA's estimate arrives as a flat property map whose shape varies by
+    jax version and backend: ``None`` when the backend doesn't implement
+    it, a one-element list on older jax, and per-operand keys spelled
+    ``"bytes accessed0{}"`` / ``"bytes accessedout{}"``.  Returns::
+
+        {"flops": float, "bytes": float, "transcendentals": float,
+         "operand_bytes": {0: ..., 1: ...}, "output_bytes": float,
+         "utilization": {0: ..., 1: ...}}
+
+    Missing keys become 0.0 / empty maps — an empty module (or a backend
+    with no cost model) yields the all-zero record, never a KeyError.
+    jax-free on purpose: the parsing is testable without a compile.
+    """
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else None
+    if not isinstance(ca, dict):
+        ca = {}
+    operand_bytes: dict[int, float] = {}
+    utilization: dict[int, float] = {}
+    for key, val in ca.items():
+        m = _OPERAND_BYTES_RE.match(key)
+        if m:
+            operand_bytes[int(m.group(1))] = float(val)
+            continue
+        m = _UTILIZATION_RE.match(key)
+        if m:
+            utilization[int(m.group(1))] = float(val)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "operand_bytes": operand_bytes,
+        "output_bytes": float(ca.get("bytes accessedout{}", 0.0)),
+        "utilization": utilization,
+    }
+
+
 _CONVERT_RE = re.compile(
     r"%?([\w.\-]+)\s*=\s*f32(\[[\d,]*\])(?:\{[^}]*\})?\s+convert\(%?([\w.\-]+)\)")
 

@@ -121,6 +121,14 @@ class EngineConfig:
     #   arithmetic — injectable so deadline/eviction tests advance a fake
     #   clock instead of sleeping.  Every stats() latency is a difference
     #   of clock readings, so any monotonic float-seconds source works.
+    trace: bool = False           # per-iteration wall-clock tracer
+    #   (repro.profile measured-cost hook): every decode iteration
+    #   appends {"prefill_s", "decode_s", "d2h_s", "step_s", "iters"} to
+    #   ``ServingEngine.trace`` and stats() surfaces aggregates under
+    #   trace_* keys — present only when tracing, so the dormant
+    #   engine's stats() stay bit-identical (the spec_k contract).
+    #   Durations come from time.perf_counter (real wall clock),
+    #   independent of ``clock=``, which fake-clock tests may drive.
 
 
 class EngineStallError(RuntimeError):
@@ -259,6 +267,10 @@ class ServingEngine:
         # measured slot-pool utilisation the Plane-B co-simulation batches
         # its decode steps with (repro.core.cosim.mix_from_stats)
         self.active_slot_hist: collections.Counter = collections.Counter()
+        # per-iteration wall-clock records (EngineConfig(trace=)) — one
+        # dict per decode iteration; the measured step times the
+        # calibration plane (repro.profile) replays through Plane B
+        self.trace: list[dict] = []
 
         # packed-stream / chunk budget (also the padding quantum)
         S = ecfg.kv_len
@@ -529,9 +541,19 @@ class ServingEngine:
             # mid-prefill-only iterations just advance their chunks)
             self._stall_tokens = 0
             return occupied
+        tr = self.ecfg.trace
+        td0 = time.perf_counter() if tr else 0.0
         self.pool.cache, self.pool.state, packed = self.executor.fused_step(
             self.pool.cache, self.pool.state)
+        td1 = time.perf_counter() if tr else 0.0
         arr = self._fetch(packed)                 # ONE d2h transfer
+        if tr:
+            # dispatch is asynchronous: the d2h fetch waits on the device
+            # step, so decode_s + d2h_s is the true step wall time
+            td2 = time.perf_counter()
+            self.trace.append({"prefill_s": dt, "decode_s": td1 - td0,
+                               "d2h_s": td2 - td1, "step_s": td2 - t0,
+                               "iters": int(arr.shape[0])})
         self.decode_steps += arr.shape[0]
         self.max_stall_tokens = max(self.max_stall_tokens, self._stall_tokens)
         self._stall_tokens = 0
@@ -588,12 +610,20 @@ class ServingEngine:
         if occupied == len(self.pool.prefilling):
             self._stall_tokens = 0
             return occupied
+        tr = self.ecfg.trace
+        td0 = time.perf_counter() if tr else 0.0
         self.pool.cache, dcache, self.pool.state, packed = \
             self.executor.spec_step(self.pool.cache, self.pool.state,
                                     self.pool.draft_cache)
+        td1 = time.perf_counter() if tr else 0.0
         if self.pool.draft_cache is not None:
             self.pool.draft_cache = dcache
         arr = self._fetch(packed)                 # ONE d2h transfer
+        if tr:
+            td2 = time.perf_counter()
+            self.trace.append({"prefill_s": dt, "decode_s": td1 - td0,
+                               "d2h_s": td2 - td1, "step_s": td2 - t0,
+                               "iters": 1})
         self.decode_steps += 1                    # one target weight stream
         self.spec_steps += 1
         self.max_stall_tokens = max(self.max_stall_tokens, self._stall_tokens)
@@ -654,12 +684,22 @@ class ServingEngine:
         self.active_slot_hist[len(live)] += 1
         tokens = jnp.asarray(host["last_token"])
         pos = jnp.asarray(host["slot_pos"])
+        tr = self.ecfg.trace
+        td0 = time.perf_counter() if tr else 0.0
         logits, self.pool.cache = self.executor.decode(self.pool.cache,
                                                        tokens, pos)
+        td1 = time.perf_counter() if tr else 0.0
         self.decode_steps += 1
         self.max_stall_tokens = max(self.max_stall_tokens, self._stall_tokens)
         self._stall_tokens = 0
         nxt, self._key = self.executor.sample_host(logits, self._key)
+        if tr:
+            # the host-path "d2h" is the sampling round-trip that waits
+            # on the decode dispatch — same split as the fused path
+            td2 = time.perf_counter()
+            self.trace.append({"prefill_s": dt, "decode_s": td1 - td0,
+                               "d2h_s": td2 - td1, "step_s": td2 - t0,
+                               "iters": 1})
         now = self._now()
         for i in live:
             req = self.pool.slot_req[i]
@@ -1033,6 +1073,28 @@ class ServingEngine:
                     self.spec_committed * self.ecfg.spec_k / self.spec_drafted
                     if self.spec_drafted else None),
             }
+        # measured per-iteration wall clock (EngineConfig(trace=)) — keys
+        # present only when tracing, mirroring the spec_k dormancy
+        # contract; empty sample classes report None, never a fake 0.0
+        trace: dict = {}
+        if self.ecfg.trace:
+            steps = [t["decode_s"] + t["d2h_s"] for t in self.trace]
+            step_p = _percentiles(steps)
+            trace = {
+                "trace_iterations": len(self.trace),
+                "trace_prefill_s": float(sum(t["prefill_s"]
+                                             for t in self.trace)),
+                "trace_decode_s": float(sum(t["decode_s"]
+                                            for t in self.trace)),
+                "trace_d2h_s": float(sum(t["d2h_s"] for t in self.trace)),
+                # wall time of one decode iteration — dispatch plus the
+                # d2h fetch that waits on it: the measured analogue of
+                # the simulator's decode_step_s
+                "trace_decode_step_s": (float(np.mean(steps))
+                                        if steps else None),
+                "trace_decode_step_p50_s": step_p[0],
+                "trace_decode_step_p95_s": step_p[1],
+            }
         return {
             "finished": len(done),
             "tokens": toks,
@@ -1080,5 +1142,6 @@ class ServingEngine:
             # measured continuous-batching utilisation of the slot pool
             "active_slots_hist": dict(sorted(self.active_slot_hist.items())),
             **spec,
+            **trace,
             **self._failure_stats(),
         }

@@ -1,0 +1,311 @@
+"""Calibration plane: micro-timer determinism, cost-model fits and their
+pinned residual discipline, the versioned table, the explicit ``calib=``
+opt-in (default path bit-identical), and the engine tracer contract."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduce_config
+from repro.core.cosim import cosim_from_engine, mix_from_stats
+from repro.core.simulator import CALIB, simulate_generation
+from repro.core.traffic import Workload
+from repro.models import transformer as T
+from repro.profile.bench import Sample, Timing, measure
+from repro.profile.calibrate import (PLANE_MAP, error_bar_rel,
+                                     measured_calib, phase_error_report)
+from repro.profile.costmodel import (CALIBRATION_VERSION, DEFAULT_TERMS,
+                                     CalibrationTable, build_table,
+                                     fit_phase, fit_samples)
+from repro.serving.engine import EngineConfig, ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# bench.measure: the micro-timer
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    """Deterministic clock: each call advances by the next scripted dt."""
+
+    def __init__(self, dts):
+        self.t, self.dts = 0.0, list(dts)
+        self.i = 0
+
+    def __call__(self):
+        # measure() calls the clock twice per timed call (start/stop):
+        # advance only on the stop edge
+        if self.i % 2 == 1:
+            self.t += self.dts.pop(0)
+        self.i += 1
+        return self.t
+
+
+def test_measure_separates_compile_from_steady_state():
+    clk = FakeClock([1.0, 0.25, 0.5, 0.125])   # warmup, then 3 repeats
+    calls = []
+    t = measure(lambda: calls.append(1), warmup=1, repeat=3,
+                clock=clk, sync=None)
+    assert len(calls) == 4                     # 1 warmup + 3 timed
+    assert t.compile_s == 1.0                  # first call absorbs compile
+    assert t.times_s == (0.25, 0.5, 0.125)
+    assert t.best_s == 0.125                   # min-of-k steady state
+    assert t.median_s == 0.25
+
+
+def test_measure_rejects_degenerate_loops():
+    with pytest.raises(ValueError):
+        measure(lambda: None, warmup=0, repeat=3, sync=None)
+    with pytest.raises(ValueError):
+        measure(lambda: None, warmup=1, repeat=0, sync=None)
+
+
+def test_timing_best_and_median():
+    t = Timing(compile_s=1.0, times_s=(0.5, 0.25))
+    assert t.best_s == 0.25
+    assert t.median_s == 0.5       # upper median on even-length windows
+
+
+# ---------------------------------------------------------------------------
+# costmodel: fits, holdout determinism, fallbacks, versioned table
+# ---------------------------------------------------------------------------
+
+def _mk(kind, xs, ys, *, flops=None):
+    """Synthetic sample grid: bytes regressor = xs, seconds = ys."""
+    return [Sample(kind, "synthetic", {"i": i}, x,
+                   (flops[i] if flops else 2.0 * x), y, 0.0)
+            for i, (x, y) in enumerate(zip(xs, ys))]
+
+
+def test_fit_phase_recovers_exact_affine_model():
+    xs = [1e6 * k for k in range(1, 10)]
+    ys = [5e-5 + x / 2e9 for x in xs]           # 50us launch + 2 GB/s
+    f = fit_phase(_mk("decode_attn", xs, ys))
+    assert f.term == "bytes"
+    assert f.intercept_s == pytest.approx(5e-5, rel=1e-9)
+    assert f.rate == pytest.approx(2e9, rel=1e-9)
+    assert f.r2 == pytest.approx(1.0)
+    assert f.n_heldout == 3 and f.n_train == 6
+    assert f.heldout_max_rel_err == pytest.approx(0.0, abs=1e-9)
+    assert f.predict(4e6) == pytest.approx(5e-5 + 4e6 / 2e9)
+    # flops_rate converts through the mean FLOPs-per-byte of the grid
+    assert f.flops_rate == pytest.approx(2.0 * f.rate)
+
+
+def test_fit_phase_holdout_split_is_deterministic():
+    xs = [1e6 * k for k in range(1, 10)]
+    ys = [5e-5 + x / 2e9 for x in xs]
+    a = fit_phase(_mk("decode_attn", xs, ys))
+    # shuffled input, same split: ordering is by term magnitude, not by
+    # arrival order
+    idx = [7, 2, 5, 0, 8, 1, 6, 3, 4]
+    b = fit_phase(_mk("decode_attn", [xs[i] for i in idx],
+                      [ys[i] for i in idx]))
+    assert a == b
+    # small grids (< 2*holdout_every) train on everything
+    c = fit_phase(_mk("decode_attn", xs[:5], ys[:5]))
+    assert c.n_heldout == 0 and c.n_train == 5
+
+
+def test_fit_phase_negative_intercept_refits_through_origin():
+    # noise tilts OLS to a negative intercept; the refit must go through
+    # the origin, not clamp-and-keep the stale slope
+    xs = [1.0, 2.0, 3.0]
+    ys = [0.9, 2.1, 3.3]                        # OLS intercept < 0
+    f = fit_phase(_mk("decode_attn", xs, ys))
+    assert f.intercept_s == 0.0
+    sxx = sum(x * x for x in xs)
+    slope = sum(x * y for x, y in zip(xs, ys)) / sxx
+    assert f.rate == pytest.approx(1.0 / slope)
+
+
+def test_fit_phase_latency_floor_fallback():
+    # flat times across a growing grid (vectorised-away batch): the fit
+    # keeps the floor as intercept and an effectively infinite rate
+    xs = [1e6, 2e6, 4e6]
+    ys = [1e-3, 1e-3, 1e-3]
+    f = fit_phase(_mk("executor_step", xs, ys))
+    assert f.intercept_s == pytest.approx(1e-3, rel=0.35)
+    assert f.predict(4e6) == pytest.approx(1e-3, rel=0.05)
+    assert f.heldout_max_rel_err < 0.05
+
+
+def test_fit_phase_input_validation():
+    with pytest.raises(ValueError):
+        fit_phase([])
+    mixed = _mk("decode_attn", [1.0], [1.0]) + _mk("prefill_attn",
+                                                   [1.0], [1.0])
+    with pytest.raises(ValueError):
+        fit_phase(mixed)
+    with pytest.raises(ValueError):
+        fit_phase(_mk("decode_attn", [1.0, 2.0], [1.0, 2.0]),
+                  term="joules")
+
+
+def test_fit_samples_groups_by_kind_and_table_roundtrips():
+    xs = [1e6 * k for k in range(1, 7)]
+    samples = (_mk("decode_attn", xs, [x / 1e9 for x in xs])
+               + _mk("prefill_attn", xs, [1e-4 + x / 5e9 for x in xs]))
+    fits = fit_samples(samples)
+    assert set(fits) == {"decode_attn", "prefill_attn"}
+    # prefill fits against flops (= 2*bytes in the synthetic grid)
+    assert fits["prefill_attn"].term == "flops"
+
+    table = build_table(samples, backend="cpu", interpret=True,
+                        meta={"note": "synthetic"})
+    again = CalibrationTable.from_json(table.to_json())
+    assert again.fits == table.fits
+    assert again.backend == "cpu" and again.interpret is True
+    assert again.meta == {"note": "synthetic"}
+    assert table.error_bar_rel == max(f.heldout_max_rel_err
+                                      for f in table.fits.values())
+    assert error_bar_rel(table) == table.error_bar_rel
+
+
+def test_table_version_mismatch_raises():
+    d = build_table(_mk("decode_attn", [1e6, 2e6], [1e-3, 2e-3]),
+                    backend="cpu", interpret=True).to_json()
+    d["version"] = CALIBRATION_VERSION + 1
+    with pytest.raises(ValueError, match="re-run the profiler"):
+        CalibrationTable.from_json(d)
+
+
+def test_sample_json_roundtrip():
+    s = Sample("decode_attn", "bert-base", {"batch": 2}, 1e6, 2e6,
+               3.5e-4, 1.2e-2)
+    assert Sample.from_json(s.to_json()) == s
+
+
+# ---------------------------------------------------------------------------
+# calibrate: the explicit opt-in seam
+# ---------------------------------------------------------------------------
+
+def _synthetic_table():
+    xs = [1e6 * k for k in range(1, 7)]
+    samples = []
+    for kind in DEFAULT_TERMS:
+        rate = {"prefill_attn": 5e9}.get(kind, 1e9)
+        term = DEFAULT_TERMS[kind]
+        ys = [1e-5 + x / rate for x in xs]
+        if term == "flops":     # seconds must follow the fitted regressor
+            samples += _mk(kind, [x / 2.0 for x in xs], ys,
+                           flops=[x for x in xs])
+        else:
+            samples += _mk(kind, xs, ys)
+    return build_table(samples, backend="cpu", interpret=True)
+
+
+def test_measured_calib_is_opt_in_and_default_untouched():
+    table = _synthetic_table()
+    mcal = measured_calib(table)
+    # the default constants object is never mutated
+    assert CALIB.sm_efficiency == dataclasses.replace(CALIB).sm_efficiency
+    assert mcal is not CALIB
+    assert mcal.sm_efficiency != CALIB.sm_efficiency
+    assert mcal.reram_fill != CALIB.reram_fill
+    assert 0.0 < mcal.sm_efficiency <= 1.0
+    assert 0.0 < mcal.reram_fill <= 1.0
+
+    # default-path bit-identity: simulate_generation without calib= is
+    # unchanged by the existence of a table
+    w = Workload.from_config(get_config("gpt-j"), seq_len=128)
+    base = simulate_generation(w, 64, 128, 16, arch="2.5D-HI")
+    again = simulate_generation(w, 64, 128, 16, arch="2.5D-HI",
+                                calib=CALIB)
+    assert (base.ttft_s, base.decode_step_s, base.decode_tok_s) \
+        == (again.ttft_s, again.decode_step_s, again.decode_tok_s)
+    measured = simulate_generation(w, 64, 128, 16, arch="2.5D-HI",
+                                   calib=mcal)
+    assert measured.decode_step_s != base.decode_step_s
+
+
+def test_measured_calib_partial_table_keeps_base_constants():
+    # a table with only SM kinds must leave reram_fill at the base value
+    xs = [1e6 * k for k in range(1, 7)]
+    t = build_table(_mk("decode_attn", xs, [x / 1e9 for x in xs]),
+                    backend="cpu", interpret=True)
+    mcal = measured_calib(t)
+    assert mcal.sm_efficiency != CALIB.sm_efficiency
+    assert mcal.reram_fill == CALIB.reram_fill
+
+
+def test_phase_error_report_covers_every_fit():
+    table = _synthetic_table()
+    rep = phase_error_report(table)
+    assert set(rep) == set(table.fits)
+    for kind, row in rep.items():
+        assert row["plane"] == PLANE_MAP[kind]
+        assert row["measured_s"] > 0 and row["analytical_s"] > 0
+        # log-gap is finite and consistent with the two times
+        expect = np.log10(row["measured_s"] / row["analytical_s"])
+        assert row["log10_measured_over_analytical"] == pytest.approx(expect)
+
+
+# ---------------------------------------------------------------------------
+# engine tracer: dormant by default, measured step times when on
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_pair():
+    cfg = reduce_config(get_config("qwen2.5-3b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(0),
+                           param_dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8) for _ in range(5)]
+    engines = []
+    for trace in (False, True):
+        eng = ServingEngine(cfg, params, EngineConfig(
+            max_batch=3, kv_len=48, max_new_tokens=6, impl="ref",
+            trace=trace))
+        for p in prompts:
+            eng.submit(p)
+        eng.run_until_drained()
+        engines.append(eng)
+    return engines
+
+
+def test_tracer_keys_dormant_unless_enabled(traced_pair):
+    off, on = traced_pair
+    s_off, s_on = off.stats(), on.stats()
+    assert not any(k.startswith("trace_") for k in s_off)
+    for key in ("trace_iterations", "trace_prefill_s", "trace_decode_s",
+                "trace_d2h_s", "trace_decode_step_s",
+                "trace_decode_step_p50_s", "trace_decode_step_p95_s"):
+        assert key in s_on, key
+    assert s_on["trace_iterations"] == len(on.trace) >= 1
+    assert s_on["trace_decode_step_s"] > 0
+
+
+def test_tracer_does_not_perturb_outputs_or_stats(traced_pair):
+    off, on = traced_pair
+    outs_off = sorted((r.uid, tuple(r.output)) for r in off.finished)
+    outs_on = sorted((r.uid, tuple(r.output)) for r in on.finished)
+    assert outs_off == outs_on
+    s_off, s_on = off.stats(), on.stats()
+    # identical key surface apart from trace_* (wall-clock-derived values
+    # like tokens_per_s legitimately differ between two real drains) and
+    # identical deterministic counters
+    assert {k for k in s_on if not k.startswith("trace_")} == set(s_off)
+    for key in ("requests", "decode_steps", "prefill_tokens",
+                "decode_tokens"):
+        if key in s_off:
+            assert s_on[key] == s_off[key], key
+
+
+def test_mix_and_cosim_carry_measured_step_times(traced_pair):
+    off, on = traced_pair
+    mix_off = mix_from_stats(off.stats())
+    mix_on = mix_from_stats(on.stats())
+    assert mix_off.measured_step_s == 0.0      # tracing off -> all zero
+    assert mix_on.measured_step_s > 0
+    assert mix_on.measured_prefill_s > 0
+
+    full = get_config("qwen2.5-3b")
+    rec_off = cosim_from_engine(off, cfg=full, n_chiplets=64)
+    rec_on = cosim_from_engine(on, cfg=full, n_chiplets=64)
+    assert "measured_step_s" not in rec_off["mix"]
+    assert rec_on["mix"]["measured_step_s"] == mix_on.measured_step_s
+    # Plane-B replay itself is identical: measured wall-clock annotates,
+    # never re-prices
+    assert rec_off["archs"] == rec_on["archs"]

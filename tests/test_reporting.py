@@ -144,7 +144,66 @@ def test_report_main_tolerates_missing_experiments_dir(monkeypatch,
     assert "Crash recovery" in captured.out
     assert "no BENCH_recovery.json" in captured.out
     assert "no BENCH_resilience.json" in captured.out
+    assert "Measured-cost calibration" in captured.out
+    assert "no BENCH_calib.json" in captured.out
     assert "directory missing" in captured.err + captured.out
+
+
+def test_calib_table_missing_and_malformed(monkeypatch, tmp_path):
+    from benchmarks.report import calib_table
+    _patch_experiments(monkeypatch, tmp_path)
+    assert "no BENCH_calib.json" in calib_table()
+    (tmp_path / "BENCH_calib.json").write_text("{not json",
+                                               encoding="utf-8")
+    assert "malformed" in calib_table()
+
+
+def test_calib_table_renders_record_without_cosim(monkeypatch, tmp_path):
+    """Renders the fit table and error bar; with no BENCH_cosim.json next
+    to it, the headline pairing degrades to a notice, not a crash."""
+    import json
+
+    from benchmarks.report import calib_table
+    _patch_experiments(monkeypatch, tmp_path)
+    fit = {"kind": "decode_attn", "term": "bytes", "intercept_s": 1e-5,
+           "rate": 1e9, "rate_ci95_rel": 0.1, "r2": 0.99, "n_train": 6,
+           "n_heldout": 3, "heldout_max_rel_err": 0.12,
+           "heldout_mean_rel_err": 0.05, "flops_per_unit": 2.0,
+           "ref_term": 1e6, "ref_seconds": 1e-3}
+    err = {"plane": "sm", "term": "bytes", "ref_term": 1e6,
+           "measured_s": 1e-3, "fit_rel_err_at_ref": 0.01,
+           "analytical_s": 1e-4, "log10_measured_over_analytical": 1.0,
+           "intercept_s": 1e-5, "rate": 1e9, "rate_ci95_rel": 0.1,
+           "heldout_max_rel_err": 0.12, "heldout_mean_rel_err": 0.05,
+           "n_train": 6, "n_heldout": 3}
+    rec = {
+        "bench": "calib", "backend": "cpu", "interpret": True,
+        "smoke": True, "tolerance_rel": 0.75, "n_samples": 9,
+        "error_bar_rel": 0.12,
+        "table": {"version": 1, "backend": "cpu", "interpret": True,
+                  "meta": {}, "fits": {"decode_attn": fit}},
+        "phase_errors": {"decode_attn": err},
+        "calib": {"default": {"sm_efficiency": 1e-2, "reram_fill": 3e-4},
+                  "measured": {"sm_efficiency": 1e-4,
+                               "reram_fill": 1e-5}},
+        "cosim": {"model": "gpt-j", "chiplets": 64,
+                  "default": {"ttft_ms": 100.0, "decode_step_ms": 46.0,
+                              "decode_tok_s": 170.0},
+                  "measured": {"ttft_ms": 200.0, "decode_step_ms": 92.0,
+                               "decode_tok_s": 85.0},
+                  "decode_step_rel_delta": 1.0},
+        "engine_trace": {"trace_iterations": 5, "trace_prefill_s": 0.1,
+                         "trace_decode_s": 0.2, "trace_d2h_s": 0.01,
+                         "trace_decode_step_s": 0.04,
+                         "trace_decode_step_p50_s": 0.04,
+                         "trace_decode_step_p95_s": 0.05,
+                         "mix_measured_step_s": 0.04},
+    }
+    (tmp_path / "BENCH_calib.json").write_text(json.dumps(rec),
+                                               encoding="utf-8")
+    out = calib_table()
+    assert "decode_attn" in out and "±12%" in out
+    assert "no BENCH_cosim.json" in out
 
 
 def test_resilience_table_renders_full_record(monkeypatch, tmp_path):

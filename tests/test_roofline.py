@@ -1,9 +1,11 @@
 """HLO-text analyzer unit tests against hand-written HLO, plus roofline
-term arithmetic."""
+term arithmetic, the structured cost_analysis normaliser, and the
+walked-HLO-vs-traffic-model byte agreement pin."""
 import numpy as np
+import pytest
 
 from repro.roofline.analysis import V5E, roofline_terms
-from repro.roofline.hlo import analyze_hlo_text
+from repro.roofline.hlo import analyze_hlo_text, normalize_cost_analysis
 
 HLO_DOT = """
 HloModule test
@@ -111,3 +113,91 @@ ENTRY %main (p: f32[4096,4096]) -> f32[4096,4096] {
     rep = roofline_terms(hlo, arch="x", shape="y", mesh_name="single",
                          n_devices=1, model_flops=1.0)
     assert rep.bottleneck == "memory"
+
+
+# ---------------------------------------------------------------------------
+# normalize_cost_analysis: the dry-run's structured per-op estimate
+# ---------------------------------------------------------------------------
+
+_ZERO_CA = {"flops": 0.0, "bytes": 0.0, "transcendentals": 0.0,
+            "operand_bytes": {}, "output_bytes": 0.0, "utilization": {}}
+
+
+def test_normalize_cost_analysis_none_and_empty():
+    """A backend with no cost model (None), an empty module ({}), and the
+    older-jax empty list all normalise to the same all-zero record."""
+    assert normalize_cost_analysis(None) == _ZERO_CA
+    assert normalize_cost_analysis({}) == _ZERO_CA
+    assert normalize_cost_analysis([]) == _ZERO_CA
+    assert normalize_cost_analysis(()) == _ZERO_CA
+
+
+def test_normalize_cost_analysis_structured():
+    ca = {"flops": 1056.0, "bytes accessed": 1152.0,
+          "bytes accessed0{}": 640.0, "bytes accessed1{}": 384.0,
+          "bytes accessedout{}": 256.0,
+          "utilization0{}": 2.0, "utilization1{}": 2.0}
+    d = normalize_cost_analysis(ca)
+    assert d["flops"] == 1056.0 and d["bytes"] == 1152.0
+    assert d["operand_bytes"] == {0: 640.0, 1: 384.0}
+    assert d["output_bytes"] == 256.0
+    assert d["utilization"] == {0: 2.0, 1: 2.0}
+    # older jax wraps the same map in a one-element list
+    assert normalize_cost_analysis([ca]) == d
+
+
+def test_normalize_cost_analysis_missing_keys():
+    """Partial maps (some backends omit operand/output breakdowns) fill
+    with zeros instead of raising."""
+    d = normalize_cost_analysis({"flops": 7.0})
+    assert d["flops"] == 7.0
+    assert d["bytes"] == 0.0 and d["output_bytes"] == 0.0
+    assert d["operand_bytes"] == {} and d["utilization"] == {}
+    # unknown keys are ignored, not misparsed as operand entries
+    d = normalize_cost_analysis({"bytes accessedout{}": 3.0,
+                                 "optimal_seconds": 1.0})
+    assert d["output_bytes"] == 3.0 and d["bytes"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# walked-HLO bytes vs the traffic model: the byte terms the calibration
+# plane fits against must be the bytes a compiled dot actually moves
+# ---------------------------------------------------------------------------
+
+def _dot_hlo(n: int, k: int, m: int) -> str:
+    return f"""
+HloModule t
+
+ENTRY %main (x: f16[{n},{k}], w: f16[{k},{m}]) -> f16[{n},{m}] {{
+  %x = f16[{n},{k}]{{1,0}} parameter(0)
+  %w = f16[{k},{m}]{{1,0}} parameter(1)
+  ROOT %dot = f16[{n},{m}]{{1,0}} dot(%x, %w), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+}}
+"""
+
+
+@pytest.mark.parametrize("arch", ["bert-base", "gemma2-9b"])
+def test_hlo_bytes_agree_with_traffic_phase_bytes(arch):
+    """``traffic.phase_bytes`` for the kqv and score phases must equal the
+    walked-HLO bytes of the dots those phases model (in + weights + out of
+    ``f16[N,D] @ f16[D,(1+2f)D]`` resp. the ``[D,D]`` out-proj), within a
+    pinned 2% — gemma2-9b covers the GQA-shrunk K/V path."""
+    from repro.config import get_config
+    from repro.core.traffic import (Workload, phase_bytes,
+                                    transformer_phases)
+
+    N = 64
+    w = Workload.from_config(get_config(arch), seq_len=N)
+    D = w.d_model
+    fused = round((1 + 2 * w.n_kv_heads / w.n_heads) * D)
+    phases = {p.name: p for p in transformer_phases(w)}
+
+    for name, (k_dim, n_dim) in (("kqv", (D, fused)), ("score", (D, D))):
+        walked = analyze_hlo_text(_dot_hlo(N, k_dim, n_dim)).bytes_hbm
+        # the score phase's QK^T/softmax/.V ride on SM-local buffers; its
+        # byte fields are exactly the out-projection dot
+        modeled = phase_bytes(phases[name])
+        assert walked > 0
+        assert abs(walked - modeled) <= 0.02 * modeled, \
+            f"{arch}/{name}: HLO walks {walked:.0f}B, traffic models " \
+            f"{modeled:.0f}B"
